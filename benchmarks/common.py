@@ -1,0 +1,68 @@
+"""Shared infrastructure for the figure-reproduction benchmarks.
+
+All benchmarks run on the paper's Table-I NPU model with the paper's
+8-DNN suite and methodology (§III): N tasks sampled uniformly over the
+suite, uniform-random dispatch, priorities ∈ {1,3,9}, batch ∈ {1,4,16},
+averaged over ``N_RUNS`` workloads per configuration.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import metrics, trace
+from repro.core.predictor import Predictor
+from repro.core.scheduler import make_policy
+from repro.core.simulator import NPUSimulator, SimConfig
+from repro.hw import PAPER_NPU
+
+N_RUNS = 25
+N_TASKS = 8
+
+_predictor: Optional[Predictor] = None
+
+
+def predictor() -> Predictor:
+    global _predictor
+    if _predictor is None:
+        _predictor = Predictor(PAPER_NPU)
+        trace.build_regressors(_predictor, np.random.default_rng(1234))
+    return _predictor
+
+
+def workloads(n_runs: int = N_RUNS, n_tasks: int = N_TASKS):
+    pred = predictor()
+    return [trace.make_workload(pred, np.random.default_rng(1000 + s),
+                                n_tasks=n_tasks)
+            for s in range(n_runs)]
+
+
+def run_policy(tasks, policy: str, preemptive: bool, mechanism: str):
+    sim = NPUSimulator(PAPER_NPU, make_policy(policy, preemptive),
+                       SimConfig(mechanism=mechanism))
+    return sim.run(trace.clone_tasks(tasks))
+
+
+def sweep(configs: List[Tuple[str, str, bool, str]],
+          n_runs: int = N_RUNS) -> Dict[str, Dict[str, float]]:
+    """configs: (label, policy, preemptive, mechanism).  Returns label →
+    averaged metric dict (plus wall-clock us per simulation)."""
+    ws = workloads(n_runs)
+    out = {}
+    for label, pol, prem, mech in configs:
+        runs, t0 = [], time.perf_counter()
+        for tasks in ws:
+            runs.append(metrics.summarize(run_policy(tasks, pol, prem, mech)))
+        wall = (time.perf_counter() - t0) / len(ws) * 1e6
+        agg = metrics.aggregate(runs)
+        agg["us_per_call"] = wall
+        out[label] = agg
+    return out
+
+
+def emit(rows: List[Tuple[str, float, str]]):
+    """Print the ``name,us_per_call,derived`` CSV contract."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

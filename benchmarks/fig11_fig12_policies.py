@@ -1,0 +1,39 @@
+"""Fig 11 (non-preemptive policies) + Fig 12 (preemptive, static vs dynamic
+mechanism selection).  All numbers normalized to NP-FCFS, as in the paper.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks import common
+
+
+def run() -> List:
+    t0 = time.perf_counter()
+    res = common.sweep([
+        ("fcfs", "fcfs", False, "drain"),
+        ("rrb", "rrb", False, "drain"),
+        ("hpf", "hpf", False, "drain"),
+        ("token", "token", False, "drain"),
+        ("sjf", "sjf", False, "drain"),
+        ("prema", "prema", False, "drain"),
+        ("hpf_p_static", "hpf", True, "checkpoint"),
+        ("token_p_static", "token", True, "checkpoint"),
+        ("sjf_p_static", "sjf", True, "checkpoint"),
+        ("prema_p_static", "prema", True, "checkpoint"),
+        ("hpf_p_dyn", "hpf", True, "dynamic"),
+        ("token_p_dyn", "token", True, "dynamic"),
+        ("sjf_p_dyn", "sjf", True, "dynamic"),
+        ("prema_p_dyn", "prema", True, "dynamic"),
+    ])
+    base = res["fcfs"]
+    rows = []
+    for label, m in res.items():
+        fig = "fig11" if "_p_" not in label else "fig12"
+        rows.append((f"{fig}.{label}", m["us_per_call"],
+                     f"antt_x={base['antt']/m['antt']:.2f};"
+                     f"fairness_x={m['fairness']/base['fairness']:.2f};"
+                     f"stp_x={m['stp']/base['stp']:.2f}"))
+    _ = time.perf_counter() - t0
+    return rows

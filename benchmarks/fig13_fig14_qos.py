@@ -1,0 +1,52 @@
+"""Fig 13 (SLA violation rate vs target N) + Fig 14 (95%-ile tail latency
+of high-priority tasks, batch size 1)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import metrics, trace
+from repro.hw import PAPER_NPU
+
+
+def run() -> List:
+    t0 = time.perf_counter()
+    res = common.sweep([
+        ("fcfs", "fcfs", False, "drain"),
+        ("sjf_p", "sjf", True, "dynamic"),
+        ("prema_p", "prema", True, "dynamic"),
+    ])
+    rows = []
+    for label, m in res.items():
+        sla = ";".join(f"N{n}={m[f'sla_viol@{n}']:.3f}"
+                       for n in (2, 4, 8, 12, 16, 20))
+        rows.append((f"fig13.sla_violation.{label}", m["us_per_call"], sla))
+
+    # Fig 14: single-batch workloads, tail of high-priority NTT
+    pred = common.predictor()
+    tails = {"fcfs": [], "sjf_p": [], "prema_p": []}
+    for s in range(common.N_RUNS):
+        rng = np.random.default_rng(3000 + s)
+        tasks = [trace.make_task(i, str(rng.choice(
+            ("CNN-AN", "CNN-GN", "CNN-VN", "CNN-MN", "RNN-SA", "RNN-MT1",
+             "RNN-MT2", "RNN-ASR"))), pred, rng,
+            arrival=0.0, batch=1) for i in range(common.N_TASKS)]
+        total = sum(t.isolated_time for t in tasks)
+        for t in tasks:
+            t.arrival = float(rng.uniform(0, 0.5 * total))
+            t.last_wake = t.arrival
+        for label, pol, prem, mech in [("fcfs", "fcfs", False, "drain"),
+                                       ("sjf_p", "sjf", True, "dynamic"),
+                                       ("prema_p", "prema", True, "dynamic")]:
+            done = common.run_policy(tasks, pol, prem, mech)
+            v = metrics.tail_latency_ratio(done)
+            if np.isfinite(v):
+                tails[label].append(v)
+    for label, vals in tails.items():
+        rows.append((f"fig14.tail95_high_priority.{label}", 0.0,
+                     f"x_isolated={np.mean(vals):.2f};max={np.max(vals):.2f}"))
+    _ = time.perf_counter() - t0
+    return rows

@@ -1,0 +1,36 @@
+"""Fig 15: CHECKPOINT vs KILL sensitivity across preemptive policies."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks import common
+
+
+def run() -> List:
+    res = common.sweep([
+        ("fcfs", "fcfs", False, "drain"),
+        ("hpf_ckpt", "hpf", True, "checkpoint"),
+        ("hpf_kill", "hpf", True, "kill"),
+        ("token_ckpt", "token", True, "checkpoint"),
+        ("token_kill", "token", True, "kill"),
+        ("sjf_ckpt", "sjf", True, "checkpoint"),
+        ("sjf_kill", "sjf", True, "kill"),
+        ("prema_ckpt", "prema", True, "checkpoint"),
+        ("prema_kill", "prema", True, "kill"),
+    ])
+    base = res["fcfs"]
+    rows = []
+    for label, m in res.items():
+        if label == "fcfs":
+            continue
+        rows.append((f"fig15.{label}", m["us_per_call"],
+                     f"antt_x={base['antt']/m['antt']:.2f};"
+                     f"fairness_x={m['fairness']/base['fairness']:.2f};"
+                     f"stp_x={m['stp']/base['stp']:.2f}"))
+    # aggregate checkpoint-vs-kill ratios (paper: ckpt wins on STP)
+    for met in ("antt", "stp", "fairness"):
+        c = sum(res[f"{p}_ckpt"][met] for p in ("hpf", "token", "sjf", "prema"))
+        k = sum(res[f"{p}_kill"][met] for p in ("hpf", "token", "sjf", "prema"))
+        better = c / k if met != "antt" else k / c
+        rows.append((f"fig15.ckpt_over_kill.{met}", 0.0, f"{better:.3f}"))
+    return rows

@@ -1,0 +1,76 @@
+"""Fig 5 + Fig 6: effect of the preemption mechanism in isolation.
+
+Methodology (§IV-D): two-task workloads where a low-priority task runs and
+a high-priority task preempts it at a uniform-random point, under P-HPF;
+CHECKPOINT / KILL / DRAIN compared on (a) preemption latency, (b) the
+preempting task's wait time, (c) STP and (d) preempting-task NTT
+improvement over NP-FCFS, as a function of the preempted/preempting model
+and batch size.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common
+from repro.configs import paper_workloads as pw
+from repro.core import metrics, trace
+from repro.core.preemption import checkpoint_latency
+from repro.core.scheduler import make_policy
+from repro.core.simulator import NPUSimulator, SimConfig
+from repro.hw import PAPER_NPU
+
+
+def _two_task_runs(mechanism: str, n_runs: int = 60):
+    pred = common.predictor()
+    rows = []
+    for s in range(n_runs):
+        rng = np.random.default_rng(2000 + s)
+        lo_model = str(rng.choice(pw.WORKLOAD_NAMES))
+        hi_model = str(rng.choice(pw.WORKLOAD_NAMES))
+        lo = trace.make_task(0, lo_model, pred, rng, arrival=0.0, priority=1)
+        # preemption point uniform over the low task's execution
+        t_pre = float(rng.uniform(0.05, 0.95)) * lo.isolated_time
+        hi = trace.make_task(1, hi_model, pred, rng, arrival=t_pre,
+                             priority=9)
+        done = NPUSimulator(
+            PAPER_NPU, make_policy("hpf", preemptive=True),
+            SimConfig(mechanism=mechanism)).run([lo, hi])
+        lo_d = next(t for t in done if t.tid == 0)
+        hi_d = next(t for t in done if t.tid == 1)
+        # NP-FCFS reference for the same pair
+        lo2 = trace.clone_tasks([lo, hi])
+        ref = NPUSimulator(PAPER_NPU, make_policy("fcfs", False),
+                           SimConfig(mechanism="drain")).run(lo2)
+        hi_ref = next(t for t in ref if t.tid == 1)
+        rows.append({
+            "preempted": lo_d.model, "preempting": hi_d.model,
+            "batch": hi_d.batch,
+            "preempt_latency": lo_d.checkpoint_overhead / max(
+                lo_d.n_preemptions + lo_d.n_kills, 1),
+            "wait": (hi_d.first_service or hi_d.arrival) - hi_d.arrival,
+            "stp": metrics.stp(done),
+            "ntt_impr": hi_ref.ntt / hi_d.ntt,
+        })
+    return rows
+
+
+def run() -> List:
+    out = []
+    t0 = time.perf_counter()
+    for mech in ("checkpoint", "kill", "drain"):
+        rows = _two_task_runs(mech)
+        lat = np.mean([r["preempt_latency"] for r in rows])
+        wait = np.mean([r["wait"] for r in rows])
+        stp = np.mean([r["stp"] for r in rows])
+        ntt = np.mean([r["ntt_impr"] for r in rows])
+        out.append((f"fig5.preempt_latency_us.{mech}", 0.0,
+                    f"{lat*1e6:.2f}"))
+        out.append((f"fig5.wait_ms.{mech}", 0.0, f"{wait*1e3:.3f}"))
+        out.append((f"fig6.stp.{mech}", 0.0, f"{stp:.3f}"))
+        out.append((f"fig6.ntt_improvement.{mech}", 0.0, f"{ntt:.2f}"))
+    us = (time.perf_counter() - t0) * 1e6 / 3
+    return [(n, us if i % 4 == 0 else 0.0, d)
+            for i, (n, _, d) in enumerate(out)]

@@ -1,0 +1,55 @@
+"""§VI-A / §VI-D: prediction-model accuracy and PREMA-vs-oracle gap.
+
+The oracle scheduler sees each task's *actual* execution time; PREMA sees
+only the Algorithm-1 + LUT prediction.  The paper reports 98% correlation
+and 99% of oracle STP/ANTT/SLA.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks import common
+from repro.configs import paper_workloads as pw
+from repro.core import metrics, trace
+from repro.core.scheduler import make_policy
+from repro.core.simulator import NPUSimulator, SimConfig
+from repro.hw import PAPER_NPU
+
+
+def run() -> List:
+    pred = common.predictor()
+    rng = np.random.default_rng(99)
+    preds, actuals = [], []
+    for i in range(500):
+        name = str(rng.choice(pw.WORKLOAD_NAMES))
+        t = trace.make_task(i, name, pred, rng, arrival=0.0)
+        preds.append(t.predicted_total)
+        actuals.append(t.isolated_time)
+    corr = float(np.corrcoef(preds, actuals)[0, 1])
+    mape = float(np.mean(np.abs(np.array(preds) - np.array(actuals))
+                         / np.array(actuals)))
+
+    # oracle: same workloads, predicted_total := actual
+    ws = common.workloads()
+    m_pred, m_oracle = [], []
+    for tasks in ws:
+        m_pred.append(metrics.summarize(
+            common.run_policy(tasks, "prema", True, "dynamic")))
+        oracle_tasks = trace.clone_tasks(tasks)
+        for t in oracle_tasks:
+            t.predicted_total = t.isolated_time
+        sim = NPUSimulator(PAPER_NPU, make_policy("prema", True),
+                           SimConfig(mechanism="dynamic"))
+        m_oracle.append(metrics.summarize(sim.run(oracle_tasks)))
+    p = metrics.aggregate(m_pred)
+    o = metrics.aggregate(m_oracle)
+    return [
+        ("pred.correlation", 0.0, f"{corr:.4f}"),
+        ("pred.mean_abs_pct_error", 0.0, f"{mape*100:.2f}%"),
+        ("pred.stp_of_oracle", 0.0, f"{p['stp']/o['stp']:.4f}"),
+        ("pred.antt_of_oracle", 0.0, f"{o['antt']/p['antt']:.4f}"),
+        ("pred.sla4_of_oracle", 0.0,
+         f"{(1-p['sla_viol@4'])/max(1e-9, 1-o['sla_viol@4']):.4f}"),
+    ]

@@ -1,0 +1,57 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun.json.
+
+    PYTHONPATH=src:. python -m benchmarks.report [dryrun.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.roofline import roofline_terms
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def main(path="results/dryrun.json"):
+    with open(path) as f:
+        data = json.load(f)
+
+    print("### §Dry-run — per-cell compile results\n")
+    print("| arch | shape | mesh | chips | flops/dev | coll GB/dev | "
+          "arg GiB | temp GiB | fits |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(data):
+        c = data[key]
+        if c["status"] == "skipped":
+            continue
+        if c["status"] == "error":
+            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | - | ERROR "
+                  f"| | | | |")
+            continue
+        m = c["memory"]
+        print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['n_chips']} "
+              f"| {c['flops_per_device']:.2e} "
+              f"| {c['collective_bytes_per_device']/1e9:.1f} "
+              f"| {fmt_bytes(m['argument'])} | {fmt_bytes(m['temp'])} "
+              f"| {'Y' if c['fits_hbm'] else 'N'} |")
+
+    print("\n### §Roofline — single-pod (16x16, 256 chips)\n")
+    print("| arch | shape | compute ms | memory ms | collective ms | "
+          "dominant | MODEL/HLO flops | MFU bound |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(data):
+        c = data[key]
+        if c.get("status") != "ok" or c["mesh"] != "single":
+            continue
+        r = roofline_terms(c)
+        print(f"| {c['arch']} | {c['shape']} | {r['compute_s']*1e3:.2f} "
+              f"| {r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} "
+              f"| **{r['dominant']}** | {r['model_flops_ratio']:.2f} "
+              f"| {r['mfu']*100:.1f}% |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,76 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from the
+dry-run's compiled artifacts (results/dryrun.json).
+
+    compute term    = flops / (chips x 197 TFLOP/s bf16)
+    memory term     = bytes / (chips x 819 GB/s HBM)
+    collective term = collective bytes / (chips x 4 links x 50 GB/s)
+
+flops/collective bytes are the trip-count-corrected per-device numbers
+(launch/hlo_analysis.py); the memory term uses XLA 'bytes accessed'
+(per-device, loop bodies counted once) *plus* a floor of
+(argument+output bytes) — weights/caches are read at least once.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.hw import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+ICI_LINKS = 4
+DRYRUN_JSON = os.environ.get("DRYRUN_JSON", "results/dryrun.json")
+
+
+def roofline_terms(cell: Dict) -> Dict[str, float]:
+    flops = cell["flops_per_device"]
+    mem = cell["memory"]
+    bytes_dev = max(cell["bytes_per_device_raw"],
+                    mem["argument"] + mem["output"])
+    coll = cell["collective_bytes_per_device"]
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = bytes_dev / HBM_BW
+    t_x = coll / (ICI_LINKS * ICI_BW_PER_LINK)
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    total = max(t_c, t_m, t_x)
+    n = cell["n_chips"]
+    mf = cell.get("model_flops_global", 0.0) / n
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom[1],
+        "step_s": total,
+        "roofline_frac": (t_c / total) if total > 0 else 0.0,
+        "model_flops_ratio": (mf / flops) if flops else 0.0,
+        "mfu": (mf / total / PEAK_FLOPS_BF16) if total > 0 else 0.0,
+    }
+
+
+def load(path: str = DRYRUN_JSON) -> Dict[str, Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(path: str = DRYRUN_JSON, mesh: str = "single") -> List[Dict]:
+    rows = []
+    for key, cell in sorted(load(path).items()):
+        if cell.get("status") != "ok" or cell["mesh"] != mesh:
+            continue
+        r = {"arch": cell["arch"], "shape": cell["shape"], **roofline_terms(cell)}
+        rows.append(r)
+    return rows
+
+
+def run() -> List:
+    out = []
+    try:
+        rows = table()
+    except FileNotFoundError:
+        return [("roofline.missing", 0.0, "run repro.launch.dryrun first")]
+    for r in rows:
+        out.append((
+            f"roofline.{r['arch']}.{r['shape']}", 0.0,
+            f"compute_ms={r['compute_s']*1e3:.2f};"
+            f"memory_ms={r['memory_s']*1e3:.2f};"
+            f"collective_ms={r['collective_s']*1e3:.2f};"
+            f"dominant={r['dominant']};mfu={r['mfu']*100:.1f}%"))
+    return out

@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Figures 5/6 (preemption
+mechanisms), 11/12 (scheduling policies, static vs dynamic mechanism),
+13/14 (SLA + tail latency), 15 (CHECKPOINT vs KILL), prediction accuracy
+vs oracle, plus the §Roofline table derived from the dry-run artifacts.
+"""
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (common, fig5_fig6_mechanisms,
+                            fig11_fig12_policies, fig13_fig14_qos,
+                            fig15_kill_sensitivity, pred_accuracy, roofline)
+    modules = [
+        ("fig5_fig6", fig5_fig6_mechanisms),
+        ("fig11_fig12", fig11_fig12_policies),
+        ("fig13_fig14", fig13_fig14_qos),
+        ("fig15", fig15_kill_sensitivity),
+        ("pred_accuracy", pred_accuracy),
+        ("roofline", roofline),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        if only and only not in name:
+            continue
+        t0 = time.perf_counter()
+        rows = mod.run()
+        wall = (time.perf_counter() - t0) * 1e6
+        common.emit(rows)
+        print(f"{name}.total,{wall:.0f},ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""PREMA core: predictor (Algorithm 1 + LUT), token scheduler (Algorithm 2),
+preemption mechanisms + dynamic selection (Algorithm 3), metrics, and the
+event-driven multi-task simulator."""
+from repro.core.metrics import antt, fairness, stp, summarize  # noqa: F401
+from repro.core.predictor import LengthRegressor, Predictor  # noqa: F401
+from repro.core.preemption import Mechanism, select_mechanism  # noqa: F401
+from repro.core.scheduler import POLICY_NAMES, make_policy  # noqa: F401
+from repro.core.simulator import NPUSimulator, SimConfig  # noqa: F401
+from repro.core.task import Task, TaskState  # noqa: F401

@@ -1,0 +1,63 @@
+"""Multi-program performance metrics (Eyerman & Eeckhout; paper Eq 1-2)."""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Sequence
+
+import numpy as np
+
+from repro.core.task import Task
+
+
+def antt(tasks: Sequence[Task]) -> float:
+    """Average normalized turnaround time (lower is better)."""
+    return float(np.mean([t.ntt for t in tasks]))
+
+
+def stp(tasks: Sequence[Task]) -> float:
+    """System throughput = sum of per-task progress rates (higher better)."""
+    return float(np.sum([1.0 / t.ntt for t in tasks]))
+
+
+def fairness(tasks: Sequence[Task]) -> float:
+    """Priority-weighted equal-progress metric (Eq 2): min_{i,j} PP_i/PP_j."""
+    prio_sum = float(np.sum([t.priority for t in tasks]))
+    pp = np.asarray([(1.0 / t.ntt) / (t.priority / prio_sum) for t in tasks])
+    return float(pp.min() / pp.max())
+
+
+def sla_violation_rate(tasks: Sequence[Task], n: float) -> float:
+    """Fraction of tasks with turnaround > n x isolated time (§VI-C)."""
+    v = [t.turnaround > n * t.isolated_time for t in tasks]
+    return float(np.mean(v))
+
+
+def tail_latency_ratio(tasks: Sequence[Task], priority: int = 9,
+                       pct: float = 95.0) -> float:
+    """``pct``-ile of NTT among tasks of the given priority (Fig 14)."""
+    sel = [t.ntt for t in tasks if t.priority == priority]
+    if not sel:
+        return float("nan")
+    return float(np.percentile(sel, pct))
+
+
+def summarize(tasks: Sequence[Task]) -> Dict[str, float]:
+    out = {
+        "antt": antt(tasks),
+        "stp": stp(tasks),
+        "fairness": fairness(tasks),
+        "tail95_high": tail_latency_ratio(tasks),
+        "n_tasks": float(len(tasks)),
+        "preemptions": float(np.sum([t.n_preemptions for t in tasks])),
+        "kills": float(np.sum([t.n_kills for t in tasks])),
+        "ckpt_overhead": float(np.sum([t.checkpoint_overhead for t in tasks])),
+    }
+    for n in (2, 4, 8, 12, 16, 20):
+        out[f"sla_viol@{n}"] = sla_violation_rate(tasks, n)
+    return out
+
+
+def aggregate(runs: Iterable[Dict[str, float]]) -> Dict[str, float]:
+    """Average metric dicts across simulation runs."""
+    runs = list(runs)
+    keys = runs[0].keys()
+    return {k: float(np.mean([r[k] for r in runs])) for k in keys}

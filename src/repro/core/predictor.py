@@ -1,0 +1,194 @@
+"""PREMA prediction model (paper §V-B).
+
+Two components, exactly as the paper structures them:
+
+1. **Node-level latency** — Algorithm 1: the architecture-aware analytical
+   model of a weight-stationary systolic array.  Per inner tile, the compute
+   phase ``C1 = (ACC + SH + 2*SW)/freq`` overlaps the memory phase
+   ``M1 = (SH*SW + SH*ACC)*bytes/BW`` of the *next* tile (double-buffering),
+   so each tile costs ``max(C1, M1)``; edge (outer) tiles in the streaming
+   dimension get their own ``max(C2, M2)`` term.  We use ceil on the m/k tile
+   counts so that layers smaller than the array still pay a full tile — this
+   reproduces the paper's Fig-10 underutilization behavior (e.g. depthwise
+   convs), which is why MAC-count proxies mislead.
+
+2. **Executed-node-count prediction** — CNN DAGs are static; seq2seq RNN /
+   LLM-decode lengths are input-dependent, so a profile-driven regression
+   LUT (:class:`LengthRegressor`, the paper's Fig-9 characterization graph)
+   maps the statically-known *input* length to the geometric mean of the
+   profiled *output* lengths.
+
+The same Algorithm-1 code serves the paper's Table-I NPU (figure
+reproduction) and the TPU-v5e hardware model (serving engine), via
+:class:`repro.hw.HardwareModel`.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.core.ops import GemmOp, NetworkDesc, NodeOp, VectorOp
+from repro.hw import HardwareModel
+
+# Columns of activations streamed per GEMM_OP (accumulator-queue depth).
+DEFAULT_ACC = 256
+
+
+# ==========================================================================
+# Algorithm 1 — node-level latency
+# ==========================================================================
+def gemm_time(op: GemmOp, hw: HardwareModel, acc: int = DEFAULT_ACC) -> float:
+    """Inference-time estimate of one lowered GEMM on ``hw`` (seconds)."""
+    sw, sh = hw.sa_rows, hw.sa_cols
+    n_mxu = hw.n_mxu
+    bpe = hw.bytes_per_elem
+    m, k, n = op.m, op.k, op.n
+
+    # inner tile: compute overlapped with next tile's loads (line 3-5)
+    c1 = (acc + sh + 2 * sw) / hw.freq_hz
+    m1 = (sh * sw + sh * acc) * bpe / hw.hbm_bw
+    t_inner = max(c1, m1)
+
+    # outer (edge) tile in the streaming dim (line 6-9)
+    n_rem = n - (n // acc) * acc
+    phi = 0 if n_rem == 0 else 1
+    c2 = (n_rem + sh + 2 * sw) / hw.freq_hz
+    m2 = (sh * sw + sh * n_rem) * bpe / hw.hbm_bw
+    t_outer = max(c2, m2)
+
+    tiles_m = max(1, math.ceil(m / sw))
+    tiles_k = max(1, math.ceil(k / sh))
+    t = tiles_m * tiles_k * ((n // acc) * t_inner + phi * t_outer)
+    # multiple MXUs process independent (m,k) tiles in parallel
+    return t * op.repeat / n_mxu
+
+
+def vector_time(op: VectorOp, hw: HardwareModel) -> float:
+    compute = op.elems / hw.peak_vector_flops * 2
+    mem = op.elems * hw.bytes_per_elem / hw.hbm_bw  # in-place (§IV-B)
+    return max(compute, mem)
+
+
+def node_time(op: NodeOp, hw: HardwareModel, acc: int = DEFAULT_ACC) -> float:
+    if isinstance(op, GemmOp):
+        return gemm_time(op, hw, acc)
+    if isinstance(op, VectorOp):
+        return vector_time(op, hw)
+    raise TypeError(op)
+
+
+def network_time(ops: Sequence[NodeOp], hw: HardwareModel,
+                 acc: int = DEFAULT_ACC) -> float:
+    return float(sum(node_time(op, hw, acc) for op in ops))
+
+
+def per_node_times(ops: Sequence[NodeOp], hw: HardwareModel,
+                   acc: int = DEFAULT_ACC) -> np.ndarray:
+    return np.asarray([node_time(op, hw, acc) for op in ops])
+
+
+def network_flops(ops: Sequence[NodeOp]) -> int:
+    return sum(op.flops for op in ops)
+
+
+# ==========================================================================
+# Output-length regression (profile-driven characterization graph, Fig 9)
+# ==========================================================================
+class LengthRegressor:
+    """Software LUT: input length → geometric mean of profiled output
+    lengths.  ``fit`` is paid once per model (paper §V-B observation 2)."""
+
+    def __init__(self):
+        self._table: Dict[int, float] = {}
+        self._keys: List[int] = []
+        self._samples: Dict[int, List[int]] = {}
+
+    def fit(self, pairs: Sequence[Tuple[int, int]]) -> "LengthRegressor":
+        buckets: Dict[int, List[int]] = {}
+        for in_len, out_len in pairs:
+            buckets.setdefault(int(in_len), []).append(max(1, int(out_len)))
+        self._samples = buckets
+        self._table = {
+            k: float(np.exp(np.mean(np.log(np.asarray(v, dtype=np.float64)))))
+            for k, v in buckets.items()}
+        self._keys = sorted(self._table)
+        return self
+
+    def predict(self, in_len: int) -> float:
+        if not self._keys:
+            raise RuntimeError("LengthRegressor not fitted")
+        if in_len in self._table:
+            return self._table[in_len]
+        # nearest-neighbour interpolation between profiled input lengths
+        i = bisect.bisect_left(self._keys, in_len)
+        if i == 0:
+            return self._table[self._keys[0]]
+        if i == len(self._keys):
+            return self._table[self._keys[-1]]
+        lo, hi = self._keys[i - 1], self._keys[i]
+        tl, th = self._table[lo], self._table[hi]
+        w = (in_len - lo) / (hi - lo)
+        return tl * (1 - w) + th * w
+
+    def sample_actual(self, in_len: int, rng: np.random.Generator) -> int:
+        """Draw an *actual* output length for simulation: a uniformly random
+        member of the profiled set for this input length (paper §VI)."""
+        if in_len in self._samples:
+            return int(rng.choice(self._samples[in_len]))
+        return max(1, int(round(self.predict(in_len))))
+
+    @property
+    def input_lengths(self) -> List[int]:
+        return list(self._keys)
+
+
+# ==========================================================================
+# Task-level prediction
+# ==========================================================================
+@dataclasses.dataclass
+class Prediction:
+    total_time: float
+    node_times: np.ndarray          # per executed node (predicted unroll)
+    n_static: int
+    unroll: int
+
+
+class Predictor:
+    """Network-wide inference-time prediction (Algorithm 1 + LUT)."""
+
+    def __init__(self, hw: HardwareModel, acc: int = DEFAULT_ACC):
+        self.hw = hw
+        self.acc = acc
+        self._regressors: Dict[str, LengthRegressor] = {}
+
+    def register_regressor(self, model_name: str, reg: LengthRegressor):
+        self._regressors[model_name] = reg
+
+    def regressor(self, model_name: str) -> Optional[LengthRegressor]:
+        return self._regressors.get(model_name)
+
+    def predict_unroll(self, net: NetworkDesc, in_len: Optional[int]) -> int:
+        if not net.recurrent_ops:
+            return 0
+        if net.kind == "rnn_linear":
+            # linear RNNs: output length statically determined by input
+            return int(in_len)
+        reg = self._regressors.get(net.name)
+        if reg is None or in_len is None:
+            raise RuntimeError(
+                f"{net.name}: seq2seq network needs a fitted LengthRegressor")
+        return max(1, int(round(reg.predict(in_len))))
+
+    def predict(self, net: NetworkDesc, in_len: Optional[int] = None,
+                unroll_override: Optional[int] = None) -> Prediction:
+        unroll = (unroll_override if unroll_override is not None
+                  else self.predict_unroll(net, in_len))
+        ops = net.ops(in_len or 0, unroll)
+        times = per_node_times(ops, self.hw, self.acc)
+        return Prediction(total_time=float(times.sum()), node_times=times,
+                          n_static=len(net.static_ops), unroll=unroll)

@@ -1,0 +1,181 @@
+"""Scheduling policies (paper §V-C plus all evaluated baselines).
+
+Policies answer one question at each scheduler wake-up: *which task should
+occupy the NPU now?*  Preemption mechanics (how a switch happens) live in
+``preemption.py``; the simulator/engine applies them.
+
+Implemented policies (paper Figures 11/12):
+
+=========  ==========  ===========  ==============================
+name       predictor?  preemptive?  selection rule
+=========  ==========  ===========  ==============================
+fcfs       no          optional     earliest arrival
+rrb        no          optional     round-robin on quantum
+hpf        no          optional     highest priority, FCFS tiebreak
+sjf        yes         optional     shortest predicted remaining
+token      yes         optional     token candidates, FCFS among them
+prema      yes         optional     token candidates, shortest job
+=========  ==========  ===========  ==============================
+
+PREMA token mechanics (Algorithm 2): tokens are seeded with the
+user-defined priority (1/3/9), accrue each scheduling period by
+``priority × slowdown_normalized`` (idle time since the last wake,
+normalized by the task's predicted isolated time), and the candidate
+threshold is the *max token count in the queue rounded down* to the nearest
+priority level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.core.task import PRIORITY_LEVELS, Task
+
+SCHED_QUANTUM = 0.25e-3      # scheduling period time-quota (Table II)
+TOKEN_LEVELS = PRIORITY_LEVELS
+
+
+def accrue_tokens(ready: Sequence[Task], now: float) -> None:
+    """Algorithm 2 line 7, applied at every scheduler wake-up."""
+    for t in ready:
+        idle = max(0.0, now - t.last_wake)
+        slowdown_norm = idle / max(t.predicted_total, 1e-9)
+        t.tokens += t.priority * slowdown_norm
+        t.last_wake = now
+
+
+def token_threshold(ready: Sequence[Task]) -> float:
+    """Max token count rounded *down* to the closest priority level
+    (paper example: max=8 → threshold 3)."""
+    mx = max(t.tokens for t in ready)
+    thr = TOKEN_LEVELS[0]
+    for lvl in TOKEN_LEVELS:
+        if mx >= lvl:
+            thr = lvl
+    return float(thr)
+
+
+@dataclasses.dataclass
+class Policy:
+    """Base policy.  ``preemptive`` controls whether the simulator may
+    switch away from a running task at wake-ups."""
+    name: str = "base"
+    preemptive: bool = False
+    uses_predictor: bool = False
+
+    def select(self, ready: List[Task], now: float,
+               running: Optional[Task]) -> Optional[Task]:
+        raise NotImplementedError
+
+    def on_wake(self, ready: List[Task], now: float) -> None:
+        """Per-wake bookkeeping (token accrual for token policies)."""
+
+
+class FCFS(Policy):
+    def __init__(self, preemptive: bool = False):
+        super().__init__(name="fcfs", preemptive=preemptive)
+
+    def select(self, ready, now, running):
+        return min(ready, key=lambda t: (t.arrival, t.tid)) if ready else None
+
+
+class RoundRobin(Policy):
+    """Cycle through ready tasks on each quantum."""
+
+    def __init__(self, preemptive: bool = False):
+        super().__init__(name="rrb", preemptive=preemptive)
+        self._last_tid: int = -1
+
+    def select(self, ready, now, running):
+        if not ready:
+            return None
+        order = sorted(ready, key=lambda t: t.tid)
+        for t in order:
+            if t.tid > self._last_tid:
+                self._last_tid = t.tid
+                return t
+        self._last_tid = order[0].tid
+        return order[0]
+
+
+class HPF(Policy):
+    """Highest (user-defined) priority first."""
+
+    def __init__(self, preemptive: bool = False):
+        super().__init__(name="hpf", preemptive=preemptive)
+
+    def select(self, ready, now, running):
+        if not ready:
+            return None
+        return min(ready, key=lambda t: (-t.priority, t.arrival, t.tid))
+
+
+class SJF(Policy):
+    """Shortest (predicted) remaining job first — latency-optimal,
+    priority-unaware."""
+
+    def __init__(self, preemptive: bool = False):
+        super().__init__(name="sjf", preemptive=preemptive,
+                         uses_predictor=True)
+
+    def select(self, ready, now, running):
+        if not ready:
+            return None
+        return min(ready, key=lambda t: (t.predicted_remaining, t.tid))
+
+
+class TokenFCFS(Policy):
+    """Token-based candidate filtering, naive FCFS among candidates
+    (paper's TOKEN baseline)."""
+
+    def __init__(self, preemptive: bool = False):
+        super().__init__(name="token", preemptive=preemptive,
+                         uses_predictor=True)
+
+    def on_wake(self, ready, now):
+        accrue_tokens(ready, now)
+
+    def select(self, ready, now, running):
+        if not ready:
+            return None
+        thr = token_threshold(ready)
+        cands = [t for t in ready if t.tokens >= thr]
+        return min(cands, key=lambda t: (t.arrival, t.tid))
+
+
+class PREMA(Policy):
+    """Algorithm 2: token candidates + shortest-estimated-job selection."""
+
+    def __init__(self, preemptive: bool = True):
+        super().__init__(name="prema", preemptive=preemptive,
+                         uses_predictor=True)
+
+    def on_wake(self, ready, now):
+        accrue_tokens(ready, now)
+
+    def select(self, ready, now, running):
+        if not ready:
+            return None
+        thr = token_threshold(ready)
+        cands = [t for t in ready if t.tokens >= thr]
+        return min(cands, key=lambda t: (t.predicted_remaining, t.tid))
+
+
+def make_policy(name: str, preemptive: bool = False) -> Policy:
+    name = name.lower()
+    if name == "fcfs":
+        return FCFS(preemptive)
+    if name == "rrb":
+        return RoundRobin(preemptive)
+    if name == "hpf":
+        return HPF(preemptive)
+    if name == "sjf":
+        return SJF(preemptive)
+    if name == "token":
+        return TokenFCFS(preemptive)
+    if name == "prema":
+        return PREMA(preemptive)
+    raise KeyError(f"unknown policy {name!r}")
+
+
+POLICY_NAMES = ("fcfs", "rrb", "hpf", "sjf", "token", "prema")

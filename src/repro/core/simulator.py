@@ -1,0 +1,260 @@
+"""Event-driven multi-task NPU simulator (the paper's evaluation vehicle).
+
+The simulator advances a virtual clock over three event kinds — task
+arrival, task completion, and the scheduling-period quantum (Table II,
+0.25 ms) — and at every wake-up lets the policy pick the next task and the
+preemption machinery carry out the switch:
+
+* switches pay the CHECKPOINT spill latency (context bytes / memory BW) and
+  a restore latency when the preempted task resumes;
+* KILL switches are instantaneous but reset the victim's progress;
+* DRAIN lets the running task finish first;
+* preemption points are tile boundaries: the requested preemption time is
+  rounded up to the end of the current GEMM_OP tile (µs-scale, modeled via
+  per-node tile times when available).
+
+The same Task/policy/mechanism objects are shared with the real serving
+engine (serving/engine.py); only the executor differs (virtual clock here,
+real JAX execution there).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import preemption
+from repro.core.preemption import Mechanism
+from repro.core.scheduler import SCHED_QUANTUM, Policy
+from repro.core.task import Task, TaskState
+from repro.hw import HardwareModel
+
+
+def should_preempt(policy: Policy, running: Task, cand: Task,
+                   dynamic_mech: bool) -> bool:
+    """Whether ``cand`` may displace ``running`` under ``policy``."""
+    name = policy.name
+    if name == "fcfs":
+        return cand.arrival < running.arrival
+    if name == "rrb":
+        return True
+    if name == "hpf":
+        return cand.priority > running.priority
+    if name == "sjf":
+        return cand.predicted_remaining < running.predicted_remaining
+    if name == "token":
+        return cand.tokens > running.tokens
+    if name == "prema":
+        if dynamic_mech:
+            return True  # Algorithm 3 arbitrates CHECKPOINT vs DRAIN
+        return cand.predicted_remaining < running.predicted_remaining
+    return False
+
+
+@dataclasses.dataclass
+class SimConfig:
+    mechanism: str = "dynamic"   # checkpoint | kill | drain | dynamic
+    quantum: float = SCHED_QUANTUM
+    log_events: bool = False
+    # Progress guarantee for KILL (anti-livelock; KILL is only a good
+    # trade-off "during the early phases of an inference execution" §IV-C):
+    # a task may be KILLed only in its early phase and at most max_kills
+    # times; afterwards preemption requests against it are deferred.
+    kill_early_frac: float = 0.5
+    max_kills: int = 4
+
+
+class NPUSimulator:
+    def __init__(self, hw: HardwareModel, policy: Policy,
+                 cfg: Optional[SimConfig] = None):
+        self.hw = hw
+        self.policy = policy
+        self.cfg = cfg or SimConfig()
+        self.log: List[Tuple[float, str, int]] = []
+
+    # ------------------------------------------------------------------
+    def run(self, tasks: Sequence[Task]) -> List[Task]:
+        hw, policy, cfg = self.hw, self.policy, self.cfg
+        counter = itertools.count()
+        events: List[Tuple[float, int, str, int, int]] = []
+
+        def push(t, kind, tid=-1, gen=0):
+            heapq.heappush(events, (t, next(counter), kind, tid, gen))
+
+        by_id: Dict[int, Task] = {t.tid: t for t in tasks}
+        for t in tasks:
+            t.state = TaskState.WAITING
+            push(t.arrival, "arrival", t.tid)
+
+        ready: List[Task] = []
+        running: Optional[Task] = None
+        run_start = 0.0          # when current execution segment began
+        run_gen = 0              # invalidates stale completion events
+        busy_until = 0.0         # switch-overhead window (non-preemptible)
+        next_quantum = None
+        n_done = 0
+
+        def log(t, kind, tid):
+            if cfg.log_events:
+                self.log.append((t, kind, tid))
+
+        def ensure_quantum(now):
+            nonlocal next_quantum
+            if next_quantum is None or next_quantum <= now:
+                next_quantum = now + cfg.quantum
+                push(next_quantum, "quantum")
+
+        def tile_roundup(task: Task, elapsed: float) -> float:
+            """Extra time to reach the next tile boundary (≥ elapsed)."""
+            tt = getattr(task, "node_tile_times", None)
+            if tt is None:
+                return 0.0
+            node = task.current_node()
+            if node >= task.total_nodes:
+                return 0.0
+            q = float(tt[node])
+            if q <= 0:
+                return 0.0
+            offset = (task.executed + elapsed) - float(task._cum[node])
+            rem = offset % q
+            return 0.0 if rem < 1e-12 else (q - rem)
+
+        def start(task: Task, now: float) -> float:
+            """Begin/resume execution; returns the execution start time
+            after any restore overhead."""
+            nonlocal running, run_start, run_gen, busy_until
+            t0 = now
+            if task.restore_pending:
+                lat = preemption.restore_latency(task, hw)
+                task.checkpoint_overhead += lat
+                task.restore_pending = False
+                t0 += lat
+            running = task
+            task.state = TaskState.RUNNING
+            if task.first_service is None:
+                task.first_service = t0
+            run_start = t0
+            run_gen += 1
+            busy_until = t0
+            push(t0 + task.remaining, "complete", task.tid, run_gen)
+            log(now, f"start", task.tid)
+            return t0
+
+        def preempt(now: float, mech: Mechanism) -> float:
+            """Stop the running task; returns when the NPU is free."""
+            nonlocal running, run_gen, busy_until
+            task = running
+            assert task is not None
+            elapsed = max(0.0, now - run_start)
+            free_at = now
+            if mech is Mechanism.KILL:
+                task.executed = 0.0
+                task.reset_progress()
+                task.n_kills += 1
+                task.state = TaskState.WAITING
+            else:  # CHECKPOINT
+                extra = tile_roundup(task, elapsed)
+                task.executed += elapsed + extra
+                lat = preemption.checkpoint_latency(task, hw)
+                task.checkpoint_overhead += lat
+                task.restore_pending = True
+                task.n_preemptions += 1
+                task.state = TaskState.PREEMPTED
+                free_at = now + extra + lat
+            ready.append(task)
+            task.last_wake = now
+            running = None
+            run_gen += 1
+            busy_until = free_at
+            log(now, f"preempt-{mech.value}", task.tid)
+            return free_at
+
+        def sync_running(now: float):
+            """Fold elapsed run time into Time_executed so policy decisions
+            see fresh remaining-time estimates (completion time invariant)."""
+            nonlocal run_start
+            if running is not None and now > run_start:
+                running.executed += now - run_start
+                run_start = now
+
+        def schedule(now: float):
+            """The two-step procedure (§V-C): pick candidate, then apply a
+            mechanism appropriate for the context."""
+            nonlocal running
+            if not ready:
+                return
+            sync_running(now)
+            policy.on_wake(ready, now)
+            cand = policy.select(ready, now, running)
+            if cand is None:
+                return
+            if running is None:
+                if now >= busy_until:
+                    ready.remove(cand)
+                    start(cand, max(now, busy_until))
+                else:
+                    push(busy_until, "quantum")  # retry when NPU frees up
+                return
+            if not policy.preemptive or now < busy_until:
+                return
+            if cand is running:
+                return
+            dynamic = cfg.mechanism == "dynamic"
+            if not should_preempt(policy, running, cand, dynamic):
+                return
+            if dynamic:
+                mech = preemption.select_mechanism(running, cand)
+            else:
+                mech = Mechanism(cfg.mechanism)
+            if mech is Mechanism.DRAIN:
+                # let the running task finish; re-evaluated at every wake
+                log(now, "drain", running.tid)
+                return
+            if mech is Mechanism.KILL:
+                early = running.executed <= cfg.kill_early_frac * max(
+                    running.predicted_total, 1e-12)
+                if not early or running.n_kills >= cfg.max_kills:
+                    return  # progress guarantee: defer the preemption
+            free_at = preempt(now, mech)
+            ready.remove(cand)
+            start(cand, free_at)
+
+        # ---------------- main loop ----------------
+        while events:
+            now, _, kind, tid, gen = heapq.heappop(events)
+            if kind == "arrival":
+                task = by_id[tid]
+                ready.append(task)
+                task.last_wake = now
+                log(now, "arrival", tid)
+                schedule(now)
+                ensure_quantum(now)
+            elif kind == "complete":
+                if running is None or running.tid != tid or gen != run_gen:
+                    continue  # stale
+                task = running
+                task.executed = task.isolated_time
+                task.completion = now
+                task.state = TaskState.DONE
+                n_done += 1
+                running = None
+                log(now, "complete", tid)
+                schedule(now)
+                if ready:
+                    ensure_quantum(now)
+            elif kind == "quantum":
+                next_quantum = None
+                if ready or running is not None:
+                    schedule(now)
+                    if ready:
+                        ensure_quantum(now)
+            if n_done == len(by_id) and not events:
+                break
+
+        assert all(t.state == TaskState.DONE for t in by_id.values()), (
+            f"unfinished tasks: "
+            f"{[t.tid for t in by_id.values() if t.state != TaskState.DONE]}")
+        return list(by_id.values())

@@ -1,0 +1,103 @@
+"""Inference-task context (the paper's Fig-4 task context table)."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+PRIORITY_TOKENS = {"low": 1, "medium": 3, "high": 9}
+PRIORITY_LEVELS = (1, 3, 9)
+
+
+class TaskState(enum.Enum):
+    WAITING = "waiting"        # in ReadyQueue, never run or KILLed back
+    RUNNING = "running"
+    PREEMPTED = "preempted"    # checkpointed, in ReadyQueue
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Task:
+    """One inference request dispatched to the NPU scheduler.
+
+    Static fields mirror the paper's context table: TaskID, priority,
+    Time_estimated (predictor), Time_isolated; dynamic fields track tokens,
+    executed time and preemption state.
+    """
+    tid: int
+    model: str
+    priority: int                      # 1 / 3 / 9
+    arrival: float                     # seconds
+    batch: int
+    # per-node *actual* durations (actual unroll), seconds
+    node_times: np.ndarray
+    # per-node output-activation bytes (checkpoint state at each boundary)
+    node_out_bytes: np.ndarray
+    predicted_total: float             # Time_estimated (predictor, LUT unroll)
+    in_len: int = 0
+
+    # ---- dynamic scheduling state ----
+    state: TaskState = TaskState.WAITING
+    tokens: float = 0.0
+    executed: float = 0.0              # Time_executed (actual progress)
+    last_wake: float = 0.0             # last token-accrual timestamp
+    first_service: Optional[float] = None
+    completion: Optional[float] = None
+    n_preemptions: int = 0
+    n_kills: int = 0
+    checkpoint_overhead: float = 0.0   # total ckpt+restore seconds paid
+    restore_pending: bool = False      # must pay restore latency on resume
+
+    def __post_init__(self):
+        self.tokens = float(self.priority)
+        self.last_wake = self.arrival
+        self._cum = np.concatenate([[0.0], np.cumsum(self.node_times)])
+
+    # ---- static properties ----
+    @property
+    def isolated_time(self) -> float:
+        """C_single: uninterrupted execution time (actual)."""
+        return float(self._cum[-1])
+
+    @property
+    def total_nodes(self) -> int:
+        return len(self.node_times)
+
+    # ---- progress ----
+    @property
+    def remaining(self) -> float:
+        return max(0.0, self.isolated_time - self.executed)
+
+    @property
+    def predicted_remaining(self) -> float:
+        """Time_estimated - Time_executed (Algorithm 3 lines 1-2)."""
+        return max(0.0, self.predicted_total - self.executed)
+
+    def current_node(self) -> int:
+        """Index of the node containing the current progress point."""
+        return int(np.searchsorted(self._cum, self.executed, side="right") - 1)
+
+    def checkpoint_bytes(self, vmem_bytes: int) -> int:
+        """Live context state at the current boundary: the output
+        activations derived so far, bounded by on-chip UBUF/ACCQ capacity
+        (paper §IV-B)."""
+        node = min(self.current_node(), self.total_nodes - 1)
+        return int(min(self.node_out_bytes[node], vmem_bytes))
+
+    def reset_progress(self):
+        """KILL: all progress is lost (paper §IV-C)."""
+        self.executed = 0.0
+        self.restore_pending = False
+
+    # ---- metrics ----
+    @property
+    def turnaround(self) -> float:
+        assert self.completion is not None
+        return self.completion - self.arrival
+
+    @property
+    def ntt(self) -> float:
+        """Normalized turnaround time C_multi / C_single (Eq 1)."""
+        return self.turnaround / self.isolated_time

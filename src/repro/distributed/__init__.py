@@ -1,0 +1,2 @@
+from repro.distributed.context import hint, use_rules  # noqa: F401
+from repro.distributed import sharding  # noqa: F401

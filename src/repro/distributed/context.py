@@ -1,0 +1,86 @@
+"""Logical-axis sharding context.
+
+Model code annotates activations with *logical* axis names
+(``hint(x, 'batch', 'qseq', 'heads', None)``); a distributed context maps
+logical names to mesh axes per architecture and shape cell.  Outside a
+context every hint is a no-op, so the same model code runs single-device
+smoke tests and 512-chip dry-runs unchanged (MaxText-style logical axis
+rules, without a framework dependency).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+_tls = threading.local()
+
+
+def current() -> Optional["ShardCtx"]:
+    return getattr(_tls, "ctx", None)
+
+
+class ShardCtx:
+    def __init__(self, mesh: Mesh, rules: Dict[str, Axes]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def spec(self, *logical: Optional[str]) -> P:
+        axes = []
+        used = set()
+        for name in logical:
+            if name is None:
+                axes.append(None)
+                continue
+            mapped = self.rules.get(name)
+            if mapped is None:
+                axes.append(None)
+                continue
+            if isinstance(mapped, str):
+                mapped = (mapped,)
+            fresh = tuple(a for a in mapped if a not in used)
+            used.update(fresh)
+            axes.append(fresh if len(fresh) > 1 else
+                        (fresh[0] if fresh else None))
+        return P(*axes)
+
+    def sharding(self, *logical: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Dict[str, Axes]):
+    prev = current()
+    _tls.ctx = ShardCtx(mesh, rules)
+    try:
+        yield _tls.ctx
+    finally:
+        _tls.ctx = prev
+
+
+def hint(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint when a context is active (no-op
+    otherwise).  Logical dims that don't divide evenly fall back to
+    replicated for that dim."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = list(ctx.spec(*logical))
+    # divisibility guard per dim
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    for i, ax in enumerate(spec):
+        if ax is None:
+            continue
+        names = (ax,) if isinstance(ax, str) else ax
+        k = 1
+        for nm in names:
+            k *= sizes[nm]
+        if x.shape[i] % k != 0:
+            spec[i] = None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))

@@ -1,0 +1,80 @@
+"""Elastic scaling: reshard a training/serving state onto a different mesh.
+
+Checkpoints store unsharded host arrays (training/checkpoint.py), so
+elastic restart is: load → build the target mesh's shardings from the same
+rule set → ``device_put`` each leaf.  This module adds the in-memory
+variant (live resharding between meshes, e.g. shrinking from 512 to 256
+chips after a pod failure) and a planner that reports the per-device
+memory implications before committing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import ArchConfig, Shape
+from repro.distributed import sharding as shd
+
+
+@dataclasses.dataclass
+class ReshardPlan:
+    n_from: int
+    n_to: int
+    bytes_per_device_from: float
+    bytes_per_device_to: float
+    fits: bool
+
+    def __str__(self):
+        return (f"reshard {self.n_from}→{self.n_to} devices: "
+                f"{self.bytes_per_device_from/1e9:.2f} → "
+                f"{self.bytes_per_device_to/1e9:.2f} GB/device "
+                f"({'fits' if self.fits else 'DOES NOT FIT'})")
+
+
+def plan(state, cfg: ArchConfig, mesh_from, mesh_to,
+         hbm_bytes: int = 16 * 1024 ** 3) -> ReshardPlan:
+    """Estimate per-device bytes under both meshes (sharded leaf sizes)."""
+    def per_device(mesh):
+        specs = shd.param_specs(
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                         state["params"]), cfg, mesh)
+        total = 0.0
+        for leaf, spec in zip(jax.tree.leaves(state["params"]),
+                              jax.tree.leaves(
+                                  specs, is_leaf=lambda s: isinstance(
+                                      s, jax.sharding.PartitionSpec))):
+            shard = shd._size(mesh, tuple(
+                a for dim in spec if dim for a in
+                ((dim,) if isinstance(dim, str) else dim)))
+            total += leaf.size * leaf.dtype.itemsize / max(shard, 1)
+        # optimizer moments scale identically
+        mult = 1.0 + sum(
+            x.size for x in jax.tree.leaves(state.get("opt", {}))) / max(
+            1, sum(x.size for x in jax.tree.leaves(state["params"])))
+        return total * mult
+
+    b_from = per_device(mesh_from)
+    b_to = per_device(mesh_to)
+    return ReshardPlan(mesh_from.devices.size, mesh_to.devices.size,
+                       b_from, b_to, b_to <= hbm_bytes)
+
+
+def reshard(state, cfg: ArchConfig, mesh_to):
+    """Re-place every leaf onto the target mesh per the rule set.  Works
+    from live (sharded) arrays or host arrays (checkpoint load path)."""
+    p_spec = shd.param_specs(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                     state["params"]), cfg, mesh_to)
+    p_sh = shd.as_shardings(p_spec, mesh_to)
+    out = dict(state)
+    out["params"] = jax.tree.map(jax.device_put, state["params"], p_sh)
+    if "opt" in state and isinstance(state["opt"], dict):
+        opt = dict(state["opt"])
+        for k in ("m", "v", "err"):
+            if k in opt:
+                opt[k] = jax.tree.map(jax.device_put, opt[k], p_sh)
+        out["opt"] = opt
+    return out

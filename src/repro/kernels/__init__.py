@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+
+* ``preemptible_matmul`` — K-tile-resumable GEMM (the paper's GEMM_OP
+  preemption point; checkpoint = partial accumulator + tile index).
+* ``flash_attention``    — blockwise online-softmax prefill attention.
+* ``decode_attention``   — flash-decoding over long KV caches.
+"""

@@ -1,0 +1,96 @@
+"""Flash-decoding: single-token GQA attention over a long KV cache.
+
+One query token per (batch, head); the KV sequence is tiled over the
+innermost grid dimension with a running online-softmax state in VMEM, so
+arbitrarily long contexts stream through a fixed VMEM footprint —
+(bt, d)*2 KV tiles + (g, d) accumulator per step.
+
+The *entire query-head group* g = Hq/Hkv that shares one KV head is
+processed together: the q block is (g, d) and the score tile (g, bt), so
+each KV tile is read once per kv-head rather than once per q-head —
+the GQA bandwidth saving is realized structurally.
+
+``pos`` masking (number of valid cache entries) is passed as a scalar-
+prefetch operand so one compiled kernel serves every decode step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale: float, bt: int, g: int):
+    ki = pl.program_id(2)
+    last_k = pl.num_programs(2) - 1
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[0]
+    k_start = ki * bt
+    # live iff this tile contains any index <= pos
+    @pl.when(k_start <= pos)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)           # (g, d)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bt, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (g, bt), 1)
+        s = jnp.where(cols <= pos, s, NEG_INF)
+        m_prev = m_ref[...]                            # (g, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == last_k)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_raw(q: jax.Array, k: jax.Array, v: jax.Array,
+                         pos: jax.Array, bt: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B,Hkv,G,D) grouped query; k,v: (B,Hkv,T,D); pos: scalar int32 —
+    attend over cache[0..pos].  T % bt == 0.  Returns (B,Hkv,G,D)."""
+    b, hkv, g, d = q.shape
+    _, _, t, _ = k.shape
+    scale = d ** -0.5
+    grid = (b, hkv, t // bt)
+    kern = functools.partial(_decode_kernel, scale=scale, bt=bt, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bb, h, ki, pos_ref: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, bt, d), lambda bb, h, ki, pos_ref: (bb, h, ki, 0)),
+            pl.BlockSpec((1, 1, bt, d), lambda bb, h, ki, pos_ref: (bb, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bb, h, ki, pos_ref: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32).reshape(1), q, k, v)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for single-token decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         pos) -> jax.Array:
+    """q: (B,Hkv,G,D); k,v: (B,Hkv,T,D); attend over [0..pos]."""
+    b, hkv, g, d = q.shape
+    t = k.shape[2]
+    s = jnp.einsum("bhgd,bhtd->bhgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    valid = (jnp.arange(t) <= pos)[None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bhtd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (GQA, optional causal mask)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, pos: int | None = None) -> jax.Array:
+    """q: (B,Hq,S,D); k,v: (B,Hkv,T,D); pos: mask keys with index > pos."""
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, s, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgsd,bhtd->bhgst", qg, kf) * (d ** -0.5)
+    if causal:
+        rows = jnp.arange(s)[:, None]
+        cols = jnp.arange(t)[None, :]
+        scores = jnp.where(cols <= rows, scores, NEG_INF)
+    if pos is not None:
+        valid = (jnp.arange(t) <= pos)[None, None, None, None, :]
+        scores = jnp.where(valid, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", p, vf)
+    return out.reshape(b, hq, s, d).astype(q.dtype)

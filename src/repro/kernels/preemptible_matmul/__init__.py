@@ -1,0 +1,4 @@
+from repro.kernels.preemptible_matmul.ops import (  # noqa: F401
+    MatmulCheckpoint, advance, finish, matmul, start)
+from repro.kernels.preemptible_matmul.ref import (  # noqa: F401
+    matmul_partial_ref, matmul_ref)

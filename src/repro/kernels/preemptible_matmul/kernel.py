@@ -1,0 +1,73 @@
+"""Preemptible tiled matmul — the paper's GEMM_OP preemption point on the MXU.
+
+The kernel executes an explicit K-tile range ``[k_start, k_end)`` of the
+reduction, carrying a resident f32 accumulator (the ACCQ analogue) through
+the output ref.  A preemption checkpoint is therefore exactly
+``(accumulator, k_tile_index)``; resuming re-launches the kernel over the
+remaining K range with the checkpointed accumulator aliased in.
+
+Grid: ``(M/bm, N/bn, Kr/bk)`` with K innermost, so each (i,j) output tile
+completes its partial reduction before the next tile starts — matching the
+weight-stationary dataflow of Fig 3(b) (weights for one (i,l) tile stay
+latched while ACC columns stream).
+
+BlockSpec tiling targets VMEM: with the default 128x128x128 f32/bf16 blocks
+the working set is 3*128*128*4 B ≈ 192 KiB ≪ 16 MiB VMEM; block dims are
+multiples of the 128-lane MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, acc_ref, out_ref):
+    """One grid step: out[i,j] (+)= x[i,l] @ y[l,j].
+
+    ``acc_ref`` holds the checkpointed partial accumulator; it seeds
+    ``out_ref`` on the first K step of *this launch*.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _seed():
+        out_ref[...] = acc_ref[...]
+
+    out_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+
+def matmul_resumable_raw(x: jax.Array, y: jax.Array, acc: jax.Array,
+                         k_start: int, k_end: int,
+                         bm: int = 128, bn: int = 128, bk: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """Run K tiles [k_start, k_end) of ``x @ y``; returns the updated f32
+    accumulator.  Shapes must be multiples of the block sizes (ops.py pads).
+
+    ``k_start``/``k_end`` are *tile* indices (units of ``bk`` rows of y).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2 and acc.shape == (m, n)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    n_ktiles = k // bk
+    assert 0 <= k_start <= k_end <= n_ktiles
+    kr = k_end - k_start
+    if kr == 0:
+        return acc
+
+    grid = (m // bm, n // bn, kr)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l + k_start)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l + k_start, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        input_output_aliases={2: 0},     # acc buffer is updated in place
+        interpret=interpret,
+    )(x, y, acc)

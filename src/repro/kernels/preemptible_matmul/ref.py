@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the preemptible matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array, out_dtype=None) -> jax.Array:
+    out = jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
+def matmul_partial_ref(x: jax.Array, y: jax.Array, acc: jax.Array,
+                       k_start: int, k_end: int, bk: int = 128) -> jax.Array:
+    """Accumulate only reduction rows [k_start*bk, k_end*bk)."""
+    lo, hi = k_start * bk, k_end * bk
+    part = jnp.dot(x[:, lo:hi].astype(jnp.float32),
+                   y[lo:hi, :].astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    return acc + part

@@ -1,0 +1,265 @@
+"""Trip-count-aware analysis of compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits each while-loop body **once**,
+so any program built on ``lax.scan`` (layer stacks, KV-chunked attention,
+gradient accumulation) under-reports flops/bytes/collectives by the trip
+count.  This module re-derives the numbers from the compiled HLO text:
+
+1. parse computations and build a call graph (fusions, while bodies),
+2. extract each while loop's trip count from its condition's
+   ``compare(iter, constant(N), LT)`` pattern (how jax emits scans),
+3. propagate execution multipliers from ENTRY through the call graph,
+4. count dot flops (2 * result_elems * contraction_size) and collective
+   result bytes per computation, scaled by its multiplier.
+
+This feeds EXPERIMENTS.md §Roofline; cost_analysis raw values are kept as
+a cross-check column.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred|f8e4m3fn|f8e5m2|"
+    r"c64|c128)\[([0-9,]*)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    raw_operands: str
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+
+
+_COMP_NAME = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*?)\)(.*)$")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            s = line.rstrip()
+            # computation headers are unindented lines ending with '{'
+            if s.endswith("{") and "->" in s and not s.startswith(" "):
+                m = _COMP_NAME.match(s)
+                if m:
+                    cur = Computation(name=m.group(2), ops=[])
+                    if m.group(1):
+                        entry = m.group(2)
+            continue
+        s = line.strip()
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, rtype, opcode, operand_str, attrs = m.groups()
+            operands = [o.strip().lstrip("%")
+                        for o in re.findall(r"%[\w.\-]+", operand_str)]
+            cur.ops.append(Op(name, rtype.strip(), opcode, operands,
+                              operand_str, attrs))
+    return comps, entry or ""
+
+
+def _called_comps(op: Op) -> List[str]:
+    out = []
+    for key in ("calls=", "body=", "condition=", "to_apply=",
+                "branch_computations={"):
+        idx = op.attrs.find(key)
+        while idx != -1:
+            seg = op.attrs[idx:idx + 400]
+            out += re.findall(r"%([\w.\-]+)", seg.split("}")[0]
+                              if "{" in key else seg.split(",")[0])
+            idx = op.attrs.find(key, idx + 1)
+    return out
+
+
+def _while_trip_count(op: Op, comps: Dict[str, Computation]) -> int:
+    """jax scans lower to ``while`` whose condition compares the induction
+    var (starting at 0, step 1) against a positive constant with LT: the
+    largest positive integer constant reachable from the condition
+    computation is the trip count."""
+    m = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+    if not m or m.group(1) not in comps:
+        return 1
+    stack = [m.group(1)]
+    seen = set()
+    best = None
+    while stack:
+        cname = stack.pop()
+        if cname in seen or cname not in comps:
+            continue
+        seen.add(cname)
+        for o in comps[cname].ops:
+            if o.opcode == "constant":
+                mv = re.fullmatch(r"\s*(\-?\d+)\s*", o.raw_operands or "")
+                if mv:
+                    v = int(mv.group(1))
+                    if v > 0 and (best is None or v > best):
+                        best = v
+            stack.extend(_called_comps(o))
+    return best if best else 1
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str
+                 ) -> Dict[str, float]:
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # BFS propagate (call graph is a DAG in HLO)
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        cm = mult[cname]
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            called = _called_comps(op)
+            if not called:
+                continue
+            factor = cm
+            if op.opcode == "while":
+                factor = cm * _while_trip_count(op, comps)
+            for cc in called:
+                if cc not in comps:
+                    continue
+                mult[cc] += factor
+                if cc not in seen:
+                    seen.add(cc)
+                    order.append(cc)
+    return dict(mult)
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_elems = _type_elems(op.result_type)
+    m = re.search(r"lhs_contracting_dims={([0-9,]*)}", op.attrs)
+    if not m or not op.operands:
+        return 2.0 * out_elems  # fallback
+    lhs_type = shapes.get(op.operands[0])
+    if lhs_type is None:
+        return 2.0 * out_elems
+    dims = _first_shape_dims(lhs_type) or []
+    k = 1
+    for di in m.group(1).split(","):
+        if di != "" and int(di) < len(dims):
+            k *= dims[int(di)]
+    # batch dims are part of out_elems already
+    return 2.0 * out_elems * k
+
+
+_LABEL_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _label(op: Op) -> str:
+    m = _LABEL_RE.search(op.attrs)
+    if not m:
+        return "<unlabeled>"
+    # strip jit wrappers and indices: keep the tail 3 path segments
+    parts = [p for p in m.group(1).split("/") if p and not p.startswith("jit(")]
+    return "/".join(parts[-3:]) if parts else "<unlabeled>"
+
+
+def analyze(text: str, by_label: bool = False) -> Dict[str, object]:
+    """Trip-count-corrected per-device {flops, collective bytes by kind};
+    with ``by_label`` also returns flops/collective attribution keyed by
+    the source op_name metadata (a dry-run 'profile')."""
+    comps, entry = parse_module(text)
+    shapes: Dict[str, str] = {}
+    for c in comps.values():
+        for op in c.ops:
+            shapes[op.name] = op.result_type
+    mult = _multipliers(comps, entry)
+
+    flops = 0.0
+    coll = {k: 0.0 for k in COLLECTIVES}
+    n_coll = 0.0
+    flops_lbl: Dict[str, float] = defaultdict(float)
+    coll_lbl: Dict[str, float] = defaultdict(float)
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.opcode == "dot":
+                f = m * _dot_flops(op, shapes)
+                flops += f
+                if by_label:
+                    flops_lbl[_label(op)] += f
+            else:
+                base = op.opcode[:-6] if op.opcode.endswith("-start") \
+                    else op.opcode
+                if base in COLLECTIVES:
+                    b = m * _type_bytes(op.result_type)
+                    coll[base] += b
+                    n_coll += m
+                    if by_label:
+                        coll_lbl[_label(op)] += b
+    out: Dict[str, object] = {
+        "flops": flops, "collective_bytes": sum(coll.values()),
+        "n_collectives": n_coll}
+    for k, v in coll.items():
+        if v:
+            out[f"coll_{k}"] = v
+    if by_label:
+        out["flops_by_label"] = dict(sorted(
+            flops_lbl.items(), key=lambda kv: -kv[1])[:25])
+        out["coll_by_label"] = dict(sorted(
+            coll_lbl.items(), key=lambda kv: -kv[1])[:25])
+    return out

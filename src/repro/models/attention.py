@@ -1,0 +1,248 @@
+"""Attention mixers: GQA self-attention (train/prefill/decode) + cross-attention.
+
+All functions are pure; the KV cache is an explicit pytree argument.
+Softmax runs in f32.  GQA is expressed by reshaping query heads into
+(kv_heads, group) so the einsums contract per kv-head — this keeps the
+head axis shardable over the 'model' mesh axis.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.layers import apply_rope, rms_norm_head
+
+Params = dict
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+def init_attn(key, cfg: ArchConfig, dtype, cross: bool = False) -> Params:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 5)
+    std = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, hq, dh)) * std).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, hkv, dh)) * std).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, hkv, dh)) * std).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (hq, dh, d)) * (hq * dh) ** -0.5).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, dh), dtype)
+        p["bk"] = jnp.zeros((hkv, dh), dtype)
+        p["bv"] = jnp.zeros((hkv, dh), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _project_qkv(x, kv_src, p, cfg: ArchConfig, q_positions, use_rope=True):
+    """x: (B,S,D) queries source; kv_src: (B,T,D) key/value source."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", kv_src, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", kv_src, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm_head(q, p["q_norm"])
+        k = rms_norm_head(k, p["k_norm"])
+    if use_rope:
+        kv_positions = jnp.arange(kv_src.shape[1])[None, :]
+        q = apply_rope(q, q_positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# Core attention math
+# --------------------------------------------------------------------------
+# GQA is expressed by broadcasting KV heads up to the query head count with
+# jnp.repeat (fused by XLA; never a grouped reshape of the q head dim).
+# This keeps the *query-head* axis intact and shardable over the 'model'
+# mesh axis, while replicated KV stays cheap.  Sharding hints come from the
+# distributed context (no-ops outside a mesh).
+from repro.distributed.context import hint
+
+
+# KV-chunk threshold: above this many keys, attention streams KV blocks
+# with an online softmax (lax.scan) so the (S x T) score tensor is never
+# materialized — the memory move that makes 32k prefill / 4k train fit.
+CHUNK_THRESHOLD = 2048
+KV_CHUNK = 1024
+
+
+def _dense_attend(q, k, v, dh, mask):
+    scores = jnp.einsum("bshk,bthk->bhst", q, k).astype(jnp.float32)
+    scores = scores * (dh ** -0.5)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    scores = hint(scores, "batch", "heads", "qseq", None)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthk->bshk", probs, v)
+
+
+def _chunked_attend(q, k, v, dh, causal: bool, kv_chunk: int):
+    """Online-softmax streaming over KV chunks (flash-attention schedule in
+    pure jnp; differentiable)."""
+    b, s, h, _ = q.shape
+    t = k.shape[1]
+    n_chunks = t // kv_chunk
+    qf = q.astype(jnp.float32) * (dh ** -0.5)
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, kv_chunk, h, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, kv_chunk, h, dh), 1, 0)
+    rows = jnp.arange(s)[:, None]
+
+    def step(carry, xs):
+        m, l, acc = carry
+        ci, k_i, v_i = xs
+        s_ij = jnp.einsum("bshk,bthk->bhst", qf, k_i.astype(jnp.float32))
+        if causal:
+            cols = ci * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            s_ij = jnp.where((cols <= rows)[None, None], s_ij, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+        p = jnp.exp(s_ij - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1)
+        acc = alpha[..., None] * acc + jnp.einsum(
+            "bhst,bthk->bhsk", p, v_i.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    # anchor the scan-carry shardings (batch x heads); without this the
+    # partitioner may drop the batch sharding at scan exit and gather the
+    # full batch for the wo projection (measured 412 GB/dev, §Perf log)
+    m0 = hint(jnp.full((b, h, s), NEG_INF, jnp.float32),
+              "batch", "heads", "qseq")
+    l0 = hint(jnp.zeros((b, h, s), jnp.float32), "batch", "heads", "qseq")
+    a0 = hint(jnp.zeros((b, h, s, dh), jnp.float32),
+              "batch", "heads", "qseq", None)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    out = hint(out, "batch", "heads", "qseq", None)
+    return jnp.moveaxis(out, 1, 2)                   # (B,S,H,Dh)
+
+
+def _gqa_attend(q, k, v, cfg: ArchConfig, mask: Optional[jax.Array],
+                causal_for_chunks: Optional[bool] = None):
+    """q: (B,S,Hq,Dh); k,v: (B,T,Hkv,Dh); mask broadcastable to (B,1,S,T).
+
+    ``causal_for_chunks``: when the mask is exactly a causal (or None)
+    mask, large-T inputs take the chunked online-softmax path.
+    """
+    b, s, hq, dh = q.shape
+    hkv, t = k.shape[2], k.shape[1]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = hint(q, "batch", "qseq", "heads", None)
+    k = hint(k, "batch", "kv_seq", "heads", None)
+    v = hint(v, "batch", "kv_seq", "heads", None)
+    if (causal_for_chunks is not None and t > CHUNK_THRESHOLD
+            and t % KV_CHUNK == 0):
+        out = _chunked_attend(q, k, v, dh, causal_for_chunks, KV_CHUNK)
+    else:
+        out = _dense_attend(q, k, v, dh, mask)
+    return hint(out, "batch", "qseq", "heads", None)
+
+
+def _causal_mask(s: int, t: int, offset: int = 0):
+    """(1,1,S,T) mask; query i may see key j iff j <= i + offset."""
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(t)[None, :]
+    return (kj <= qi + offset)[None, None]
+
+
+# --------------------------------------------------------------------------
+# Modes
+# --------------------------------------------------------------------------
+def attn_forward(x, p, cfg: ArchConfig) -> jax.Array:
+    """Full-sequence self-attention (train / encoder)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(x, x, p, cfg, positions)
+    mask = _causal_mask(s, s) if cfg.causal else None
+    out = _gqa_attend(q, k, v, cfg, mask, causal_for_chunks=cfg.causal)
+    return hint(jnp.einsum("bshk,hkd->bsd", out, p["wo"]),
+                "batch", "qseq", None)
+
+
+def attn_prefill(x, p, cfg: ArchConfig) -> Tuple[jax.Array, Params]:
+    """Like forward, but also returns the KV cache (B,T,Hkv,Dh)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(x, x, p, cfg, positions)
+    mask = _causal_mask(s, s) if cfg.causal else None
+    out = _gqa_attend(q, k, v, cfg, mask, causal_for_chunks=cfg.causal)
+    y = hint(jnp.einsum("bshk,hkd->bsd", out, p["wo"]),
+             "batch", "qseq", None)
+    return y, {"k": k, "v": v}
+
+
+def attn_decode(x, p, cfg: ArchConfig, cache: Params, pos: jax.Array
+                ) -> Tuple[jax.Array, Params]:
+    """One-token decode.  x: (B,1,D).  cache k/v: (B,T,Hkv,Dh) ring buffer;
+    ``pos`` (scalar int32) = number of tokens already in the cache; the new
+    token is written at index ``pos`` and attends over [0..pos]."""
+    b = x.shape[0]
+    t = cache["k"].shape[1]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k_new, v_new = q + p["bq"], k_new + p["bk"], v_new + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm_head(q, p["q_norm"])
+        k_new = rms_norm_head(k_new, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=1)
+    valid = (jnp.arange(t) <= pos)[None, None, None, :]   # (1,1,1,T)
+    out = _gqa_attend(q, k, v, cfg, valid)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------------
+# Cross-attention (VLM image layers)
+# --------------------------------------------------------------------------
+def cross_attn_forward(x, p, cfg: ArchConfig, img_h: jax.Array) -> jax.Array:
+    """x: (B,S,D) text; img_h: (B,Timg,D) projected image states.  No rope,
+    no causal mask over image tokens."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(x, img_h, p, cfg, positions, use_rope=False)
+    out = _gqa_attend(q, k, v, cfg, mask=None, causal_for_chunks=False)
+    return hint(jnp.einsum("bshk,hkd->bsd", out, p["wo"]),
+                "batch", "qseq", None)
+
+
+def cross_attn_kv(p, cfg: ArchConfig, img_h: jax.Array) -> Params:
+    k = jnp.einsum("btd,dhk->bthk", img_h, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", img_h, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        k = rms_norm_head(k, p["k_norm"])
+    return {"k": k, "v": v}
+
+
+def cross_attn_decode(x, p, cfg: ArchConfig, cache: Params
+                      ) -> Tuple[jax.Array, Params]:
+    """Decode against a static image-KV cache."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if cfg.qk_norm:
+        q = rms_norm_head(q, p["q_norm"])
+    out = _gqa_attend(q, cache["k"], cache["v"], cfg, mask=None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, cache

@@ -1,0 +1,147 @@
+"""Shared neural-net building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+
+Params = dict
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def init_norm(cfg: ArchConfig, dtype) -> Params:
+    if cfg.norm == "layernorm_np":
+        return {}
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(x: jax.Array, p: Params, cfg: ArchConfig, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_head(x: jax.Array, scale: jax.Array, eps: float = 1e-6):
+    """Per-head RMSNorm over the trailing (d_head) dim — qwen3 qk-norm."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding
+# --------------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Dense MLP
+# --------------------------------------------------------------------------
+def init_mlp(key, cfg: ArchConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in, std_out = d ** -0.5, f ** -0.5
+    p = {
+        "w_in": (jax.random.normal(k1, (d, f)) * std_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (f, d)) * std_out).astype(dtype),
+    }
+    if cfg.mlp_act == "silu":  # SwiGLU: extra gate matrix
+        p["w_gate"] = (jax.random.normal(k3, (d, f)) * std_in).astype(dtype)
+    return p
+
+
+def apply_mlp(x: jax.Array, p: Params, cfg: ArchConfig) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["w_in"])
+    if cfg.mlp_act == "silu":
+        h = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["w_gate"])) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+def init_embed(key, cfg: ArchConfig, dtype) -> Params:
+    p = {"table": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model))
+                   * cfg.d_model ** -0.5).astype(dtype)}
+    return p
+
+
+def embed_tokens(tokens: jax.Array, p: Params) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(h: jax.Array, params: Params, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"]            # (V, D)
+        return jnp.einsum("...d,vd->...v", h, w)
+    return jnp.einsum("...d,dv->...v", h, params["lm_head"]["w"])
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy, computed in f32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# At training scale the full logits tensor (B*S, V) can reach hundreds of
+# GB; above this element count the unembed+CE is streamed over sequence
+# chunks so only (chunk, V) logits are ever live.
+CE_CHUNK_THRESHOLD = 2 ** 28
+CE_SEQ_CHUNK = 256
+
+
+def chunked_unembed_cross_entropy(h: jax.Array, labels: jax.Array,
+                                  unembed_fn, seq_chunk: int = CE_SEQ_CHUNK
+                                  ) -> jax.Array:
+    """Mean CE of ``unembed_fn(h_chunk)`` without materializing full
+    logits.  h: (B,S,D); labels: (B,S)."""
+    b, s, d = h.shape
+    if s % seq_chunk != 0:
+        seq_chunk = s  # fall back (small inputs)
+    n = s // seq_chunk
+    hc = jnp.moveaxis(h.reshape(b, n, seq_chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n, seq_chunk), 1, 0)
+
+    def step(tot, xs):
+        h_i, l_i = xs
+        logits = unembed_fn(h_i).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_i[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    tot, _ = jax.lax.scan(jax.checkpoint(step, prevent_cse=False),
+                          jnp.zeros((), jnp.float32), (hc, lc))
+    return tot / (b * s)

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN.
+
+Baseline implementation (``impl='scatter'``): capacity-bounded scatter
+dispatch → batched per-expert einsum → gather combine.  Flop cost is
+O(T · top_k · d · f) (active experts only), never O(T · E · ...), and every
+einsum exposes the expert axis for EP sharding over the 'model' mesh axis.
+
+An optimized EP all-to-all variant (shard_map) lives in
+``repro.distributed.moe_a2a`` and is exercised by the §Perf hillclimb.
+
+Routing (top-k softmax, renormalized) and the load-balancing auxiliary loss
+follow the standard GShard/Switch formulation.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.context import hint
+
+Params = dict
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    std_in, std_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * std_in).astype(jnp.float32),
+        "w_in": (jax.random.normal(ks[1], (e, d, f)) * std_in).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (e, f, d)) * std_out).astype(dtype),
+    }
+    if cfg.mlp_act == "silu":
+        p["w_gate"] = (jax.random.normal(ks[3], (e, d, f)) * std_in).astype(dtype)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    """Static per-expert capacity (python int)."""
+    c = math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def route(x2d: jax.Array, p: Params, cfg: ArchConfig):
+    """x2d: (T, D) → (gate_weights (T,k), expert_idx (T,k), aux_loss)."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gw, idx = jax.lax.top_k(probs, cfg.top_k)
+    gw = gw / jnp.sum(gw, axis=-1, keepdims=True)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    e = cfg.n_experts
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return gw, idx, aux
+
+
+def moe_ffn(x2d: jax.Array, p: Params, cfg: ArchConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x2d: (T, D) → (out (T, D), aux_loss scalar)."""
+    t, d = x2d.shape
+    k, e = cfg.top_k, cfg.n_experts
+    cap = capacity(t, cfg)
+
+    gw, idx, aux = route(x2d, p, cfg)
+
+    flat_e = idx.reshape(t * k)                                  # (T*k,)
+    # Position of each routed copy within its expert queue: cumulative count.
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)          # (T*k, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - 1                     # (T*k, E)
+    pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap                                             # drop overflow
+    pos_c = jnp.where(keep, pos, cap - 1)
+
+    # Dispatch: scatter token copies into (E, C, D) expert queues.
+    x_rep = jnp.repeat(x2d, k, axis=0)                           # (T*k, D)
+    upd = jnp.where(keep[:, None], x_rep, 0).astype(x2d.dtype)
+    buf = jnp.zeros((e, cap, d), x2d.dtype).at[flat_e, pos_c].add(upd)
+    buf = hint(buf, "experts", None, None)
+
+    # Expert FFN (batched over the expert axis — EP shards here).
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    h = hint(h, "experts", None, "ff")
+    if cfg.mlp_act == "silu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * h
+    else:
+        h = jax.nn.gelu(h)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_out"])            # (E, C, D)
+    out_e = hint(out_e, "experts", None, None)
+
+    # Combine: gather each copy back, weight by (renormalized) gate prob.
+    out_rep = out_e[flat_e, pos_c]                               # (T*k, D)
+    out_rep = out_rep * (gw.reshape(t * k, 1) * keep[:, None]).astype(out_rep.dtype)
+    out = jnp.sum(out_rep.reshape(t, k, d), axis=1)
+    return out, aux
+
+
+def apply_moe(x: jax.Array, p: Params, cfg: ArchConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (out, aux).  Uses the expert-parallel shard_map path
+    when a distributed context is active (see moe_sharded.py); the local
+    scatter path otherwise."""
+    from repro.distributed.context import current
+    from repro.models import moe_sharded
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    ctx = current()
+    if moe_sharded.sharded_applicable(cfg, ctx, b * s):
+        out, aux = moe_sharded.moe_ffn_sharded(x2, p, cfg, ctx)
+    elif moe_sharded.psum_applicable(cfg, ctx, b * s):
+        out, aux = moe_sharded.moe_ffn_psum(x2, p, cfg, ctx)
+    else:
+        out, aux = moe_ffn(x2, p, cfg)
+    return out.reshape(b, s, d), aux

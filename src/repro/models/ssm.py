@@ -1,0 +1,342 @@
+"""Recurrent mixers: Mamba (selective SSM), and the xLSTM pair (mLSTM with
+matrix memory, sLSTM with scalar memory and exponential gating).
+
+Each mixer exposes three entry points mirroring attention.py:
+
+* ``*_forward(x, p, cfg)``            — full sequence (train)
+* ``*_prefill(x, p, cfg)``            — full sequence + final state (cache)
+* ``*_decode(x, p, cfg, cache)``      — one step against the cached state
+
+The decode state is O(1) in sequence length — the property that makes the
+SSM/hybrid archs eligible for the ``long_500k`` cell, and that makes PREMA's
+CHECKPOINT mechanism dramatically cheaper here (constant-size context).
+
+Sequence iteration uses ``jax.lax.scan`` — one HLO loop body regardless of
+length, which keeps dry-run lowering compact at seq 4096+.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.context import hint
+
+Params = dict
+
+# Sequence scans run as scan-of-scans: an outer scan over chunks whose body
+# is remat'd, so the backward pass saves only chunk-boundary states instead
+# of per-step states (which for mamba/mLSTM would be O(S * state) — PBs at
+# train_4k scale).
+SCAN_CHUNK = 128
+
+
+def _chunked_seq_scan(step_fn, init_state, xs_seq, seq_axis_len: int):
+    """scan(step_fn) over the sequence with chunk-level rematerialization.
+
+    ``xs_seq``: pytree with leading dim S (already time-major).
+    Returns (final_state, ys stacked over S).
+    """
+    chunk = SCAN_CHUNK if seq_axis_len % SCAN_CHUNK == 0 else seq_axis_len
+    n_chunks = seq_axis_len // chunk
+
+    def inner(state, xs_chunk):
+        return jax.lax.scan(step_fn, state, xs_chunk)
+
+    if n_chunks == 1:
+        return inner(init_state, xs_seq)
+
+    xs_c = jax.tree.map(
+        lambda x: x.reshape((n_chunks, chunk) + x.shape[1:]), xs_seq)
+    state, ys = jax.lax.scan(
+        jax.checkpoint(inner, prevent_cse=False), init_state, xs_c)
+    ys = jax.tree.map(
+        lambda y: y.reshape((seq_axis_len,) + y.shape[2:]), ys)
+    return state, ys
+
+
+# ==========================================================================
+# Mamba (selective state-space)
+# ==========================================================================
+def _dt_rank(cfg: ArchConfig) -> int:
+    return max(1, cfg.d_model // 64)
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> Params:
+    d, di, ds, dc = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    dtr = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 2 * di)) * std).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di)) * dc ** -0.5).astype(dtype),
+        "x_proj": (jax.random.normal(ks[2], (di, dtr + 2 * ds)) * di ** -0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dtr, di)) * dtr ** -0.5).astype(dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": (jax.random.normal(ks[4], (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def mamba_forward(x, p, cfg: ArchConfig) -> jax.Array:
+    y, _ = mamba_prefill(x, p, cfg)
+    return y
+
+
+def mamba_prefill(x, p, cfg: ArchConfig) -> Tuple[jax.Array, Params]:
+    """Fully-chunked mamba layer: the in-projection, causal conv, gate
+    projections, selective scan, gating and out-projection all run one
+    sequence chunk at a time inside a carried scan — no O(S·Di) tensor is
+    ever materialized (at jamba 32k that would be 2-4 GB/device *per
+    buffer*; chunked, the layer's live set is O(chunk·Di)).  The carry is
+    (ssm state, conv tail), exactly the decode state."""
+    b, s_len, _ = x.shape
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    dtr = _dt_rank(cfg)
+    a = -jnp.exp(p["A_log"])                                # (Di, ds)
+    chunk = SCAN_CHUNK if s_len % SCAN_CHUNK == 0 else s_len
+    n_chunks = s_len // chunk
+
+    # anchor carry shardings so the partitioner never replicates state
+    s0 = hint(jnp.zeros((b, di, ds), jnp.float32), "batch", "inner", None)
+    tail0 = hint(jnp.zeros((b, dc - 1, di), x.dtype), "batch", None, "inner")
+
+    def inner(carry, x_chunk):                              # (chunk,B,D)
+        s, tail = carry
+        xz = jnp.einsum("tbd,de->tbe", x_chunk, p["w_in"])
+        u_pre, z = jnp.split(xz, 2, axis=-1)                # (chunk,B,Di)
+        # causal depthwise conv across the chunk boundary via the tail
+        u_ext = jnp.concatenate([jnp.moveaxis(tail, 1, 0), u_pre], axis=0)
+        u = sum(u_ext[i:i + chunk] * p["conv_w"][i] for i in range(dc))
+        u = jax.nn.silu(u)
+        new_tail = jnp.moveaxis(u_ext[chunk:], 0, 1)        # (B,dc-1,Di)
+        proj = jnp.einsum("tbi,ie->tbe", u, p["x_proj"]).astype(jnp.float32)
+        dt = jax.nn.softplus(
+            jnp.einsum("tbr,ri->tbi", proj[..., :dtr],
+                       p["dt_proj"].astype(jnp.float32))
+            + p["dt_bias"].astype(jnp.float32))
+        b_c = proj[..., dtr:dtr + ds]
+        c_c = proj[..., dtr + ds:]
+
+        def step(st, xs):
+            u_t, dt_t, b_t, c_t = xs
+            uf = u_t.astype(jnp.float32)
+            da = jnp.exp(dt_t[..., None] * a)               # (B,Di,ds)
+            st = da * st + (dt_t * uf)[..., None] * b_t[:, None, :]
+            y = jnp.einsum("bis,bs->bi", st, c_t) + uf * p["D"]
+            return st, y.astype(u_t.dtype)
+
+        s, y = jax.lax.scan(step, s, (u, dt, b_c, c_c))
+        y = y * jax.nn.silu(z)
+        out_c = jnp.einsum("tbi,id->tbd", y, p["w_out"])
+        return (s, new_tail), out_c
+
+    x_tm = jnp.moveaxis(x, 1, 0)                            # (S,B,D)
+    if n_chunks == 1:
+        (s_final, tail), out_tm = inner((s0, tail0), x_tm)
+    else:
+        x_c = x_tm.reshape(n_chunks, chunk, *x_tm.shape[1:])
+        (s_final, tail), out_tm = jax.lax.scan(
+            jax.checkpoint(inner, prevent_cse=False), (s0, tail0), x_c)
+        out_tm = out_tm.reshape(s_len, *out_tm.shape[2:])
+    out = hint(jnp.moveaxis(out_tm, 0, 1), "batch", None, None)
+    return out, {"ssm": s_final, "conv": tail}
+
+
+def mamba_decode(x, p, cfg: ArchConfig, cache: Params) -> Tuple[jax.Array, Params]:
+    """x: (B,1,D)."""
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    dtr = _dt_rank(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])[:, 0]      # (B, 2Di)
+    u_new, z = xz[:, :di], xz[:, di:]
+    # conv over the (dc-1) cached inputs + current
+    window = jnp.concatenate([cache["conv"], u_new[:, None]], axis=1)  # (B,dc,Di)
+    u = jnp.einsum("bci,ci->bi", window, p["conv_w"])
+    u = jax.nn.silu(u)
+    proj = jnp.einsum("bi,ie->be", u, p["x_proj"])
+    dt_in, b_t, c_t = proj[:, :dtr], proj[:, dtr:dtr + ds], proj[:, dtr + ds:]
+    dt = jax.nn.softplus(jnp.einsum("br,ri->bi", dt_in, p["dt_proj"])
+                         + p["dt_bias"].astype(jnp.float32)).astype(jnp.float32)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt[..., None] * a)
+    s = da * cache["ssm"] + (dt * u.astype(jnp.float32))[..., None] * \
+        b_t.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bis,bs->bi", s, c_t.astype(jnp.float32))
+    y = y + u.astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z))[:, None]        # (B,1,Di)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    return out, {"ssm": s, "conv": window[:, 1:]}
+
+
+# ==========================================================================
+# mLSTM (xLSTM matrix-memory cell)
+# ==========================================================================
+def init_mlstm(key, cfg: ArchConfig, dtype) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    dp = int(cfg.lstm_proj_factor * d)
+    dh = dp // h
+    ks = jax.random.split(key, 8)
+    std_d, std_p = d ** -0.5, dp ** -0.5
+    return {
+        "w_up": (jax.random.normal(ks[0], (d, 2 * dp)) * std_d).astype(dtype),
+        "wq": (jax.random.normal(ks[1], (dp, dp)) * std_p).astype(dtype),
+        "wk": (jax.random.normal(ks[2], (dp, dp)) * std_p).astype(dtype),
+        "wv": (jax.random.normal(ks[3], (dp, dp)) * std_p).astype(dtype),
+        "w_i": (jax.random.normal(ks[4], (d, h)) * std_d).astype(jnp.float32),
+        "w_f": (jax.random.normal(ks[5], (d, h)) * std_d).astype(jnp.float32),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # forget-bias init
+        "w_down": (jax.random.normal(ks[6], (dp, d)) * std_p).astype(dtype),
+    }
+
+
+def _mlstm_qkv(x, p, cfg: ArchConfig):
+    h = cfg.n_heads
+    dp = int(cfg.lstm_proj_factor * cfg.d_model)
+    dh = dp // h
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    xm, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ef->bsf", xm, p["wq"]).reshape(*xm.shape[:2], h, dh)
+    k = jnp.einsum("bse,ef->bsf", xm, p["wk"]).reshape(*xm.shape[:2], h, dh)
+    v = jnp.einsum("bse,ef->bsf", xm, p["wv"]).reshape(*xm.shape[:2], h, dh)
+    k = k * (dh ** -0.5)
+    i_pre = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["w_i"]) + p["b_i"]
+    f_pre = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["w_f"]) + p["b_f"]
+    return q, k, v, z, i_pre, f_pre
+
+
+def _mlstm_step(state, xs):
+    """Exponentially-gated matrix-memory update (stabilized)."""
+    c, n, m = state                       # (B,H,dk,dv), (B,H,dk), (B,H)
+    q_t, k_t, v_t, i_pre, f_pre = xs      # (B,H,dh) x3, (B,H) x2
+    logf = -jax.nn.softplus(-f_pre)       # log sigmoid(f)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)[..., None]
+    f_g = jnp.exp(logf + m - m_new)[..., None]
+    kf = k_t.astype(jnp.float32)
+    vf = v_t.astype(jnp.float32)
+    qf = q_t.astype(jnp.float32)
+    c = f_g[..., None] * c + i_g[..., None] * (kf[..., :, None] * vf[..., None, :])
+    n = f_g * n + i_g * kf
+    num = jnp.einsum("bhkv,bhk->bhv", c, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), 1.0)
+    h_t = num / den[..., None]
+    return (c, n, m_new), h_t
+
+
+def mlstm_prefill(x, p, cfg: ArchConfig) -> Tuple[jax.Array, Params]:
+    b, s, _ = x.shape
+    hh = cfg.n_heads
+    dp = int(cfg.lstm_proj_factor * cfg.d_model)
+    dh = dp // hh
+    q, k, v, z, i_pre, f_pre = _mlstm_qkv(x, p, cfg)
+    # Recurrent cells are DP-only (§Perf iteration 1): TP-sharding the
+    # per-step matrix memory forces a resharding collective every timestep
+    # (measured 88 TB/device at train_4k) for a 0.33B model whose compute
+    # term is negligible — so states and per-step inputs replicate over
+    # 'model' and shard over batch only.
+    dp_only = lambda t, nd: hint(t, *((("batch",) + (None,) * (nd - 1))))
+    q, k, v = (dp_only(t, 4) for t in (q, k, v))
+    state = (dp_only(jnp.zeros((b, hh, dh, dh), jnp.float32), 4),
+             dp_only(jnp.zeros((b, hh, dh), jnp.float32), 3),
+             dp_only(jnp.full((b, hh), -1e30, jnp.float32), 2))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_pre, f_pre))
+
+    def step(st, xs_t):   # emit bf16 outputs; keep f32 state
+        st2, h_t = _mlstm_step(st, xs_t)
+        return st2, h_t.astype(x.dtype)
+
+    state, hs = _chunked_seq_scan(step, state, xs, s)
+    hseq = jnp.moveaxis(hs, 0, 1).reshape(b, s, dp).astype(x.dtype)
+    y = hseq * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"])
+    return out, {"C": state[0], "n": state[1], "m": state[2]}
+
+
+def mlstm_forward(x, p, cfg: ArchConfig) -> jax.Array:
+    return mlstm_prefill(x, p, cfg)[0]
+
+
+def mlstm_decode(x, p, cfg: ArchConfig, cache: Params) -> Tuple[jax.Array, Params]:
+    b = x.shape[0]
+    hh = cfg.n_heads
+    dp = int(cfg.lstm_proj_factor * cfg.d_model)
+    q, k, v, z, i_pre, f_pre = _mlstm_qkv(x, p, cfg)
+    state = (cache["C"], cache["n"], cache["m"])
+    state, h_t = _mlstm_step(state, (q[:, 0], k[:, 0], v[:, 0],
+                                     i_pre[:, 0], f_pre[:, 0]))
+    hseq = h_t.reshape(b, 1, dp).astype(x.dtype)
+    y = hseq * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"])
+    return out, {"C": state[0], "n": state[1], "m": state[2]}
+
+
+# ==========================================================================
+# sLSTM (xLSTM scalar-memory cell with exponential gating)
+# ==========================================================================
+def init_slstm(key, cfg: ArchConfig, dtype) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    std = d ** -0.5
+    return {
+        "w_zifo": (jax.random.normal(ks[0], (d, 4 * d)) * std).astype(dtype),
+        "r_zifo": (jax.random.normal(ks[1], (h, dh, 4 * dh)) * dh ** -0.5).astype(jnp.float32),
+        "b_zifo": jnp.zeros((4 * d,), jnp.float32),
+        "w_out": (jax.random.normal(ks[2], (d, d)) * std).astype(dtype),
+    }
+
+
+def _slstm_step(cfg: ArchConfig, p, state, x_pre):
+    """state: (c, n, hprev, m) each (B,H,dh); x_pre: (B, 4D)."""
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    c, n, hp, m = state
+    # recurrent (block-diagonal per head) contribution
+    rec = jnp.einsum("bhd,hde->bhe", hp, p["r_zifo"])        # (B,H,4dh)
+    pre = x_pre.astype(jnp.float32).reshape(*x_pre.shape[:-1], h, 4 * dh) + rec
+    z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    logf = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    c = f_g * c + i_g * jnp.tanh(z_pre)
+    n = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_prefill(x, p, cfg: ArchConfig) -> Tuple[jax.Array, Params]:
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    x_pre = jnp.einsum("bsd,de->bse", x, p["w_zifo"]) + p["b_zifo"].astype(x.dtype)
+    x_pre = hint(x_pre, "batch", None, None)   # DP-only recurrence (§Perf)
+    leaf0 = lambda fill: hint(jnp.full((b, h, dh), fill, jnp.float32),
+                              "batch", None, None)
+    state = (leaf0(0.0), leaf0(0.0), leaf0(0.0), leaf0(-1e30))
+
+    def step(st, xp):
+        st2, h_t = _slstm_step(cfg, p, st, xp)
+        return st2, h_t.astype(x.dtype)
+
+    state, hs = _chunked_seq_scan(step, state, jnp.moveaxis(x_pre, 1, 0), s)
+    hseq = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", hseq, p["w_out"])
+    return out, {"c": state[0], "n": state[1], "h": state[2], "m": state[3]}
+
+
+def slstm_forward(x, p, cfg: ArchConfig) -> jax.Array:
+    return slstm_prefill(x, p, cfg)[0]
+
+
+def slstm_decode(x, p, cfg: ArchConfig, cache: Params) -> Tuple[jax.Array, Params]:
+    b, s, d = x.shape
+    x_pre = jnp.einsum("bsd,de->bse", x, p["w_zifo"]) + p["b_zifo"].astype(x.dtype)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    state, h_t = _slstm_step(cfg, p, state, x_pre[:, 0])
+    hseq = h_t.reshape(b, 1, d).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", hseq, p["w_out"])
+    return out, {"c": state[0], "n": state[1], "h": state[2], "m": state[3]}

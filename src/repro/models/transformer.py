@@ -1,0 +1,336 @@
+"""The composable model: a periodic stack of (mixer, ffn) blocks.
+
+One code path serves all ten assigned architectures.  The layer stack is a
+``lax.scan`` over ``n_periods`` copies of the config's period (super-block),
+with per-slot parameters stacked on a leading axis — so the lowered HLO
+contains a single period body regardless of depth (compile-time and HLO size
+stay flat from olmo-1b to jamba-398b).
+
+Entry points
+------------
+* ``init_params(key, cfg, dtype)``
+* ``train_loss(params, batch, cfg, ...)``     — mean CE (+ MoE aux)
+* ``prefill(params, batch, cfg)``             — logits + cache
+* ``decode_step(params, cache, tokens, pos, cfg)``
+* ``init_cache(cfg, batch, max_seq, ...)``    — concrete or abstract cache
+
+The cache is an explicit pytree: attention KV ring buffers, SSM states,
+xLSTM matrix/scalar memories, static cross-attention KV.  It is exactly the
+context state PREMA's CHECKPOINT mechanism preserves (serving/executor.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.context import hint
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (CE_CHUNK_THRESHOLD, apply_mlp, apply_norm,
+                                 chunked_unembed_cross_entropy,
+                                 cross_entropy, embed_tokens, init_embed,
+                                 init_mlp, init_norm, unembed)
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+# ==========================================================================
+# Init
+# ==========================================================================
+def _init_mixer(key, mixer: str, cfg: ArchConfig, dtype) -> Params:
+    if mixer in ("attn", "cross_attn"):
+        return attn.init_attn(key, cfg, dtype, cross=(mixer == "cross_attn"))
+    if mixer == "mamba":
+        return ssm.init_mamba(key, cfg, dtype)
+    if mixer == "mlstm":
+        return ssm.init_mlstm(key, cfg, dtype)
+    if mixer == "slstm":
+        return ssm.init_slstm(key, cfg, dtype)
+    raise ValueError(mixer)
+
+
+def _init_ffn(key, ffn: str, cfg: ArchConfig, dtype) -> Params:
+    if ffn == "mlp":
+        return init_mlp(key, cfg, dtype)
+    if ffn == "moe":
+        return moe_mod.init_moe(key, cfg, dtype)
+    if ffn == "none":
+        return {}
+    raise ValueError(ffn)
+
+
+def _init_slot(key, mixer: str, ffn: str, cfg: ArchConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    slot = {"norm1": init_norm(cfg, dtype), "mixer": _init_mixer(k1, mixer, cfg, dtype)}
+    if ffn != "none":
+        slot["norm2"] = init_norm(cfg, dtype)
+        slot["ffn"] = _init_ffn(k2, ffn, cfg, dtype)
+    return slot
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, cfg.period + 4)
+    params: Params = {"slots": {}}
+    if not cfg.embedding_inputs:
+        params["embed"] = init_embed(keys[-1], cfg, dtype)
+    for i, (mixer, ffn) in enumerate(cfg.block_pattern):
+        slot_keys = jax.random.split(keys[i], cfg.n_periods)
+        params["slots"][f"slot{i}"] = jax.vmap(
+            lambda k: _init_slot(k, mixer, ffn, cfg, dtype))(slot_keys)
+    params["final_norm"] = init_norm(cfg, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": (jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab_size))
+                  * cfg.d_model ** -0.5).astype(dtype)}
+    if cfg.img_tokens:
+        params["img_proj"] = {
+            "w": (jax.random.normal(keys[-3], (cfg.d_vision, cfg.d_model))
+                  * cfg.d_vision ** -0.5).astype(dtype)}
+    if cfg.embedding_inputs:
+        # encoder-only head over the codebook (hubert masked prediction)
+        params["lm_head"] = {
+            "w": (jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab_size))
+                  * cfg.d_model ** -0.5).astype(dtype)}
+    return params
+
+
+# ==========================================================================
+# Block application
+# ==========================================================================
+def _apply_mixer(mixer: str, h, p, cfg: ArchConfig, mode: str,
+                 cache: Optional[Cache], pos, img_h):
+    """Returns (out, new_cache_or_None)."""
+    if mixer == "attn":
+        if mode == "decode":
+            return attn.attn_decode(h, p, cfg, cache, pos)
+        if mode == "prefill":
+            return attn.attn_prefill(h, p, cfg)
+        return attn.attn_forward(h, p, cfg), None
+    if mixer == "cross_attn":
+        if mode == "decode":
+            return attn.cross_attn_decode(h, p, cfg, cache)
+        y = attn.cross_attn_forward(h, p, cfg, img_h)
+        if mode == "prefill":
+            return y, attn.cross_attn_kv(p, cfg, img_h)
+        return y, None
+    fns = {
+        "mamba": (ssm.mamba_forward, ssm.mamba_prefill, ssm.mamba_decode),
+        "mlstm": (ssm.mlstm_forward, ssm.mlstm_prefill, ssm.mlstm_decode),
+        "slstm": (ssm.slstm_forward, ssm.slstm_prefill, ssm.slstm_decode),
+    }[mixer]
+    if mode == "decode":
+        return fns[2](h, p, cfg, cache)
+    if mode == "prefill":
+        return fns[1](h, p, cfg)
+    return fns[0](h, p, cfg), None
+
+
+def _apply_block(slot_idx: int, h, slot_p, cfg: ArchConfig, mode: str,
+                 cache: Optional[Cache], pos, img_h):
+    """Pre-norm residual block.  Returns (h, new_cache, aux)."""
+    mixer, ffn = cfg.block_pattern[slot_idx]
+    h = hint(h, "batch", None, "embed")
+    y = apply_norm(h, slot_p["norm1"], cfg)
+    y, new_cache = _apply_mixer(mixer, y, slot_p["mixer"], cfg, mode,
+                                cache, pos, img_h)
+    h = h + y
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        y = apply_norm(h, slot_p["norm2"], cfg)
+        if ffn == "moe":
+            y, aux = moe_mod.apply_moe(y, slot_p["ffn"], cfg)
+        else:
+            y = apply_mlp(y, slot_p["ffn"], cfg)
+        h = h + y
+    return h, new_cache, aux
+
+
+def _stack_forward(params: Params, h, cfg: ArchConfig, mode: str,
+                   cache: Optional[Cache], pos, img_h,
+                   remat: str = "none"):
+    """Scan the periodic super-block.  Returns (h, new_cache, aux_total).
+
+    Decode mode threads the *full* cache through the scan carry and updates
+    the current period's slice with dynamic_update_slice — so with donated
+    inputs the KV cache is updated in place (one HBM-resident copy), rather
+    than producing a second cache via scan ys."""
+
+    if mode == "decode":
+        def period_fn_d(carry, xs):
+            h, aux_acc, full_cache = carry
+            slots, idx = xs
+            cache_slice = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0,
+                                                       keepdims=False),
+                full_cache)
+            new_slice = {}
+            for i in range(cfg.period):
+                h, nc, aux = _apply_block(i, h, slots[f"slot{i}"], cfg,
+                                          mode, cache_slice.get(f"slot{i}"),
+                                          pos, img_h)
+                if nc is not None:
+                    new_slice[f"slot{i}"] = nc
+            full_cache = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), idx, 0),
+                full_cache, new_slice)
+            return (h, aux_acc + aux, full_cache), None
+
+        (h, aux, cache), _ = jax.lax.scan(
+            period_fn_d, (h, jnp.zeros((), jnp.float32), cache),
+            (params["slots"], jnp.arange(cfg.n_periods)))
+        return h, cache, aux
+
+    def period_fn(carry, xs):
+        h, aux_acc = carry
+        slots = xs
+        new_cache = {}
+        for i in range(cfg.period):
+            h, nc, aux = _apply_block(i, h, slots[f"slot{i}"], cfg, mode,
+                                      None, pos, img_h)
+            if nc is not None:
+                new_cache[f"slot{i}"] = nc
+        return (h, aux_acc + aux), (new_cache if new_cache else None)
+
+    fn = period_fn
+    if remat == "full":
+        fn = jax.checkpoint(period_fn, prevent_cse=False)
+    elif remat == "dots":
+        fn = jax.checkpoint(
+            period_fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    (h, aux), caches = jax.lax.scan(
+        fn, (h, jnp.zeros((), jnp.float32)), params["slots"])
+    return h, caches, aux
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch: Dict[str, jax.Array]):
+    if cfg.embedding_inputs:
+        h = batch["frames"].astype(params["lm_head"]["w"].dtype)
+    else:
+        h = embed_tokens(batch["tokens"], params["embed"])
+    img_h = None
+    if cfg.img_tokens:
+        img_h = jnp.einsum("btv,vd->btd", batch["img_embeds"],
+                           params["img_proj"]["w"]).astype(h.dtype)
+    return h, img_h
+
+
+# ==========================================================================
+# Public entry points
+# ==========================================================================
+def train_loss(params: Params, batch: Dict[str, jax.Array], cfg: ArchConfig,
+               remat: str = "none", aux_weight: float = 0.01
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h, img_h = _embed_inputs(params, cfg, batch)
+    h, _, aux = _stack_forward(params, h, cfg, "train", None, None, img_h,
+                               remat=remat)
+    h = apply_norm(h, params["final_norm"], cfg)
+    if cfg.embedding_inputs:
+        unembed_fn = lambda hh: jnp.einsum("bsd,dv->bsv", hh,
+                                           params["lm_head"]["w"])
+    else:
+        unembed_fn = lambda hh: unembed(hh, params, cfg)
+    b, s, _ = h.shape
+    if b * s * cfg.vocab_size > CE_CHUNK_THRESHOLD:
+        ce = chunked_unembed_cross_entropy(h, batch["labels"], unembed_fn)
+    else:
+        ce = cross_entropy(unembed_fn(h), batch["labels"])
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ArchConfig
+            ) -> Tuple[jax.Array, Cache]:
+    """Full-sequence forward producing last-position logits + cache."""
+    h, img_h = _embed_inputs(params, cfg, batch)
+    h, cache, _ = _stack_forward(params, h, cfg, "prefill", None, None, img_h)
+    h = apply_norm(h, params["final_norm"], cfg)
+    h_last = h[:, -1:]
+    if cfg.embedding_inputs:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"]["w"])
+        return logits, {}  # encoder-only: no decode cache
+    logits = unembed(h_last, params, cfg)
+    return logits, cache
+
+
+def decode_step(params: Params, cache: Cache, tokens: jax.Array,
+                pos: jax.Array, cfg: ArchConfig) -> Tuple[jax.Array, Cache]:
+    """One-token decode.  tokens: (B,1) int32; pos: scalar int32 = number of
+    tokens already in the KV cache."""
+    h = embed_tokens(tokens, params["embed"]) if not cfg.embedding_inputs \
+        else tokens
+    h, new_cache, _ = _stack_forward(params, h, cfg, "decode", cache, pos, None)
+    h = apply_norm(h, params["final_norm"], cfg)
+    logits = unembed(h, params, cfg)
+    return logits, new_cache
+
+
+# ==========================================================================
+# Cache construction
+# ==========================================================================
+def _slot_cache_shape(mixer: str, cfg: ArchConfig, batch: int, max_seq: int,
+                      dtype):
+    dh, hkv = cfg.d_head, cfg.n_kv_heads
+    if mixer == "attn":
+        kv = jax.ShapeDtypeStruct((batch, max_seq, hkv, dh), dtype)
+        return {"k": kv, "v": kv}
+    if mixer == "cross_attn":
+        kv = jax.ShapeDtypeStruct((batch, cfg.img_tokens, hkv, dh), dtype)
+        return {"k": kv, "v": kv}
+    if mixer == "mamba":
+        di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+        return {"ssm": jax.ShapeDtypeStruct((batch, di, ds), jnp.float32),
+                "conv": jax.ShapeDtypeStruct((batch, dc - 1, di), dtype)}
+    if mixer == "mlstm":
+        h = cfg.n_heads
+        dh_p = int(cfg.lstm_proj_factor * cfg.d_model) // h
+        return {"C": jax.ShapeDtypeStruct((batch, h, dh_p, dh_p), jnp.float32),
+                "n": jax.ShapeDtypeStruct((batch, h, dh_p), jnp.float32),
+                "m": jax.ShapeDtypeStruct((batch, h), jnp.float32)}
+    if mixer == "slstm":
+        h = cfg.n_heads
+        dh_s = cfg.d_model // h
+        leaf = jax.ShapeDtypeStruct((batch, h, dh_s), jnp.float32)
+        return {"c": leaf, "n": leaf, "h": leaf, "m": leaf}
+    raise ValueError(mixer)
+
+
+def cache_spec(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16
+               ) -> Cache:
+    """Abstract cache pytree (ShapeDtypeStructs), stacked over periods."""
+    out: Cache = {}
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        slot = _slot_cache_shape(mixer, cfg, batch, max_seq, dtype)
+        out[f"slot{i}"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_periods,) + s.shape, s.dtype),
+            slot)
+    return out
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16
+               ) -> Cache:
+    """Concrete initial cache: zeros, except xLSTM max-stabilizer states
+    ('m'), which start at -inf exactly as the prefill scans do."""
+    spec = cache_spec(cfg, batch, max_seq, dtype)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        if mixer in ("mlstm", "slstm"):
+            slot = cache[f"slot{i}"]
+            slot["m"] = jnp.full(slot["m"].shape, -1e30, slot["m"].dtype)
+    return cache
+
+
+def cache_bytes(cfg: ArchConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16) -> int:
+    spec = cache_spec(cfg, batch, max_seq, dtype)
+    return sum(int(jnp.dtype(s.dtype).itemsize) *
+               functools.reduce(lambda a, b: a * b, s.shape, 1)
+               for s in jax.tree.leaves(spec))

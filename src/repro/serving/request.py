@@ -1,0 +1,64 @@
+"""Serving request types."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class InferenceRequest:
+    rid: int
+    arch: str                       # registered model name
+    prompt: np.ndarray              # (batch, prompt_len) int32 token ids
+    max_new_tokens: int = 16
+    priority: int = 3               # 1 / 3 / 9
+    arrival: float = 0.0            # engine virtual seconds
+    sla_scale: float = 8.0          # SLA target = sla_scale x isolated time
+    eos_id: Optional[int] = None    # stop token (None → run to max_new)
+    # ground-truth decode length for simulation-mode runs (sampled from the
+    # profiled distribution, unknown to the scheduler)
+    true_decode_len: Optional[int] = None
+    img_embeds: Optional[np.ndarray] = None
+    frames: Optional[np.ndarray] = None
+
+    @property
+    def batch(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[1])
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    arch: str
+    tokens: np.ndarray              # (batch, n_generated)
+    arrival: float
+    first_token_time: float
+    completion: float
+    isolated_time: float
+    n_preemptions: int
+    n_kills: int
+    ckpt_overhead: float
+    priority: int
+    sla_target: float
+
+    @property
+    def turnaround(self) -> float:
+        return self.completion - self.arrival
+
+    @property
+    def ntt(self) -> float:
+        return self.turnaround / max(self.isolated_time, 1e-12)
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_time - self.arrival
+
+    @property
+    def sla_met(self) -> bool:
+        return self.turnaround <= self.sla_target

@@ -1,0 +1,4 @@
+from repro.training.optimizer import OptConfig, apply_updates, init_opt_state  # noqa: F401
+from repro.training.train_step import TrainConfig, init_train_state, make_train_step  # noqa: F401
+from repro.training.data import DataConfig, TokenDataset  # noqa: F401
+from repro.training import checkpoint  # noqa: F401

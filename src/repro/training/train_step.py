@@ -1,0 +1,98 @@
+"""Train step: loss + grad + AdamW update, with gradient accumulation,
+remat policy, and optional int8 gradient compression (error feedback).
+
+``make_train_step`` returns a pure jit-able function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` — the object
+lowered by the multi-pod dry-run for every ``train_4k`` cell.
+
+Gradient accumulation: the global batch is reshaped to
+``(n_micro, micro_batch, ...)`` and scanned; gradients accumulate in f32.
+Each microbatch's backward is remat'd per super-block, so live activation
+memory is one microbatch deep regardless of global batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import transformer
+from repro.training import compression
+from repro.training.optimizer import OptConfig, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = dataclasses.field(default_factory=OptConfig)
+    remat: str = "full"           # none | dots | full
+    grad_accum: int = 1           # microbatches per step
+    accum_dtype: str = "float32"  # grad accumulator (bfloat16 at 398B scale)
+    compress_grads: bool = False  # int8 + error feedback
+    aux_weight: float = 0.01
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig) -> Callable:
+    def loss_fn(params, batch):
+        loss, parts = transformer.train_loss(
+            params, batch, cfg, remat=tcfg.remat,
+            aux_weight=tcfg.aux_weight)
+        return loss, parts
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def micro_split(batch):
+        def split(x):
+            b = x.shape[0]
+            assert b % tcfg.grad_accum == 0, (b, tcfg.grad_accum)
+            return x.reshape((tcfg.grad_accum, b // tcfg.grad_accum)
+                             + x.shape[1:])
+        return jax.tree.map(split, batch)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.grad_accum == 1:
+            (loss, parts), grads = grad_fn(params, batch)
+        else:
+            micro = micro_split(batch)
+            adt = jnp.dtype(tcfg.accum_dtype)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, _parts), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(adt), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            (grads, loss), _ = jax.lax.scan(accum, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / tcfg.grad_accum, grads)
+            loss = loss / tcfg.grad_accum
+            parts = {}
+
+        if tcfg.compress_grads:
+            grads, new_err = compression.compress_with_feedback(
+                grads, opt_state["err"])
+
+        new_params, new_opt, opt_metrics = apply_updates(
+            params, grads, opt_state, tcfg.opt)
+        if tcfg.compress_grads:
+            new_opt["err"] = new_err
+        metrics = {"loss": loss, **opt_metrics}
+        for k, v in (parts or {}).items():
+            metrics[k] = v
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ArchConfig, tcfg: TrainConfig,
+                     dtype=jnp.float32):
+    from repro.training.optimizer import init_opt_state
+    params = transformer.init_params(key, cfg, dtype)
+    opt_state = init_opt_state(params, tcfg.opt)
+    if tcfg.compress_grads:
+        opt_state["err"] = compression.init_error_feedback(params)
+    return params, opt_state

@@ -1,0 +1,31 @@
+import os
+import sys
+
+# tests run on the single real CPU device (the dry-run sets its own flags)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def paper_predictor():
+    from repro.core.predictor import Predictor
+    from repro.core import trace
+    from repro.hw import PAPER_NPU
+    pred = Predictor(PAPER_NPU)
+    trace.build_regressors(pred, np.random.default_rng(123))
+    return pred

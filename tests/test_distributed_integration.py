@@ -1,0 +1,164 @@
+"""Distributed integration tests (subprocess with virtual devices, so the
+main test session keeps its single-device jax)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    """One train step on a (2,4) mesh must equal the single-device step:
+    distribution may never change the math."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np, functools, json
+        from repro import configs
+        from repro.configs import Shape
+        from repro.distributed import sharding as shd
+        from repro.distributed.context import use_rules
+        from repro.launch.mesh import make_mesh
+        from repro.models import transformer
+        from repro.training import TrainConfig, init_train_state, make_train_step
+        from repro.training.data import TokenDataset, DataConfig
+
+        import dataclasses
+        cfg = configs.get_tiny_config("qwen3-moe-30b-a3b")
+        # drop-free capacity so local and expert-parallel dispatch are
+        # semantically identical (per-shard vs global capacity otherwise
+        # drops different tokens)
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+        tcfg = TrainConfig(remat="none")
+        data = TokenDataset(DataConfig(seq_len=16, global_batch=8), cfg)
+        batch = data.batch_at(0)
+        step = make_train_step(cfg, tcfg)
+
+        # single device reference
+        params, opt = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+        p1, o1, m1 = jax.jit(step)(params, opt, batch)
+
+        # sharded
+        mesh = make_mesh((2, 4), ("data", "model"))
+        shape = Shape("t", "train", 16, 8)
+        rules = shd.logical_rules(cfg, shape, mesh)
+        params2, opt2 = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+        with use_rules(mesh, rules):
+            p_spec = shd.param_specs(jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params2),
+                cfg, mesh)
+            sh = shd.as_shardings(p_spec, mesh)
+            params2 = jax.tree.map(jax.device_put, params2, sh)
+            p2, o2, m2 = jax.jit(step)(params2, opt2, batch)
+        print(json.dumps({"l1": float(m1["loss"]), "l2": float(m2["loss"]),
+                          "d": float(max(abs(np.asarray(a, np.float64) -
+                                             np.asarray(b, np.float64)).max()
+                          for a, b in zip(jax.tree.leaves(p1),
+                                          jax.tree.leaves(p2))))}))
+    """)
+    r = json.loads(out.strip().splitlines()[-1])
+    # losses differ slightly: the MoE aux (load-balance) term is computed
+    # from per-shard routing statistics under EP vs global statistics
+    # locally; the CE/grad math itself matches (param delta ~1e-6)
+    assert abs(r["l1"] - r["l2"]) < 5e-2, r
+    assert r["d"] < 5e-3, r
+
+
+def test_elastic_reshard_between_meshes():
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro import configs
+        from repro.distributed import elastic, sharding as shd
+        from repro.launch.mesh import make_mesh
+        from repro.models import transformer
+        from repro.training import TrainConfig, init_train_state
+
+        cfg = configs.get_tiny_config("olmo-1b")
+        params, opt = init_train_state(jax.random.PRNGKey(0), cfg,
+                                       TrainConfig(remat="none"))
+        m8 = make_mesh((2, 4), ("data", "model"))
+        m2 = make_mesh((1, 2), ("data", "model"))
+        state = {"params": params, "opt": opt}
+        s8 = elastic.reshard(state, cfg, m8)
+        pl = elastic.plan(s8, cfg, m8, m2)
+        s2 = elastic.reshard(s8, cfg, m2)
+        d = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(state["params"]),
+                                jax.tree.leaves(s2["params"])))
+        print(json.dumps({"d": d, "fits": pl.fits,
+                          "grew": pl.bytes_per_device_to >
+                                  pl.bytes_per_device_from}))
+    """)
+    r = json.loads(out.strip().splitlines()[-1])
+    assert r["d"] == 0.0          # resharding is lossless
+    assert r["grew"]              # fewer devices → more bytes per device
+
+
+def test_dryrun_cell_end_to_end():
+    """The dry-run driver itself (lower+compile+analyze) on a small cell."""
+    out = run_py("""
+        import json
+        from repro.launch import dryrun
+        r = dryrun.run_cell("xlstm-350m", "long_500k", multi_pod=False,
+                            verbose=False)
+        print(json.dumps({"status": r["status"],
+                          "fits": r["fits_hbm"],
+                          "has_flops": r["flops_per_device"] > 0,
+                          "chips": r["n_chips"]}))
+    """, devices=512)
+    r = json.loads(out.strip().splitlines()[-1])
+    assert r == {"status": "ok", "fits": True, "has_flops": True,
+                 "chips": 256}
+
+
+def test_moe_paths_numerically_identical():
+    """All three MoE dispatch implementations (local scatter, a2a-EP,
+    psum-EP) produce identical outputs on drop-free inputs."""
+    out = run_py("""
+        import dataclasses, json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import configs
+        from repro.models import moe as moe_mod
+        from repro.models import moe_sharded
+        from repro.distributed.context import use_rules
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        cfg = dataclasses.replace(
+            configs.get_tiny_config("phi3.5-moe-42b-a6.6b"),
+            capacity_factor=16.0)
+        key = jax.random.PRNGKey(0)
+        p = moe_mod.init_moe(key, cfg, jnp.float32)
+        rules = {"experts": "model", "batch": ("data",)}
+        diffs = {}
+        for T, which in ((64, "a2a"), (6, "psum"), (1, "psum")):
+            x = jax.random.normal(key, (T, cfg.d_model), jnp.float32)
+            ref, _ = jax.jit(lambda x: moe_mod.moe_ffn(x, p, cfg))(x)
+            with use_rules(mesh, rules) as ctx:
+                if which == "a2a":
+                    assert moe_sharded.sharded_applicable(cfg, ctx, T)
+                    out, _ = jax.jit(lambda x: moe_sharded.moe_ffn_sharded(
+                        x, p, cfg, ctx))(x)
+                else:
+                    assert moe_sharded.psum_applicable(cfg, ctx, T)
+                    out, _ = jax.jit(lambda x: moe_sharded.moe_ffn_psum(
+                        x, p, cfg, ctx))(x)
+            diffs[f"{which}_{T}"] = float(np.abs(
+                np.asarray(out) - np.asarray(ref)).max())
+        print(json.dumps(diffs))
+    """)
+    r = json.loads(out.strip().splitlines()[-1])
+    assert all(v < 1e-5 for v in r.values()), r

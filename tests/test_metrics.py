@@ -1,0 +1,57 @@
+"""Eyerman multi-program metrics (Eq 1-2) on hand-computed examples."""
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.core.task import Task
+
+
+def done_task(tid, priority, single, multi, arrival=0.0):
+    t = Task(tid=tid, model="m", priority=priority, arrival=arrival, batch=1,
+             node_times=np.asarray([single]),
+             node_out_bytes=np.asarray([1024]),
+             predicted_total=single)
+    t.completion = arrival + multi
+    return t
+
+
+def test_antt_and_stp():
+    a = done_task(0, 3, single=1.0, multi=2.0)   # NTT 2
+    b = done_task(1, 3, single=1.0, multi=4.0)   # NTT 4
+    assert metrics.antt([a, b]) == pytest.approx(3.0)
+    assert metrics.stp([a, b]) == pytest.approx(0.5 + 0.25)
+
+
+def test_stp_upper_bound_is_n():
+    ts = [done_task(i, 3, 1.0, 1.0) for i in range(4)]
+    assert metrics.stp(ts) == pytest.approx(4.0)
+
+
+def test_fairness_perfect_when_slowdown_matches_priority():
+    # PP_i = (C_s/C_m) / (prio_i / sum_prio); equal PP → fairness 1
+    a = done_task(0, 9, single=1.0, multi=1.0 / 0.9)   # progress 0.9
+    b = done_task(1, 1, single=1.0, multi=1.0 / 0.1)   # progress 0.1
+    assert metrics.fairness([a, b]) == pytest.approx(1.0)
+
+
+def test_fairness_degrades_with_skew():
+    a = done_task(0, 3, 1.0, 1.0)
+    b = done_task(1, 3, 1.0, 10.0)
+    assert metrics.fairness([a, b]) == pytest.approx(0.1)
+
+
+def test_sla_violation_rate():
+    ts = [done_task(0, 3, 1.0, 3.0), done_task(1, 3, 1.0, 5.0)]
+    assert metrics.sla_violation_rate(ts, 4.0) == pytest.approx(0.5)
+    assert metrics.sla_violation_rate(ts, 6.0) == 0.0
+    assert metrics.sla_violation_rate(ts, 2.0) == 1.0
+
+
+def test_tail_latency_high_priority_only():
+    ts = [done_task(0, 9, 1.0, 2.0), done_task(1, 1, 1.0, 50.0)]
+    assert metrics.tail_latency_ratio(ts) == pytest.approx(2.0)
+
+
+def test_aggregate_means():
+    r = metrics.aggregate([{"a": 1.0, "b": 2.0}, {"a": 3.0, "b": 4.0}])
+    assert r == {"a": 2.0, "b": 3.0}

@@ -1,0 +1,70 @@
+"""Preemption mechanisms + Algorithm 3 dynamic selection."""
+import numpy as np
+import pytest
+
+from repro.core.preemption import (Mechanism, checkpoint_latency,
+                                   select_mechanism)
+from repro.core.task import Task
+from repro.hw import PAPER_NPU
+
+
+def mk_task(tid, total=10e-3, predicted=None, out_bytes=1 << 20, n=10):
+    return Task(tid=tid, model="m", priority=3, arrival=0.0, batch=1,
+                node_times=np.full(n, total / n),
+                node_out_bytes=np.full(n, out_bytes, dtype=np.int64),
+                predicted_total=predicted if predicted is not None else total)
+
+
+def test_checkpoint_latency_scales_with_state():
+    small = mk_task(0, out_bytes=1 << 20)
+    big = mk_task(1, out_bytes=8 << 20)
+    assert checkpoint_latency(big, PAPER_NPU) == pytest.approx(
+        8 * checkpoint_latency(small, PAPER_NPU))
+    # bounded by UBUF capacity (8 MB): larger states don't cost more
+    huge = mk_task(2, out_bytes=64 << 20)
+    assert checkpoint_latency(huge, PAPER_NPU) == pytest.approx(
+        checkpoint_latency(big, PAPER_NPU))
+
+
+def test_checkpoint_latency_microseconds_scale():
+    # paper: worst case ~tens of µs when the full 8MB UBUF is spilled
+    t = mk_task(0, out_bytes=8 << 20)
+    lat = checkpoint_latency(t, PAPER_NPU)
+    assert 5e-6 < lat < 100e-6
+
+
+def test_algorithm3_drains_nearly_finished_task():
+    running = mk_task(0, total=10e-3)
+    running.executed = 9.5e-3           # almost done
+    cand = mk_task(1, total=10e-3)      # full job ahead
+    assert select_mechanism(running, cand) is Mechanism.DRAIN
+
+
+def test_algorithm3_checkpoints_long_running_task():
+    running = mk_task(0, total=100e-3)
+    running.executed = 10e-3            # long way to go
+    cand = mk_task(1, total=5e-3)       # short job
+    assert select_mechanism(running, cand) is Mechanism.CHECKPOINT
+
+
+def test_algorithm3_uses_predicted_not_actual():
+    running = mk_task(0, total=100e-3, predicted=1e-3)  # predictor thinks done
+    running.executed = 0.9e-3
+    cand = mk_task(1, total=50e-3, predicted=50e-3)
+    assert select_mechanism(running, cand) is Mechanism.DRAIN
+
+
+def test_kill_resets_progress():
+    t = mk_task(0)
+    t.executed = 5e-3
+    t.reset_progress()
+    assert t.executed == 0.0 and t.remaining == pytest.approx(10e-3)
+
+
+def test_current_node_tracking():
+    t = mk_task(0, total=10e-3, n=10)
+    assert t.current_node() == 0
+    t.executed = 3.5e-3
+    assert t.current_node() == 3
+    t.executed = 10e-3
+    assert t.current_node() == 9

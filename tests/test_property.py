@@ -1,0 +1,97 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics
+from repro.core.ops import GemmOp
+from repro.core.predictor import LengthRegressor, gemm_time
+from repro.core.scheduler import make_policy, token_threshold
+from repro.core.simulator import NPUSimulator, SimConfig
+from repro.core.task import Task, TaskState
+from repro.hw import PAPER_NPU
+
+
+def mk_task(tid, priority, arrival, total, predicted):
+    n = 8
+    return Task(tid=tid, model=f"m{tid}", priority=priority, arrival=arrival,
+                batch=1, node_times=np.full(n, total / n),
+                node_out_bytes=np.full(n, 1 << 18, dtype=np.int64),
+                predicted_total=predicted)
+
+
+workload = st.lists(
+    st.tuples(st.sampled_from([1, 3, 9]),              # priority
+              st.floats(0.0, 50e-3),                   # arrival
+              st.floats(0.5e-3, 40e-3),                # actual total
+              st.floats(0.8, 1.25)),                   # prediction error
+    min_size=1, max_size=8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(w=workload,
+       policy=st.sampled_from(["fcfs", "hpf", "sjf", "token", "prema"]),
+       preemptive=st.booleans(),
+       mech=st.sampled_from(["checkpoint", "kill", "drain", "dynamic"]))
+def test_simulator_always_completes_everything(w, policy, preemptive, mech):
+    """Liveness: every workload completes under every policy/mechanism,
+    NTT >= 1 (up to tile rounding), STP <= n."""
+    tasks = [mk_task(i, p, a, t, t * e) for i, (p, a, t, e) in enumerate(w)]
+    sim = NPUSimulator(PAPER_NPU, make_policy(policy, preemptive),
+                       SimConfig(mechanism=mech))
+    done = sim.run(tasks)
+    assert all(t.state == TaskState.DONE for t in done)
+    assert all(t.ntt >= 0.999 for t in done)
+    assert metrics.stp(done) <= len(done) + 1e-9
+    assert 0 < metrics.fairness(done) <= 1.0 + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(pairs=st.lists(st.tuples(st.integers(1, 50), st.integers(1, 200)),
+                      min_size=1, max_size=100),
+       query=st.integers(1, 60))
+def test_length_regressor_bounded_by_profile(pairs, query):
+    reg = LengthRegressor().fit(pairs)
+    outs = [o for _, o in pairs]
+    pred = reg.predict(query)
+    assert min(outs) - 1e-9 <= pred <= max(outs) + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(1, 512), k=st.integers(1, 512), n=st.integers(1, 4096),
+       rep=st.integers(1, 8))
+def test_gemm_time_positive_and_linear_in_repeat(m, k, n, rep):
+    one = gemm_time(GemmOp(m, k, n), PAPER_NPU)
+    many = gemm_time(GemmOp(m, k, n, repeat=rep), PAPER_NPU)
+    assert one > 0
+    assert many == pytest.approx(rep * one, rel=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(tokens=st.lists(st.floats(0.1, 100.0), min_size=1, max_size=10))
+def test_token_threshold_is_a_priority_level(tokens):
+    tasks = []
+    for i, tk in enumerate(tokens):
+        t = mk_task(i, 3, 0.0, 1e-3, 1e-3)
+        t.tokens = tk
+        tasks.append(t)
+    thr = token_threshold(tasks)
+    assert thr in (1.0, 3.0, 9.0)
+    assert thr <= max(max(tokens), 1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ntts=st.lists(st.floats(1.0, 100.0), min_size=2, max_size=10))
+def test_metric_relationships(ntts):
+    tasks = []
+    for i, v in enumerate(ntts):
+        t = mk_task(i, 3, 0.0, 1e-3, 1e-3)
+        t.completion = v * 1e-3
+        tasks.append(t)
+    antt = metrics.antt(tasks)
+    stp = metrics.stp(tasks)
+    assert antt >= 1.0 - 1e-9
+    # STP and ANTT are consistent: stp <= n / antt is false in general,
+    # but stp <= n and stp >= n / max(ntt)
+    assert stp <= len(tasks) + 1e-9
+    assert stp >= len(tasks) / max(ntts) - 1e-9

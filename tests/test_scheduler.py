@@ -1,0 +1,78 @@
+"""Scheduling-policy unit tests (Algorithm 2 mechanics)."""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import (PREMA, SJF, TokenFCFS, accrue_tokens,
+                                  make_policy, token_threshold)
+from repro.core.task import Task
+
+
+def mk_task(tid, priority=3, arrival=0.0, total=10e-3, predicted=None):
+    times = np.full(10, total / 10)
+    t = Task(tid=tid, model="m", priority=priority, arrival=arrival,
+             batch=1, node_times=times,
+             node_out_bytes=np.full(10, 1 << 20, dtype=np.int64),
+             predicted_total=predicted if predicted is not None else total)
+    return t
+
+
+def test_initial_tokens_equal_priority():
+    for p in (1, 3, 9):
+        assert mk_task(0, priority=p).tokens == p
+
+
+def test_token_threshold_rounds_down():
+    # paper example: max tokens 8 → threshold 3 (not 9)
+    a, b = mk_task(0, 1), mk_task(1, 3)
+    a.tokens, b.tokens = 8.0, 2.0
+    assert token_threshold([a, b]) == 3
+    a.tokens = 9.5
+    assert token_threshold([a, b]) == 9
+    a.tokens = 2.9
+    assert token_threshold([a, b]) == 1
+
+
+def test_accrual_proportional_to_priority_and_slowdown():
+    lo = mk_task(0, priority=1, total=10e-3)
+    hi = mk_task(1, priority=9, total=10e-3)
+    short = mk_task(2, priority=1, total=1e-3)
+    accrue_tokens([lo, hi, short], now=10e-3)  # all idle for 10 ms
+    assert hi.tokens - 9 == pytest.approx(9.0 * (10e-3 / 10e-3))
+    assert lo.tokens - 1 == pytest.approx(1.0)
+    # short task slowed down 10x its isolated time → more tokens
+    assert short.tokens - 1 == pytest.approx(10.0)
+    # second accrual from the same instant adds nothing
+    accrue_tokens([lo], now=10e-3)
+    assert lo.tokens == pytest.approx(2.0)
+
+
+def test_prema_selects_shortest_candidate():
+    pol = PREMA()
+    a = mk_task(0, priority=9, total=50e-3)   # high prio, long
+    b = mk_task(1, priority=9, total=5e-3)    # high prio, short
+    c = mk_task(2, priority=1, total=1e-3)    # low prio (below threshold)
+    sel = pol.select([a, b, c], 0.0, None)
+    assert sel is b  # among >=9-token candidates, shortest job
+
+
+def test_token_policy_fcfs_among_candidates():
+    pol = TokenFCFS()
+    a = mk_task(0, priority=9, arrival=2.0)
+    b = mk_task(1, priority=9, arrival=1.0)
+    c = mk_task(2, priority=1, arrival=0.0)
+    assert pol.select([a, b, c], 0.0, None) is b
+
+
+def test_sjf_uses_predicted_remaining():
+    pol = SJF()
+    a = mk_task(0, total=10e-3)
+    b = mk_task(1, total=20e-3)
+    b.executed = 15e-3  # remaining 5ms < a's 10ms
+    assert pol.select([a, b], 0.0, None) is b
+
+
+@pytest.mark.parametrize("name", ["fcfs", "rrb", "hpf", "sjf", "token",
+                                  "prema"])
+def test_factory(name):
+    pol = make_policy(name, preemptive=True)
+    assert pol.name == name and pol.preemptive

@@ -1,0 +1,119 @@
+"""Serving engine: bit-exact preemption, scheduling behaviour under
+contention, KV-manager offload accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import get_model
+from repro.serving import (InferenceRequest, KVCacheManager,
+                           PreemptibleExecutor, ServingEngine)
+
+
+@pytest.fixture(scope="module")
+def tiny_models(key):
+    out = {}
+    for name in ("olmo-1b", "qwen3-moe-30b-a3b"):
+        m = get_model(name, tiny=True)
+        out[name] = (m, m.init_params(key))
+    return out
+
+
+def test_preempt_resume_bit_exact(key):
+    m = get_model("qwen3-8b", tiny=True)
+    ex = PreemptibleExecutor(m, m.init_params(key))
+    prompt = np.array([[5, 7, 9, 11, 2, 4, 6, 8]], np.int32)
+    batch = {"tokens": jnp.asarray(prompt)}
+    ref = ex.run_uninterrupted(batch, max_new_tokens=6)
+
+    st = ex.start(batch)
+    while st.phase == "prefill":
+        st = ex.step(st)
+        st = PreemptibleExecutor.restore(PreemptibleExecutor.checkpoint(st))
+    while st.phase == "decode" and len(st.tokens_out) < 6:
+        st = ex.step(st)
+        st = PreemptibleExecutor.restore(PreemptibleExecutor.checkpoint(st))
+    assert np.array_equal(np.stack(ref.tokens_out, 1),
+                          np.stack(st.tokens_out, 1))
+
+
+def test_checkpoint_context_bytes_positive(key):
+    m = get_model("olmo-1b", tiny=True)
+    ex = PreemptibleExecutor(m, m.init_params(key))
+    st = ex.start({"tokens": jnp.zeros((1, 8), jnp.int32)})
+    st = ex.step(st)
+    assert st.context_bytes() > 0
+    assert st.cache_bytes() > 0
+
+
+def _requests(rng, n=8, window=1e-4):
+    reqs = []
+    for i in range(n):
+        arch = ["olmo-1b", "qwen3-moe-30b-a3b"][i % 2]
+        plen = int(rng.integers(4, 12))
+        reqs.append(InferenceRequest(
+            rid=i, arch=arch,
+            prompt=rng.integers(1, 200, (1, plen)).astype(np.int32),
+            max_new_tokens=6, priority=int(rng.choice([1, 3, 9])),
+            arrival=float(rng.uniform(0, window)),
+            true_decode_len=int(rng.integers(2, 7))))
+    return reqs
+
+
+def test_engine_completes_all_and_tokens_match_isolated(tiny_models, rng):
+    reqs = _requests(rng)
+    eng = ServingEngine(tiny_models, policy="prema", mechanism="dynamic")
+    results = eng.run(reqs)
+    assert len(results) == len(reqs)
+    # tokens must equal an isolated (uncontended) run of the same request:
+    # preemption may never alter model outputs
+    for r in results:
+        req = next(q for q in reqs if q.rid == r.rid)
+        model, params = tiny_models[r.arch]
+        ex = PreemptibleExecutor(model, params)
+        iso = ex.run_uninterrupted({"tokens": jnp.asarray(req.prompt)},
+                                   max_new_tokens=r.tokens.shape[1])
+        assert np.array_equal(np.stack(iso.tokens_out[:r.tokens.shape[1]], 1),
+                              r.tokens), r.rid
+
+
+def test_engine_prema_helps_high_priority_under_contention(tiny_models):
+    rng = np.random.default_rng(3)
+    reqs = _requests(rng, n=10, window=1e-6)  # near-simultaneous arrivals
+    fcfs = ServingEngine(tiny_models, policy="fcfs", preemptive=False,
+                         mechanism="drain")
+    fcfs.run([InferenceRequest(**{**r.__dict__}) for r in reqs])
+    prema = ServingEngine(tiny_models, policy="prema", mechanism="dynamic")
+    prema.run([InferenceRequest(**{**r.__dict__}) for r in reqs])
+
+    def high_ntt(engine):
+        vals = [x.ntt for x in engine.completed if x.priority == 9]
+        return float(np.mean(vals)) if vals else 1.0
+
+    # PREMA must help high-priority latency and not wreck overall ANTT
+    # (small slack: tiny workloads make individual schedules noisy)
+    assert high_ntt(prema) <= high_ntt(fcfs) * 1.05 + 1e-9
+    assert prema.summary()["antt"] <= fcfs.summary()["antt"] * 1.3 + 1e-9
+
+
+def test_engine_straggler_hook(tiny_models, rng):
+    reqs = _requests(rng, n=4)
+    slow = ServingEngine(tiny_models, policy="prema", mechanism="dynamic",
+                         straggler_factor=lambda rid, node: 3.0 if rid == 0
+                         else 1.0)
+    slow.run(reqs)
+    assert len(slow.completed) == 4
+
+
+def test_kv_manager_offload_and_fetch():
+    kv = KVCacheManager(capacity_bytes=1000, pcie_bw=1e9, hide_fraction=0.0)
+    assert kv.register(1, 600, now=0.0) == 0.0
+    lat = kv.register(2, 600, now=1.0)       # over capacity → evict rid 1
+    assert lat == pytest.approx(600 / 1e9)
+    assert kv.stats["offloads"] == 1
+    fetch = kv.touch(1, now=2.0)              # bring rid 1 back
+    assert fetch == pytest.approx(600 / 1e9)
+    assert kv.stats["fetches"] == 1
+    kv.release(1)
+    kv.release(2)
+    assert kv.device_bytes == 0

@@ -1,0 +1,106 @@
+"""Event-driven simulator behaviour (paper §IV/§VI dynamics)."""
+import numpy as np
+import pytest
+
+from repro.core import metrics, trace
+from repro.core.predictor import Predictor
+from repro.core.scheduler import make_policy
+from repro.core.simulator import NPUSimulator, SimConfig
+from repro.core.task import Task, TaskState
+from repro.hw import PAPER_NPU
+
+
+def mk_task(tid, priority, arrival, total, n=20, predicted=None):
+    return Task(tid=tid, model=f"m{tid}", priority=priority, arrival=arrival,
+                batch=1, node_times=np.full(n, total / n),
+                node_out_bytes=np.full(n, 1 << 20, dtype=np.int64),
+                predicted_total=predicted if predicted is not None else total)
+
+
+def run(tasks, policy="fcfs", preemptive=False, mech="checkpoint"):
+    sim = NPUSimulator(PAPER_NPU, make_policy(policy, preemptive),
+                       SimConfig(mechanism=mech))
+    return sim.run(tasks)
+
+
+def test_all_tasks_complete_and_ntt_ge_1():
+    tasks = [mk_task(i, 3, i * 1e-3, 5e-3) for i in range(5)]
+    done = run(tasks)
+    assert all(t.state == TaskState.DONE for t in done)
+    assert all(t.ntt >= 0.999 for t in done)
+
+
+def test_isolated_task_has_ntt_1():
+    done = run([mk_task(0, 3, 0.0, 5e-3)])
+    assert done[0].ntt == pytest.approx(1.0, rel=1e-6)
+
+
+def test_fcfs_serializes_in_arrival_order():
+    a = mk_task(0, 1, 0.0, 10e-3)
+    b = mk_task(1, 9, 1e-3, 1e-3)   # higher priority but arrives later
+    done = run([a, b], "fcfs")
+    assert done[0].completion < done[1].completion
+    assert done[1].completion == pytest.approx(11e-3, rel=1e-3)
+
+
+def test_preemptive_hpf_lets_high_priority_jump_queue():
+    a = mk_task(0, 1, 0.0, 20e-3)
+    b = mk_task(1, 9, 1e-3, 2e-3)
+    done_np = run([mk_task(0, 1, 0.0, 20e-3), mk_task(1, 9, 1e-3, 2e-3)],
+                  "hpf", preemptive=False)
+    done_p = run([a, b], "hpf", preemptive=True, mech="checkpoint")
+    ntt_np = done_np[1].ntt
+    ntt_p = done_p[1].ntt
+    assert ntt_p < ntt_np          # preemption reduces high-prio latency
+    assert done_p[0].n_preemptions >= 1
+
+
+def test_checkpoint_preserves_progress_kill_discards():
+    def workload():
+        return [mk_task(0, 1, 0.0, 20e-3), mk_task(1, 9, 10e-3, 2e-3)]
+    done_c = run(workload(), "hpf", True, "checkpoint")
+    done_k = run(workload(), "hpf", True, "kill")
+    # victim with KILL must redo the ~10ms it had completed
+    assert done_k[0].completion > done_c[0].completion + 5e-3
+    assert done_k[0].n_kills == 1
+    assert done_c[0].n_preemptions == 1
+    # checkpoint victim paid spill+restore overhead
+    assert done_c[0].checkpoint_overhead > 0
+
+
+def test_preemption_latency_negligible_vs_inference_time():
+    """The paper's key §IV-E observation: checkpoint overhead is µs-scale
+    against ms-scale jobs (<2.6% of execution)."""
+    tasks = [mk_task(i, p, 0.0, 10e-3) for i, p in enumerate([1, 3, 9, 9])]
+    done = run(tasks, "prema", True, "dynamic")
+    for t in done:
+        assert t.checkpoint_overhead <= 0.05 * t.isolated_time
+
+
+def test_drain_mechanism_never_preempts():
+    a = mk_task(0, 1, 0.0, 20e-3)
+    b = mk_task(1, 9, 1e-3, 2e-3)
+    done = run([a, b], "hpf", True, "drain")
+    assert done[0].n_preemptions == 0
+    assert done[0].completion < done[1].completion
+
+
+def test_prema_beats_fcfs_on_random_workloads(paper_predictor):
+    rng = np.random.default_rng(7)
+    antt_f, antt_p = [], []
+    for seed in range(3):
+        r = np.random.default_rng(seed)
+        tasks = trace.make_workload(paper_predictor, r, n_tasks=8)
+        f = run(trace.clone_tasks(tasks), "fcfs", False, "drain")
+        p = run(trace.clone_tasks(tasks), "prema", True, "dynamic")
+        antt_f.append(metrics.antt(f))
+        antt_p.append(metrics.antt(p))
+    assert np.mean(antt_p) < 0.5 * np.mean(antt_f)
+
+
+def test_tile_boundary_rounding():
+    t = mk_task(0, 1, 0.0, 20e-3)
+    t.node_tile_times = np.full(20, 1e-6)
+    b = mk_task(1, 9, 5e-3, 2e-3)
+    done = run([t, b], "hpf", True, "checkpoint")
+    assert done[0].state == TaskState.DONE  # rounding never deadlocks

@@ -1,0 +1,103 @@
+"""Training substrate: convergence, grad-accum equivalence, compression,
+optimizer schedule, data determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.training import (DataConfig, OptConfig, TokenDataset, TrainConfig,
+                            init_train_state, make_train_step)
+from repro.training.compression import (compress_with_feedback,
+                                        dequantize_int8, init_error_feedback,
+                                        quantize_int8)
+from repro.training.optimizer import lr_at
+
+
+def _setup(arch="olmo-1b", ga=1, compress=False, key=None):
+    cfg = configs.get_tiny_config(arch)
+    tcfg = TrainConfig(opt=OptConfig(peak_lr=1e-2, warmup_steps=2,
+                                     total_steps=50),
+                       remat="none", grad_accum=ga, compress_grads=compress)
+    params, opt = init_train_state(key, cfg, tcfg)
+    data = TokenDataset(DataConfig(seq_len=16, global_batch=8), cfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    return cfg, step, params, opt, data
+
+
+def test_loss_decreases(key):
+    cfg, step, params, opt, data = _setup(key=key)
+    losses = []
+    for i in range(12):
+        params, opt, m = step(params, opt, data.batch_at(0))  # memorize
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.9
+
+
+def test_grad_accum_matches_single_batch(key):
+    """accum over 2 microbatches == one full-batch step (same data)."""
+    cfg = configs.get_tiny_config("olmo-1b")
+    t1 = TrainConfig(remat="none", grad_accum=1)
+    t2 = TrainConfig(remat="none", grad_accum=2)
+    p1, o1 = init_train_state(key, cfg, t1)
+    p2, o2 = init_train_state(key, cfg, t2)
+    data = TokenDataset(DataConfig(seq_len=16, global_batch=8), cfg)
+    batch = data.batch_at(0)
+    p1n, _, m1 = jax.jit(make_train_step(cfg, t1))(p1, o1, batch)
+    p2n, _, m2 = jax.jit(make_train_step(cfg, t2))(p2, o2, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(p1n), jax.tree.leaves(p2n)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_compressed_training_still_converges(key):
+    cfg, step, params, opt, data = _setup(compress=True, key=key)
+    losses = []
+    for i in range(12):
+        params, opt, m = step(params, opt, data.batch_at(0))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.9
+
+
+def test_quantize_roundtrip_error_bounded(key):
+    x = jax.random.normal(key, (1000,), jnp.float32) * 5
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s, x.shape)
+    err = np.abs(np.asarray(back - x))
+    assert err.max() <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+
+
+def test_error_feedback_is_lossless_in_aggregate(key):
+    """Sum of quantized grads + final residual == sum of true grads."""
+    g = jax.random.normal(key, (512,), jnp.float32)
+    grads = {"w": g}
+    err = init_error_feedback(grads)
+    total = jnp.zeros_like(g)
+    for _ in range(5):
+        qg, err = compress_with_feedback(grads, err)
+        total = total + qg["w"]
+    np.testing.assert_allclose(np.asarray(total + err["w"]),
+                               np.asarray(5 * g), rtol=1e-4, atol=1e-4)
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                    min_lr_frac=0.1)
+    assert float(lr_at(jnp.int32(0), cfg)) == 0.0
+    assert float(lr_at(jnp.int32(10), cfg)) == pytest.approx(1.0, abs=1e-3)
+    assert float(lr_at(jnp.int32(100), cfg)) == pytest.approx(0.1, abs=1e-3)
+    assert float(lr_at(jnp.int32(55), cfg)) < 1.0
+
+
+def test_data_pipeline_deterministic_and_sharded():
+    cfg = configs.get_tiny_config("olmo-1b")
+    d1 = TokenDataset(DataConfig(seq_len=16, global_batch=8, seed=5), cfg)
+    d2 = TokenDataset(DataConfig(seq_len=16, global_batch=8, seed=5), cfg)
+    b1, b2 = d1.batch_at(17), d2.batch_at(17)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(b1["tokens"], d1.batch_at(18)["tokens"])
+    # labels are next-token shifted view of the same stream
+    sh = d1.shard_for(b1, host_idx=1, n_hosts=4)
+    assert sh["tokens"].shape == (2, 16)
+    assert np.array_equal(sh["tokens"], b1["tokens"][2:4])
