@@ -1,0 +1,25 @@
+# Tier-1 verification and benchmark smoke for the PREMA reproduction.
+#
+#   make test         - full test suite (tier-1 gate)
+#   make test-fast    - scheduling-core tests only (no model execution)
+#   make bench-smoke  - cluster-scaling benchmark, CI-sized sweep
+#   make bench        - every figure-reproduction benchmark + cluster sweep
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench-smoke bench
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+test-fast:
+	$(PYTHON) -m pytest -x -q tests/test_arbiter.py tests/test_cluster.py \
+	    tests/test_scheduler.py tests/test_simulator.py tests/test_metrics.py
+
+bench-smoke:
+	$(PYTHON) benchmarks/cluster_scaling.py --smoke
+
+bench:
+	$(PYTHON) benchmarks/run.py
+	$(PYTHON) benchmarks/cluster_scaling.py

@@ -1,0 +1,144 @@
+"""Cluster scaling: policy x mechanism x device-count sweep.
+
+Beyond-the-paper benchmark (the paper stops at one NPU): the same PREMA
+scheduling core (core/arbiter.py) drives an N-device cluster
+(core/cluster.py) over the paper's Table-I NPU and 8-DNN workload suite.
+For each (policy, mechanism, n_devices in {1,2,4,8}) configuration the
+sweep reports
+
+* latency  — ANTT (Eq 1) and high-priority p95 tail NTT,
+* throughput — completed tasks / makespan second, and STP,
+* SLA      — violation rate at 4x isolated time,
+* cluster health — mean device utilization and checkpoint migrations.
+
+The offered load scales with the cluster (``tasks_per_device`` per
+device) so device counts are compared at constant per-device pressure.
+
+Parity guarantee (acceptance criterion): before sweeping, the benchmark
+asserts that ``ClusterSimulator`` with ``n_devices=1`` reproduces the
+single-NPU ``NPUSimulator`` *bit-identically* for PREMA on the same trace
+— i.e. the multi-device generalization did not move the paper's numbers.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/cluster_scaling.py            # full
+    PYTHONPATH=src python benchmarks/cluster_scaling.py --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# allow `python benchmarks/cluster_scaling.py` from anywhere, even
+# without PYTHONPATH=src: make both `benchmarks` and `repro` importable
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks import common
+from repro.core import metrics, trace
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.scheduler import POLICY_NAMES, make_policy
+from repro.core.simulator import NPUSimulator, SimConfig
+from repro.hw import PAPER_NPU
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+MECHANISMS = ("checkpoint", "kill", "drain", "dynamic")
+TASKS_PER_DEVICE = 8
+
+
+def _workloads(n_runs: int, n_tasks: int, seed0: int = 4000,
+               n_devices: int = 1):
+    """``tasks_per_device`` jobs per device, with the arrival window
+    scaled by 1/n_devices so per-device contention is constant across
+    cluster sizes (the window is a fraction of the *parallel* makespan,
+    not the serial one)."""
+    pred = common.predictor()
+    return [trace.make_workload(pred, np.random.default_rng(seed0 + s),
+                                n_tasks=n_tasks,
+                                contention=0.5 / n_devices)
+            for s in range(n_runs)]
+
+
+def run_config(tasks, policy: str, mechanism: str, n_devices: int,
+               placement: str = "affinity") -> Dict[str, float]:
+    sim = ClusterSimulator(
+        PAPER_NPU, make_policy(policy, preemptive=True),
+        ClusterConfig(mechanism=mechanism, n_devices=n_devices,
+                      placement=placement))
+    sim.run(trace.clone_tasks(tasks))
+    return sim.summary()
+
+
+def assert_single_device_parity(n_tasks: int = 8, n_runs: int = 3) -> None:
+    """device-count=1 PREMA must match the single-NPU simulator exactly."""
+    for tasks in _workloads(n_runs, n_tasks, seed0=7000):
+        ref = NPUSimulator(PAPER_NPU, make_policy("prema", True),
+                           SimConfig(mechanism="dynamic")).run(
+                               trace.clone_tasks(tasks))
+        sim = ClusterSimulator(PAPER_NPU, make_policy("prema", True),
+                               ClusterConfig(mechanism="dynamic",
+                                             n_devices=1))
+        got = sim.run(trace.clone_tasks(tasks))
+        ref_fp = sorted((t.tid, t.completion, t.n_preemptions) for t in ref)
+        got_fp = sorted((t.tid, t.completion, t.n_preemptions) for t in got)
+        assert got_fp == ref_fp, "cluster(n=1) diverged from single-NPU sim"
+
+
+def sweep(policies, mechanisms, device_counts, n_runs,
+          placement: str = "affinity") -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    for nd in device_counts:
+        ws = _workloads(n_runs, TASKS_PER_DEVICE * nd, n_devices=nd)
+        for pol in policies:
+            for mech in mechanisms:
+                t0 = time.perf_counter()
+                runs = [run_config(tasks, pol, mech, nd, placement)
+                        for tasks in ws]
+                us = (time.perf_counter() - t0) / len(runs) * 1e6
+                agg = metrics.aggregate(runs)
+                tag = f"cluster.{pol}.{mech}.d{nd}"
+                rows.append((f"{tag}.antt", us, f"{agg['antt']:.3f}"))
+                rows.append((f"{tag}.stp", 0.0, f"{agg['stp']:.3f}"))
+                rows.append((f"{tag}.throughput_tps", 0.0,
+                             f"{agg['throughput']:.1f}"))
+                rows.append((f"{tag}.tail95_high", 0.0,
+                             f"{agg['tail95_high']:.3f}"))
+                rows.append((f"{tag}.sla_viol@4", 0.0,
+                             f"{agg['sla_viol@4']:.3f}"))
+                rows.append((f"{tag}.util_mean", 0.0,
+                             f"{agg['util_mean']:.3f}"))
+                rows.append((f"{tag}.migrations", 0.0,
+                             f"{agg['migrations']:.1f}"))
+    return rows
+
+
+def run(smoke: bool = False) -> List[Tuple[str, float, str]]:
+    """Entry point for benchmarks/run.py (full sweep) and --smoke (CI)."""
+    assert_single_device_parity()
+    rows = [("cluster.parity.prema_d1_vs_single_npu", 0.0, "exact")]
+    if smoke:
+        rows += sweep(("fcfs", "prema"), ("dynamic",), (1, 2, 4, 8),
+                      n_runs=2)
+    else:
+        rows += sweep(POLICY_NAMES, MECHANISMS, DEVICE_COUNTS, n_runs=5)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep for CI (policies fcfs/prema, "
+                         "dynamic mechanism, 2 workloads per point)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    common.emit(run(smoke=args.smoke))
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,7 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (common, fig5_fig6_mechanisms,
+    from benchmarks import (cluster_scaling, common, fig5_fig6_mechanisms,
                             fig11_fig12_policies, fig13_fig14_qos,
                             fig15_kill_sensitivity, pred_accuracy, roofline)
     modules = [
@@ -20,6 +20,7 @@ def main() -> None:
         ("fig15", fig15_kill_sensitivity),
         ("pred_accuracy", pred_accuracy),
         ("roofline", roofline),
+        ("cluster_scaling", cluster_scaling),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

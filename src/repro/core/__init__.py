@@ -1,7 +1,14 @@
 """PREMA core: predictor (Algorithm 1 + LUT), token scheduler (Algorithm 2),
-preemption mechanisms + dynamic selection (Algorithm 3), metrics, and the
-event-driven multi-task simulator."""
-from repro.core.metrics import antt, fairness, stp, summarize  # noqa: F401
+preemption mechanisms + dynamic selection (Algorithm 3), the shared
+scheduling arbiter, metrics, and the event-driven single-NPU and
+multi-NPU-cluster simulators."""
+from repro.core.arbiter import (Action, Arbiter, ArbiterConfig,  # noqa: F401
+                                Decision)
+from repro.core.cluster import (PLACEMENT_NAMES, Cluster,  # noqa: F401
+                                ClusterConfig, ClusterSimulator, DeviceState,
+                                make_placement)
+from repro.core.metrics import (antt, cluster_summary, fairness,  # noqa: F401
+                                per_device_summary, stp, summarize)
 from repro.core.predictor import LengthRegressor, Predictor  # noqa: F401
 from repro.core.preemption import Mechanism, select_mechanism  # noqa: F401
 from repro.core.scheduler import POLICY_NAMES, make_policy  # noqa: F401

@@ -1,0 +1,140 @@
+"""Shared scheduling core: the pick → may_preempt → mechanism sequence.
+
+Both execution layers — the event-driven :class:`~repro.core.simulator.
+NPUSimulator` / :class:`~repro.core.cluster.ClusterSimulator` (virtual
+clock) and the :class:`~repro.serving.engine.ServingEngine` (real JAX
+execution) — used to duplicate the same arbitration logic at every
+scheduler wake-up.  This module extracts it once:
+
+1. **wake-up** — ``policy.on_wake`` (token accrual for token policies,
+   Algorithm 2 line 7) followed by ``policy.select`` over the ready queue;
+2. **may_preempt** — whether the candidate is allowed to displace the
+   running task, a :meth:`repro.core.scheduler.Policy.may_preempt` method
+   (previously a name-string dispatch table);
+3. **mechanism choice** — Algorithm 3 (:func:`repro.core.preemption.
+   select_mechanism`) when ``mechanism='dynamic'``, else the configured
+   static mechanism;
+4. **KILL progress guarantee** — a task may be KILLed only in its early
+   phase (§IV-C: KILL is only a good trade-off "during the early phases of
+   an inference execution") and at most ``max_kills`` times; afterwards
+   preemption requests against it are deferred.
+
+The arbiter only *decides*; carrying the decision out (virtual-clock
+bookkeeping, tile-boundary round-up, checkpoint spills, KV-cache moves,
+real tensor state) stays with the execution layer, which interprets the
+returned :class:`Decision`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+from repro.core import preemption
+from repro.core.preemption import Mechanism
+from repro.core.scheduler import Policy
+from repro.core.task import Task
+
+
+class Action(enum.Enum):
+    IDLE = "idle"          # no candidate (empty queue or policy abstained)
+    START = "start"        # device free: begin/resume the candidate
+    BUSY = "busy"          # device inside a switch-overhead window; retry
+    KEEP = "keep"          # running task continues (no preemption allowed)
+    DRAIN = "drain"        # Algorithm 3 chose DRAIN: let running finish
+    DEFER = "defer"        # KILL progress guarantee blocked the switch
+    PREEMPT = "preempt"    # displace running via ``decision.mechanism``
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    action: Action
+    cand: Optional[Task] = None
+    mechanism: Optional[Mechanism] = None
+
+
+@dataclasses.dataclass
+class ArbiterConfig:
+    """Mechanism selection + KILL progress-guarantee knobs (shared by the
+    simulator's ``SimConfig`` and the serving engine)."""
+    mechanism: str = "dynamic"   # checkpoint | kill | drain | dynamic
+    kill_early_frac: float = 0.5
+    max_kills: int = 4
+
+
+class Arbiter:
+    """One scheduling decision per wake-up, shared by every execution
+    layer.  Stateless apart from the policy it wraps; ``reset()`` clears
+    policy state (e.g. round-robin position) at the start of a run."""
+
+    def __init__(self, policy: Policy, cfg: Optional[ArbiterConfig] = None):
+        self.policy = policy
+        self.cfg = cfg or ArbiterConfig()
+
+    # ------------------------------------------------------------------
+    def reset(self) -> None:
+        """Start-of-run hook: clear per-run policy state so a reused
+        policy object cannot leak decisions across runs."""
+        self.policy.reset()
+
+    def wake(self, ready: List[Task], now: float) -> None:
+        """Per-wake bookkeeping (token accrual).  Call once per wake-up,
+        before any ``pick``/``decide`` at that instant."""
+        self.policy.on_wake(ready, now)
+
+    def pick(self, ready: List[Task], now: float,
+             running: Optional[Task]) -> Optional[Task]:
+        return self.policy.select(ready, now, running)
+
+    # ------------------------------------------------------------------
+    def kill_allowed(self, running: Task) -> bool:
+        """KILL progress guarantee (anti-livelock): early phase only, and
+        a bounded number of times per task."""
+        early = running.executed <= self.cfg.kill_early_frac * max(
+            running.predicted_total, 1e-12)
+        return early and running.n_kills < self.cfg.max_kills
+
+    def arbitrate(self, running: Task, cand: Task) -> Decision:
+        """Steps 2-4 for an already-selected candidate against a running
+        task: may_preempt gate, mechanism choice, KILL guarantee."""
+        dynamic = self.cfg.mechanism == "dynamic"
+        if not self.policy.may_preempt(running, cand, dynamic):
+            return Decision(Action.KEEP, cand)
+        if dynamic:
+            mech = preemption.select_mechanism(running, cand)
+        else:
+            mech = Mechanism(self.cfg.mechanism)
+        if mech is Mechanism.DRAIN:
+            return Decision(Action.DRAIN, cand)
+        if mech is Mechanism.KILL and not self.kill_allowed(running):
+            return Decision(Action.DEFER, cand)
+        return Decision(Action.PREEMPT, cand, mech)
+
+    def decide(self, ready: List[Task], now: float, running: Optional[Task],
+               busy_until: float = 0.0, *, wake: bool = True) -> Decision:
+        """The full per-wake-up sequence for one device (§V-C two-step
+        procedure).  ``busy_until`` is the end of the device's current
+        switch-overhead window (non-preemptible)."""
+        if not ready:
+            return Decision(Action.IDLE)
+        if wake:
+            self.wake(ready, now)
+        cand = self.pick(ready, now, running)
+        if cand is None:
+            return Decision(Action.IDLE)
+        if running is None:
+            if now >= busy_until:
+                return Decision(Action.START, cand)
+            return Decision(Action.BUSY, cand)
+        if not self.policy.preemptive or now < busy_until:
+            return Decision(Action.KEEP, cand)
+        if cand is running:
+            return Decision(Action.KEEP, cand)
+        return self.arbitrate(running, cand)
+
+
+def should_preempt(policy: Policy, running: Task, cand: Task,
+                   dynamic_mech: bool) -> bool:
+    """Back-compat wrapper for the old free function (pre-arbiter API);
+    prefer :meth:`Policy.may_preempt`."""
+    return policy.may_preempt(running, cand, dynamic_mech)

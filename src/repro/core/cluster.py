@@ -1,0 +1,348 @@
+"""Multi-NPU cluster scheduling: N preemptible devices, one global queue.
+
+The paper evaluates PREMA on a single NPU; production serving schedules
+across fleets of accelerators (multi-tenant multi-accelerator systems,
+arXiv:2404.08950).  This module scales the same scheduling core
+(``core/arbiter.py``) to an N-device cluster:
+
+* :class:`DeviceState` — per-device running slot, switch-overhead busy
+  window, and accumulated service time (utilization accounting);
+* :class:`Cluster` — the device set plus a pluggable *placement* policy
+  that maps a selected task onto a concrete device;
+* :class:`ClusterSimulator` — the event-driven N-device generalization of
+  :class:`~repro.core.simulator.NPUSimulator`; with ``n_devices=1`` it is
+  bit-identical to the single-NPU loop (tests/test_cluster.py).
+
+Placement policies
+------------------
+``least_loaded``  pick the free device with the least accumulated busy
+                  time (classic load balancing).
+``affinity``      prefer (1) the device holding the task's checkpoint —
+                  resuming elsewhere pays the cross-device
+                  :func:`~repro.core.preemption.migration_latency` — then
+                  (2) a device that last ran the same model (weights
+                  warm), falling back to least-loaded.
+``random``        uniform-random free device (baseline).
+
+Scheduling works on a *global* ready queue: at every wake-up the policy
+selects a candidate exactly as on one NPU, then placement chooses the
+device; if no device is free, the arbiter considers preempting the
+longest-remaining running task (per-device ``may_preempt`` + Algorithm-3
+mechanism choice + KILL progress guarantee, all shared with the
+single-device path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import metrics, preemption
+from repro.core.arbiter import Action, Arbiter
+from repro.core.preemption import Mechanism
+from repro.core.scheduler import Policy
+from repro.core.simulator import SimConfig, tile_roundup
+from repro.core.task import Task, TaskState
+from repro.hw import HardwareModel
+
+PLACEMENT_NAMES = ("least_loaded", "affinity", "random")
+
+
+@dataclasses.dataclass
+class DeviceState:
+    """One NPU's slot in the cluster."""
+    dev: int
+    running: Optional[Task] = None
+    run_start: float = 0.0        # start of the current execution segment
+    run_gen: int = 0              # invalidates stale completion events
+    busy_until: float = 0.0       # switch-overhead window (non-preemptible)
+    busy_time: float = 0.0        # accumulated service seconds
+    last_model: Optional[str] = None
+
+
+def _least_loaded(free: List[DeviceState]) -> DeviceState:
+    return min(free, key=lambda d: (d.busy_time, d.dev))
+
+
+def place_least_loaded(task: Task, free: List[DeviceState],
+                       rng: np.random.Generator) -> DeviceState:
+    return _least_loaded(free)
+
+
+def place_affinity(task: Task, free: List[DeviceState],
+                   rng: np.random.Generator) -> DeviceState:
+    if task.restore_pending and task.device is not None:
+        home = [d for d in free if d.dev == task.device]
+        if home:
+            return home[0]
+    warm = [d for d in free if d.last_model == task.model]
+    if warm:
+        return _least_loaded(warm)
+    return _least_loaded(free)
+
+
+def place_random(task: Task, free: List[DeviceState],
+                 rng: np.random.Generator) -> DeviceState:
+    return free[int(rng.integers(len(free)))]
+
+
+_PLACEMENTS = {
+    "least_loaded": place_least_loaded,
+    "affinity": place_affinity,
+    "random": place_random,
+}
+
+
+def make_placement(name: str):
+    try:
+        return _PLACEMENTS[name.lower()]
+    except KeyError:
+        raise KeyError(f"unknown placement {name!r}; "
+                       f"choose from {PLACEMENT_NAMES}") from None
+
+
+class Cluster:
+    """Device set + placement; shared by the cluster simulator and the
+    serving engine (which keeps its own job slots but reuses the placement
+    and utilization bookkeeping)."""
+
+    def __init__(self, n_devices: int, placement: str = "least_loaded",
+                 seed: int = 0):
+        if n_devices < 1:
+            raise ValueError("n_devices must be >= 1")
+        self.devices = [DeviceState(d) for d in range(n_devices)]
+        self.placement_name = placement
+        self._place = make_placement(placement)
+        self.rng = np.random.default_rng(seed)
+        self.n_migrations = 0
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def free(self, now: float) -> List[DeviceState]:
+        return [d for d in self.devices
+                if d.running is None and now >= d.busy_until]
+
+    def choose(self, task: Task, free: List[DeviceState]) -> DeviceState:
+        return self._place(task, free, self.rng)
+
+    def busy_times(self) -> List[float]:
+        return [d.busy_time for d in self.devices]
+
+
+@dataclasses.dataclass
+class ClusterConfig(SimConfig):
+    n_devices: int = 1
+    placement: str = "least_loaded"
+    placement_seed: int = 0
+
+
+class ClusterSimulator:
+    """Event-driven N-device generalization of ``NPUSimulator``.
+
+    Same event kinds (arrival / completion / scheduling quantum), same
+    arbiter; completions carry the device index.  After ``run`` the
+    ``cluster`` attribute exposes per-device busy time for utilization
+    metrics, and :meth:`summary` reports cluster-level metrics
+    (``metrics.cluster_summary``).
+    """
+
+    def __init__(self, hw: HardwareModel, policy: Policy,
+                 cfg: Optional[ClusterConfig] = None):
+        self.hw = hw
+        self.policy = policy
+        self.cfg = cfg or ClusterConfig()
+        self.arbiter = Arbiter(policy, self.cfg.arbiter_config())
+        self.cluster = Cluster(self.cfg.n_devices, self.cfg.placement,
+                               self.cfg.placement_seed)
+        self.log: List[Tuple[float, str, int, int]] = []
+        self._tasks: List[Task] = []
+
+    # ------------------------------------------------------------------
+    def run(self, tasks: Sequence[Task]) -> List[Task]:
+        hw, cfg, arbiter = self.hw, self.cfg, self.arbiter
+        arbiter.reset()
+        self.log = []
+        self.cluster = Cluster(cfg.n_devices, cfg.placement,
+                               cfg.placement_seed)
+        devices = self.cluster.devices
+        counter = itertools.count()
+        events: List[Tuple[float, int, str, int, int, int]] = []
+
+        def push(t, kind, tid=-1, gen=0, dev=-1):
+            heapq.heappush(events, (t, next(counter), kind, tid, gen, dev))
+
+        by_id: Dict[int, Task] = {t.tid: t for t in tasks}
+        for t in tasks:
+            t.state = TaskState.WAITING
+            t.device = None
+            push(t.arrival, "arrival", t.tid)
+
+        ready: List[Task] = []
+        next_quantum = None
+        n_done = 0
+
+        def log(t, kind, tid, dev=-1):
+            if cfg.log_events:
+                self.log.append((t, kind, tid, dev))
+
+        def ensure_quantum(now):
+            nonlocal next_quantum
+            if next_quantum is None or next_quantum <= now:
+                next_quantum = now + cfg.quantum
+                push(next_quantum, "quantum")
+
+        def start(d: DeviceState, task: Task, now: float) -> float:
+            t0 = now
+            if task.restore_pending:
+                lat = preemption.restore_latency(task, hw)
+                if task.device is not None and task.device != d.dev:
+                    # checkpoint lives on another chip: pay the transfer
+                    lat += preemption.migration_latency(task, hw)
+                    self.cluster.n_migrations += 1
+                task.checkpoint_overhead += lat
+                task.restore_pending = False
+                t0 += lat
+            d.running = task
+            task.state = TaskState.RUNNING
+            task.device = d.dev
+            d.last_model = task.model
+            if task.first_service is None:
+                task.first_service = t0
+            d.run_start = t0
+            d.run_gen += 1
+            d.busy_until = t0
+            push(t0 + task.remaining, "complete", task.tid, d.run_gen, d.dev)
+            log(now, "start", task.tid, d.dev)
+            return t0
+
+        def preempt(d: DeviceState, now: float, mech: Mechanism) -> float:
+            task = d.running
+            assert task is not None
+            elapsed = max(0.0, now - d.run_start)
+            free_at = now
+            if mech is Mechanism.KILL:
+                task.executed = 0.0
+                task.reset_progress()
+                task.n_kills += 1
+                task.state = TaskState.WAITING
+            else:  # CHECKPOINT
+                extra = tile_roundup(task, elapsed)
+                task.executed += elapsed + extra
+                d.busy_time += elapsed + extra
+                lat = preemption.checkpoint_latency(task, hw)
+                task.checkpoint_overhead += lat
+                task.restore_pending = True
+                task.n_preemptions += 1
+                task.state = TaskState.PREEMPTED
+                free_at = now + extra + lat
+            ready.append(task)
+            task.last_wake = now
+            d.running = None
+            d.run_gen += 1
+            d.busy_until = free_at
+            log(now, f"preempt-{mech.value}", task.tid, d.dev)
+            return free_at
+
+        def sync_running(now: float):
+            for d in devices:
+                if d.running is not None and now > d.run_start:
+                    dt = now - d.run_start
+                    d.running.executed += dt
+                    d.busy_time += dt
+                    d.run_start = now
+
+        def schedule(now: float):
+            if not ready:
+                return
+            sync_running(now)
+            arbiter.wake(ready, now)
+            while ready:
+                cand = arbiter.pick(ready, now, None)
+                if cand is None:
+                    return
+                free = self.cluster.free(now)
+                if free:
+                    d = self.cluster.choose(cand, free)
+                    ready.remove(cand)
+                    start(d, cand, now)
+                    if len(free) > 1 and ready:
+                        continue  # fill remaining free devices this wake
+                    return
+                blocked = [d for d in devices if d.running is None]
+                if blocked:
+                    # inside switch-overhead windows: retry when one frees
+                    push(min(d.busy_until for d in blocked), "quantum")
+                    return
+                if not arbiter.policy.preemptive:
+                    return
+                # every device is running: consider displacing the victim
+                # with the longest predicted remaining work first
+                victims = sorted(
+                    (d for d in devices if now >= d.busy_until),
+                    key=lambda d: (-d.running.predicted_remaining, d.dev))
+                for d in victims:
+                    dec = arbiter.arbitrate(d.running, cand)
+                    if dec.action is Action.PREEMPT:
+                        free_at = preempt(d, now, dec.mechanism)
+                        ready.remove(cand)
+                        start(d, cand, free_at)
+                        return
+                    if dec.action is Action.DRAIN:
+                        log(now, "drain", d.running.tid, d.dev)
+                return
+
+        # ---------------- main loop ----------------
+        while events:
+            now, _, kind, tid, gen, dev = heapq.heappop(events)
+            if kind == "arrival":
+                task = by_id[tid]
+                ready.append(task)
+                task.last_wake = now
+                log(now, "arrival", tid)
+                schedule(now)
+                ensure_quantum(now)
+            elif kind == "complete":
+                d = devices[dev]
+                if (d.running is None or d.running.tid != tid
+                        or gen != d.run_gen):
+                    continue  # stale
+                task = d.running
+                d.busy_time += max(0.0, now - d.run_start)
+                task.executed = task.isolated_time
+                task.completion = now
+                task.state = TaskState.DONE
+                n_done += 1
+                d.running = None
+                log(now, "complete", tid, dev)
+                schedule(now)
+                if ready:
+                    ensure_quantum(now)
+            elif kind == "quantum":
+                next_quantum = None
+                if ready or any(d.running is not None for d in devices):
+                    schedule(now)
+                    if ready:
+                        ensure_quantum(now)
+            if n_done == len(by_id) and not events:
+                break
+
+        assert all(t.state == TaskState.DONE for t in by_id.values()), (
+            f"unfinished tasks: "
+            f"{[t.tid for t in by_id.values() if t.state != TaskState.DONE]}")
+        self._tasks = list(by_id.values())
+        return self._tasks
+
+    # ------------------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        if not self._tasks:
+            raise RuntimeError("summary() requires a completed run()")
+        makespan = max(t.completion for t in self._tasks)
+        out = metrics.cluster_summary(self._tasks, self.cluster.busy_times(),
+                                      makespan)
+        out["migrations"] = float(self.cluster.n_migrations)
+        return out

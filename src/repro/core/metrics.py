@@ -61,3 +61,59 @@ def aggregate(runs: Iterable[Dict[str, float]]) -> Dict[str, float]:
     runs = list(runs)
     keys = runs[0].keys()
     return {k: float(np.mean([r[k] for r in runs])) for k in keys}
+
+
+# ---------------------------------------------------------------------------
+# Cluster (multi-NPU) metrics — see core/cluster.py
+# ---------------------------------------------------------------------------
+
+def per_device_summary(tasks: Sequence[Task]) -> Dict[int, Dict[str, float]]:
+    """ANTT/STP per device, grouped by the device each task completed on."""
+    groups: Dict[int, List[Task]] = {}
+    for t in tasks:
+        groups.setdefault(t.device if t.device is not None else -1,
+                          []).append(t)
+    return {dev: {"antt": antt(ts), "stp": stp(ts),
+                  "n_tasks": float(len(ts))}
+            for dev, ts in sorted(groups.items())}
+
+
+def device_utilization(busy_times: Sequence[float],
+                       makespan: float) -> List[float]:
+    """Per-device fraction of the makespan spent executing tasks."""
+    span = max(makespan, 1e-12)
+    return [min(1.0, b / span) for b in busy_times]
+
+
+def cluster_health(tasks: Sequence[Task], busy_times: Sequence[float],
+                   makespan: float) -> Dict[str, float]:
+    """Cluster-level utilization, throughput, and cross-device balance
+    only — no per-task latency aggregates (compose with ``summarize``
+    via :func:`cluster_summary` when both cover the same task set)."""
+    out: Dict[str, float] = {}
+    utils = device_utilization(busy_times, makespan)
+    per_dev = per_device_summary(tasks)
+    out["n_devices"] = float(len(busy_times))
+    out["makespan"] = float(makespan)
+    out["throughput"] = float(len(tasks)) / max(makespan, 1e-12)
+    out["util_mean"] = float(np.mean(utils))
+    out["util_min"] = float(np.min(utils))
+    out["util_max"] = float(np.max(utils))
+    busy = np.asarray(busy_times, dtype=float)
+    out["load_imbalance"] = float(busy.max() / max(busy.mean(), 1e-12))
+    # every device counts: one that completed nothing contributes stp=0,
+    # so an all-tasks-on-one-device schedule scores 0, not 1
+    stps = [per_dev.get(dev, {"stp": 0.0})["stp"]
+            for dev in range(len(busy_times))]
+    out["device_fairness"] = (float(min(stps) / max(max(stps), 1e-12))
+                              if len(stps) > 1 else 1.0)
+    return out
+
+
+def cluster_summary(tasks: Sequence[Task], busy_times: Sequence[float],
+                    makespan: float) -> Dict[str, float]:
+    """Global ``summarize`` plus cluster-level utilization, throughput and
+    cross-device balance (STP/ANTT across devices)."""
+    out = summarize(tasks)
+    out.update(cluster_health(tasks, busy_times, makespan))
+    return out

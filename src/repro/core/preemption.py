@@ -37,6 +37,15 @@ def restore_latency(task: Task, hw: HardwareModel) -> float:
     return task.checkpoint_bytes(hw.vmem_bytes) / hw.hbm_bw
 
 
+def migration_latency(task: Task, hw: HardwareModel) -> float:
+    """Extra cost to resume a checkpointed task on a *different* device:
+    the spilled context crosses the inter-chip interconnect (ICI when the
+    part has one, otherwise the memory system).  Model-affinity placement
+    (core/cluster.py) exists to avoid paying this."""
+    bw = hw.ici_bw * max(hw.ici_links, 1) if hw.ici_bw > 0 else hw.hbm_bw
+    return task.checkpoint_bytes(hw.vmem_bytes) / bw
+
+
 def preemption_cost(task: Task, hw: HardwareModel, mech: Mechanism) -> float:
     if mech is Mechanism.CHECKPOINT:
         return checkpoint_latency(task, hw)

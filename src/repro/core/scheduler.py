@@ -1,8 +1,11 @@
 """Scheduling policies (paper §V-C plus all evaluated baselines).
 
-Policies answer one question at each scheduler wake-up: *which task should
-occupy the NPU now?*  Preemption mechanics (how a switch happens) live in
-``preemption.py``; the simulator/engine applies them.
+Policies answer two questions at each scheduler wake-up: *which task
+should occupy the NPU now?* (``select``) and *may that candidate displace
+the running task?* (``may_preempt``).  Preemption mechanics (how a switch
+happens) live in ``preemption.py``; the shared arbiter (``arbiter.py``)
+sequences select → may_preempt → mechanism choice for every execution
+layer (simulator, cluster, serving engine).
 
 Implemented policies (paper Figures 11/12):
 
@@ -70,6 +73,17 @@ class Policy:
     def on_wake(self, ready: List[Task], now: float) -> None:
         """Per-wake bookkeeping (token accrual for token policies)."""
 
+    def may_preempt(self, running: Task, cand: Task,
+                    dynamic_mech: bool) -> bool:
+        """Whether ``cand`` may displace ``running`` under this policy
+        (the arbiter's step-2 gate; see ``core/arbiter.py``)."""
+        return False
+
+    def reset(self) -> None:
+        """Clear per-run state.  Called by the arbiter at the start of
+        every simulator/engine run so a reused policy object cannot leak
+        decisions (e.g. round-robin position) across runs."""
+
 
 class FCFS(Policy):
     def __init__(self, preemptive: bool = False):
@@ -77,6 +91,9 @@ class FCFS(Policy):
 
     def select(self, ready, now, running):
         return min(ready, key=lambda t: (t.arrival, t.tid)) if ready else None
+
+    def may_preempt(self, running, cand, dynamic_mech):
+        return cand.arrival < running.arrival
 
 
 class RoundRobin(Policy):
@@ -97,6 +114,12 @@ class RoundRobin(Policy):
         self._last_tid = order[0].tid
         return order[0]
 
+    def may_preempt(self, running, cand, dynamic_mech):
+        return True
+
+    def reset(self):
+        self._last_tid = -1
+
 
 class HPF(Policy):
     """Highest (user-defined) priority first."""
@@ -108,6 +131,9 @@ class HPF(Policy):
         if not ready:
             return None
         return min(ready, key=lambda t: (-t.priority, t.arrival, t.tid))
+
+    def may_preempt(self, running, cand, dynamic_mech):
+        return cand.priority > running.priority
 
 
 class SJF(Policy):
@@ -122,6 +148,9 @@ class SJF(Policy):
         if not ready:
             return None
         return min(ready, key=lambda t: (t.predicted_remaining, t.tid))
+
+    def may_preempt(self, running, cand, dynamic_mech):
+        return cand.predicted_remaining < running.predicted_remaining
 
 
 class TokenFCFS(Policy):
@@ -142,6 +171,9 @@ class TokenFCFS(Policy):
         cands = [t for t in ready if t.tokens >= thr]
         return min(cands, key=lambda t: (t.arrival, t.tid))
 
+    def may_preempt(self, running, cand, dynamic_mech):
+        return cand.tokens > running.tokens
+
 
 class PREMA(Policy):
     """Algorithm 2: token candidates + shortest-estimated-job selection."""
@@ -159,6 +191,11 @@ class PREMA(Policy):
         thr = token_threshold(ready)
         cands = [t for t in ready if t.tokens >= thr]
         return min(cands, key=lambda t: (t.predicted_remaining, t.tid))
+
+    def may_preempt(self, running, cand, dynamic_mech):
+        if dynamic_mech:
+            return True  # Algorithm 3 arbitrates CHECKPOINT vs DRAIN
+        return cand.predicted_remaining < running.predicted_remaining
 
 
 def make_policy(name: str, preemptive: bool = False) -> Policy:

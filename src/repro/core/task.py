@@ -40,6 +40,7 @@ class Task:
 
     # ---- dynamic scheduling state ----
     state: TaskState = TaskState.WAITING
+    device: Optional[int] = None       # device the task last ran on (cluster)
     tokens: float = 0.0
     executed: float = 0.0              # Time_executed (actual progress)
     last_wake: float = 0.0             # last token-accrual timestamp

@@ -6,16 +6,28 @@ uses measured step times), while the tensors themselves are computed for
 real by :class:`PreemptibleExecutor` — so scheduling behavior and model
 outputs are both exact and testable.
 
-Preemption points are step boundaries (super-block period during prefill,
-token during decode); the scheduler re-evaluates at every boundary and at
-request arrivals — the continuous-time analogue of the paper's 0.25 ms
-scheduling period (steps are sub-millisecond at serving scale).
+Scheduling decisions (policy wake-up, candidate selection,
+``Policy.may_preempt``, Algorithm-3 mechanism choice, KILL progress
+guarantee) are delegated to the shared scheduling core in
+``core/arbiter.py`` — the same :class:`~repro.core.arbiter.Arbiter` that
+drives the virtual-clock simulators (``core/simulator.py``,
+``core/cluster.py``).  This module only executes the decision on real
+tensor state: preemption points are step boundaries (super-block period
+during prefill, token during decode); the scheduler re-evaluates at every
+boundary and at request arrivals — the continuous-time analogue of the
+paper's 0.25 ms scheduling period.
+
+``n_devices > 1`` runs the engine as a cluster: one global ready queue,
+per-device running slots and virtual clocks, per-device KV pools, and a
+pluggable placement policy (``core/cluster.py``); resuming a checkpointed
+request on a different device pays the cross-chip
+:func:`~repro.core.preemption.migration_latency` and moves its KV
+residency, which the ``affinity`` placement exists to avoid.
 
 Mechanisms follow §IV: CHECKPOINT holds the ExecState (KV/SSM cache stays
 HBM-resident; under memory pressure the KVCacheManager offloads to host and
 charges the un-hidable PCIe time), KILL discards it, DRAIN lets the running
-request finish.  Mechanism selection is Algorithm 3 when ``mechanism=
-'dynamic'``.
+request finish.
 
 A ``straggler_factor`` hook perturbs realized step times (fault injection);
 the predictive scheduler observes only predictions, so tests can verify
@@ -25,16 +37,17 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core import arch_ops, metrics, preemption
+from repro.core.arbiter import Action, Arbiter, ArbiterConfig
+from repro.core.cluster import Cluster
 from repro.core.predictor import (LengthRegressor, Predictor, network_time,
                                   per_node_times)
 from repro.core.preemption import Mechanism
-from repro.core.scheduler import Policy, make_policy
-from repro.core.simulator import should_preempt
+from repro.core.scheduler import SCHED_QUANTUM, Policy, make_policy
 from repro.core.task import Task, TaskState
 from repro.hw import TPU_V5E, HardwareModel
 from repro.models.registry import Model
@@ -59,18 +72,34 @@ class ServingEngine:
     def __init__(self,
                  models: Dict[str, Tuple[Model, dict]],
                  hw: HardwareModel = TPU_V5E,
-                 policy: str = "prema",
-                 preemptive: bool = True,
+                 policy: Union[str, Policy] = "prema",
+                 preemptive: Optional[bool] = None,
                  mechanism: str = "dynamic",
                  kv_capacity_bytes: Optional[int] = None,
                  straggler_factor: Optional[Callable[[int, int], float]] = None,
-                 execute: bool = True):
-        """``models``: name → (Model, params).  ``execute=False`` runs the
-        engine in pure virtual-time mode (no tensor computation) for
-        large-scale scheduling studies."""
+                 execute: bool = True,
+                 n_devices: int = 1,
+                 placement: str = "least_loaded"):
+        """``models``: name → (Model, params).  ``policy`` is a name or a
+        :class:`Policy` instance; ``preemptive`` overrides the policy's
+        flag when given (string policies default to preemptive).
+        ``execute=False`` runs the engine in pure virtual-time mode (no
+        tensor computation) for large-scale scheduling studies.
+        ``n_devices``/``placement`` scale the engine to a multi-NPU
+        cluster (see module docstring)."""
         self.hw = hw
-        self.policy: Policy = make_policy(policy, preemptive=preemptive)
+        if isinstance(policy, Policy):
+            self.policy = policy
+            if preemptive is not None:
+                self.policy.preemptive = preemptive
+        else:
+            self.policy = make_policy(
+                policy, preemptive=True if preemptive is None else preemptive)
         self.mechanism = mechanism
+        self.arbiter = Arbiter(self.policy, ArbiterConfig(mechanism=mechanism))
+        self.n_devices = int(n_devices)
+        self.placement = placement
+        self.cluster = Cluster(self.n_devices, placement)
         self.execute = execute
         self.straggler_factor = straggler_factor
         self._executors: Dict[str, PreemptibleExecutor] = {}
@@ -78,7 +107,9 @@ class ServingEngine:
         for name, (model, params) in models.items():
             self._executors[name] = PreemptibleExecutor(model, params)
         self.predictor = Predictor(hw)
-        self.kv = KVCacheManager(kv_capacity_bytes or hw.hbm_bytes)
+        cap = kv_capacity_bytes or hw.hbm_bytes
+        self.kvs = [KVCacheManager(cap) for _ in range(self.n_devices)]
+        self.kv = self.kvs[0]        # back-compat alias (device 0)
         self._length_reg: Dict[str, LengthRegressor] = {}
         self.completed: List[RequestResult] = []
         self.tasks: List[Task] = []
@@ -146,9 +177,14 @@ class ServingEngine:
         jobs = {r.rid: self._make_job(r) for r in requests}
         arrivals = [(r.arrival, r.rid) for r in requests]
         heapq.heapify(arrivals)
-        clock = 0.0
+        n_dev = self.n_devices
+        self.arbiter.reset()
+        self.cluster = Cluster(n_dev, self.placement)
+        self._run_tasks: List[Task] = []   # this run only (cluster metrics)
+        devices = self.cluster.devices
+        dev_clock = [0.0] * n_dev
+        running: List[Optional[_Job]] = [None] * n_dev
         ready: List[_Job] = []
-        running: Optional[_Job] = None
 
         def ready_tasks():
             return [j.task for j in ready]
@@ -161,61 +197,74 @@ class ServingEngine:
                 j.task.last_wake = j.req.arrival
                 ready.append(j)
 
-        def pick() -> Optional[_Job]:
+        def pick(d: int) -> Optional[_Job]:
             ts = ready_tasks()
-            self.policy.on_wake(ts, clock)
-            run_t = running.task if running else None
-            sel = self.policy.select(ts, clock, run_t)
+            now = dev_clock[d]
+            self.arbiter.wake(ts, now)
+            run_t = running[d].task if running[d] else None
+            sel = self.arbiter.pick(ts, now, run_t)
             if sel is None:
                 return None
             return next(j for j in ready if j.task is sel)
 
-        def begin(j: _Job):
-            nonlocal clock, running
+        def begin(d: int, j: _Job):
             t = j.task
+            now = dev_clock[d]
             if t.restore_pending:
                 lat = preemption.restore_latency(t, self.hw)
-                lat += self.kv.touch(j.req.rid, clock)
+                if t.device is not None and t.device != d:
+                    # checkpoint + KV residency live on another chip
+                    lat += preemption.migration_latency(t, self.hw)
+                    self.cluster.n_migrations += 1
+                    self.kvs[t.device].release(j.req.rid)
+                    nbytes = (j.state.cache_bytes()
+                              if self.execute and j.state is not None else 0)
+                    lat += self.kvs[d].register(j.req.rid, nbytes, now)
+                else:
+                    lat += self.kvs[d].touch(j.req.rid, now)
                 t.checkpoint_overhead += lat
                 t.restore_pending = False
-                clock += lat
+                dev_clock[d] += lat
                 if self.execute and j.state is not None:
                     j.state = PreemptibleExecutor.restore(j.state)
             if j.state is None and self.execute:
                 j.state = j.executor.start(self._batch_dict(j.req))
-                self.kv.register(j.req.rid, 0, clock)
+                self.kvs[d].register(j.req.rid, 0, dev_clock[d])
             t.state = TaskState.RUNNING
+            t.device = d
+            devices[d].running = t
+            devices[d].last_model = t.model
             if t.first_service is None:
-                t.first_service = clock
-            running = j
+                t.first_service = dev_clock[d]
+            running[d] = j
 
-        def do_checkpoint(j: _Job):
-            nonlocal clock
+        def do_checkpoint(d: int, j: _Job):
             t = j.task
             lat = preemption.checkpoint_latency(t, self.hw)
             if self.execute and j.state is not None:
                 j.state = PreemptibleExecutor.checkpoint(j.state)
-                lat += self.kv.resize(j.req.rid, j.state.cache_bytes(), clock)
+                lat += self.kvs[d].resize(j.req.rid, j.state.cache_bytes(),
+                                          dev_clock[d])
             t.checkpoint_overhead += lat
             t.restore_pending = True
             t.n_preemptions += 1
             t.state = TaskState.PREEMPTED
-            clock += lat
+            dev_clock[d] += lat
 
-        def do_kill(j: _Job):
+        def do_kill(d: int, j: _Job):
             j.state = None
-            self.kv.release(j.req.rid)
+            self.kvs[d].release(j.req.rid)
             j.task.reset_progress()
             j.task.n_kills += 1
             j.task.state = TaskState.WAITING
 
-        def complete(j: _Job):
-            nonlocal running
+        def complete(d: int, j: _Job):
             t = j.task
+            clock = dev_clock[d]
             t.executed = t.isolated_time
             t.completion = clock
             t.state = TaskState.DONE
-            self.kv.release(j.req.rid)
+            self.kvs[d].release(j.req.rid)
             toks = (np.stack(j.state.tokens_out, axis=1)
                     if self.execute and j.state and j.state.tokens_out
                     else np.zeros((j.req.batch, 0), np.int32))
@@ -230,12 +279,13 @@ class ServingEngine:
                 sla_target=j.req.sla_scale * t.isolated_time)
             self.completed.append(j.result)
             self.tasks.append(t)
-            running = None
+            self._run_tasks.append(t)
+            running[d] = None
+            devices[d].running = None
 
-        def exec_one_step(j: _Job):
+        def exec_one_step(d: int, j: _Job):
             """Run one boundary-to-boundary step (real tensors + virtual
             clock)."""
-            nonlocal clock
             t = j.task
             node = t.current_node()
             dt = float(t.node_times[min(node, t.total_nodes - 1)])
@@ -245,11 +295,12 @@ class ServingEngine:
                 j.state = j.executor.step(j.state)
                 if (j.first_token_time is None
                         and j.state.phase in ("decode", "done")):
-                    j.first_token_time = clock + dt
+                    j.first_token_time = dev_clock[d] + dt
             else:
                 if j.first_token_time is None and node + 1 >= j.executor.n_periods:
-                    j.first_token_time = clock + dt
-            clock += dt
+                    j.first_token_time = dev_clock[d] + dt
+            dev_clock[d] += dt
+            devices[d].busy_time += dt
             t.executed = min(t.isolated_time, t.executed + dt)
 
         def step_done(j: _Job) -> bool:
@@ -269,42 +320,70 @@ class ServingEngine:
             return t.remaining <= 1e-15
 
         # ---------------- main loop ----------------
+        # Per-device virtual clocks; each iteration advances the device
+        # with the smallest clock (running devices win ties so an idle
+        # device waiting for work cannot starve progress).
         n_total = len(jobs)
-        while len(self.completed) < n_total:
-            ingest(clock)
-            if running is None and not ready:
-                clock = max(clock, arrivals[0][0])
-                continue
-            if running is None:
-                cand = pick()
-                if cand is None:
-                    clock = arrivals[0][0] if arrivals else clock
+        done_before = len(self.completed)
+        while len(self.completed) - done_before < n_total:
+            d = min(range(n_dev),
+                    key=lambda i: (dev_clock[i],
+                                   0 if running[i] is not None else 1, i))
+            now = dev_clock[d]
+            ingest(now)
+            j = running[d]
+            if j is None:
+                if not ready:
+                    if arrivals:
+                        dev_clock[d] = max(now, arrivals[0][0])
+                    else:
+                        # nothing to do on this device until another one
+                        # finishes or preempts; follow the busy clocks
+                        busy = [dev_clock[i] for i in range(n_dev)
+                                if running[i] is not None]
+                        assert busy, "engine stalled with work outstanding"
+                        dev_clock[d] = max(now, min(busy))
                     continue
+                cand = pick(d)
+                if cand is None:
+                    # policy abstained with a non-empty queue: advance to
+                    # the next arrival, or by one scheduling quantum when
+                    # there is none (anti-livelock; the old loop spun here)
+                    if arrivals:
+                        dev_clock[d] = max(now, arrivals[0][0])
+                    else:
+                        dev_clock[d] = now + SCHED_QUANTUM
+                    continue
+                # among the devices free *now*, placement chooses which one
+                # takes the candidate (affinity avoids a cross-chip resume)
+                free = [devices[i] for i in range(n_dev)
+                        if running[i] is None and dev_clock[i] <= now + 1e-15]
+                target = (self.cluster.choose(cand.task, free).dev
+                          if len(free) > 1 else d)
                 ready.remove(cand)
-                begin(cand)
+                dev_clock[target] = max(dev_clock[target], now)
+                begin(target, cand)
                 continue
             # at a step boundary: consider preemption, then run one step
             if ready and self.policy.preemptive:
-                cand = pick()
-                if cand is not None and should_preempt(
-                        self.policy, running.task, cand.task,
-                        self.mechanism == "dynamic"):
-                    mech = (preemption.select_mechanism(running.task, cand.task)
-                            if self.mechanism == "dynamic"
-                            else Mechanism(self.mechanism))
-                    if mech is not Mechanism.DRAIN:
-                        victim = running
-                        if mech is Mechanism.KILL:
-                            do_kill(victim)
+                cand = pick(d)
+                if cand is not None and cand is not j:
+                    dec = self.arbiter.arbitrate(j.task, cand.task)
+                    if dec.action is Action.PREEMPT:
+                        victim = j
+                        if dec.mechanism is Mechanism.KILL:
+                            do_kill(d, victim)
                         else:
-                            do_checkpoint(victim)
+                            do_checkpoint(d, victim)
+                        devices[d].running = None
                         ready.append(victim)
-                        victim.task.last_wake = clock
+                        victim.task.last_wake = dev_clock[d]
                         ready.remove(cand)
-                        begin(cand)
-            exec_one_step(running)
-            if step_done(running):
-                complete(running)
+                        begin(d, cand)
+            j = running[d]
+            exec_one_step(d, j)
+            if step_done(j):
+                complete(d, j)
         return self.completed
 
     # ------------------------------------------------------------------
@@ -312,5 +391,20 @@ class ServingEngine:
         out = metrics.summarize(self.tasks)
         out["sla_met_rate"] = float(np.mean([r.sla_met for r in self.completed]))
         out["mean_ttft"] = float(np.mean([r.ttft for r in self.completed]))
-        out.update({f"kv_{k}": float(v) for k, v in self.kv.stats.items()})
+        kv_stats: Dict[str, float] = {}
+        for kv in self.kvs:
+            for k, v in kv.stats.items():
+                kv_stats[k] = kv_stats.get(k, 0.0) + float(v)
+        out.update({f"kv_{k}": v for k, v in kv_stats.items()})
+        if self.n_devices > 1:
+            # cluster accounting (busy times, migrations, clocks) is per
+            # run, so the health section covers the *latest* run only —
+            # cluster_health (not cluster_summary) keeps the per-task
+            # aggregates above scoped to all completed requests
+            run_tasks = getattr(self, "_run_tasks", self.tasks)
+            if run_tasks:
+                makespan = max(t.completion for t in run_tasks)
+                out.update(metrics.cluster_health(
+                    run_tasks, self.cluster.busy_times(), makespan))
+            out["migrations"] = float(self.cluster.n_migrations)
         return out

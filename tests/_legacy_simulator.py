@@ -1,25 +1,10 @@
-"""Event-driven single-NPU simulator (the paper's evaluation vehicle).
+"""FROZEN pre-refactor copy of ``repro.core.simulator`` (PR 1 state).
 
-The simulator advances a virtual clock over three event kinds — task
-arrival, task completion, and the scheduling-period quantum (Table II,
-0.25 ms).  At every wake-up the *decision* (policy wake-up, candidate
-selection, ``Policy.may_preempt``, Algorithm-3 mechanism choice, KILL
-progress guarantee) is delegated to the shared scheduling core in
-``core/arbiter.py`` — the same :class:`~repro.core.arbiter.Arbiter` that
-drives the multi-device :class:`~repro.core.cluster.ClusterSimulator` and
-the real-execution :class:`~repro.serving.engine.ServingEngine`.  This
-module only *executes* the returned decision on the virtual clock:
-
-* switches pay the CHECKPOINT spill latency (context bytes / memory BW) and
-  a restore latency when the preempted task resumes;
-* KILL switches are instantaneous but reset the victim's progress;
-* DRAIN lets the running task finish first;
-* preemption points are tile boundaries: the requested preemption time is
-  rounded up to the end of the current GEMM_OP tile (µs-scale, modeled via
-  per-node tile times when available).
-
-For N-device simulation see ``core/cluster.py``; ``ClusterSimulator`` with
-``n_devices=1`` reproduces this loop bit-identically.
+Reference implementation for the arbiter-equivalence tests: the refactored
+``NPUSimulator`` (decisions via ``repro.core.arbiter``) must produce
+bit-identical schedules to this legacy loop for every policy x mechanism.
+Do not modify this file when changing the real simulator — that is the
+point of it.
 """
 from __future__ import annotations
 
@@ -31,12 +16,31 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import preemption
-from repro.core.arbiter import (Action, Arbiter, ArbiterConfig,
-                                should_preempt)  # noqa: F401  (compat)
 from repro.core.preemption import Mechanism
 from repro.core.scheduler import SCHED_QUANTUM, Policy
 from repro.core.task import Task, TaskState
 from repro.hw import HardwareModel
+
+
+def should_preempt(policy: Policy, running: Task, cand: Task,
+                   dynamic_mech: bool) -> bool:
+    """Whether ``cand`` may displace ``running`` under ``policy``."""
+    name = policy.name
+    if name == "fcfs":
+        return cand.arrival < running.arrival
+    if name == "rrb":
+        return True
+    if name == "hpf":
+        return cand.priority > running.priority
+    if name == "sjf":
+        return cand.predicted_remaining < running.predicted_remaining
+    if name == "token":
+        return cand.tokens > running.tokens
+    if name == "prema":
+        if dynamic_mech:
+            return True  # Algorithm 3 arbitrates CHECKPOINT vs DRAIN
+        return cand.predicted_remaining < running.predicted_remaining
+    return False
 
 
 @dataclasses.dataclass
@@ -44,30 +48,12 @@ class SimConfig:
     mechanism: str = "dynamic"   # checkpoint | kill | drain | dynamic
     quantum: float = SCHED_QUANTUM
     log_events: bool = False
-    # Progress guarantee for KILL (anti-livelock; see ArbiterConfig).
+    # Progress guarantee for KILL (anti-livelock; KILL is only a good
+    # trade-off "during the early phases of an inference execution" §IV-C):
+    # a task may be KILLed only in its early phase and at most max_kills
+    # times; afterwards preemption requests against it are deferred.
     kill_early_frac: float = 0.5
     max_kills: int = 4
-
-    def arbiter_config(self) -> ArbiterConfig:
-        return ArbiterConfig(mechanism=self.mechanism,
-                             kill_early_frac=self.kill_early_frac,
-                             max_kills=self.max_kills)
-
-
-def tile_roundup(task: Task, elapsed: float) -> float:
-    """Extra time to reach the next tile boundary (≥ elapsed)."""
-    tt = getattr(task, "node_tile_times", None)
-    if tt is None:
-        return 0.0
-    node = task.current_node()
-    if node >= task.total_nodes:
-        return 0.0
-    q = float(tt[node])
-    if q <= 0:
-        return 0.0
-    offset = (task.executed + elapsed) - float(task._cum[node])
-    rem = offset % q
-    return 0.0 if rem < 1e-12 else (q - rem)
 
 
 class NPUSimulator:
@@ -76,14 +62,11 @@ class NPUSimulator:
         self.hw = hw
         self.policy = policy
         self.cfg = cfg or SimConfig()
-        self.arbiter = Arbiter(policy, self.cfg.arbiter_config())
         self.log: List[Tuple[float, str, int]] = []
 
     # ------------------------------------------------------------------
     def run(self, tasks: Sequence[Task]) -> List[Task]:
-        hw, cfg, arbiter = self.hw, self.cfg, self.arbiter
-        arbiter.reset()
-        self.log = []          # per-run, like every other piece of state
+        hw, policy, cfg = self.hw, self.policy, self.cfg
         counter = itertools.count()
         events: List[Tuple[float, int, str, int, int]] = []
 
@@ -113,6 +96,21 @@ class NPUSimulator:
                 next_quantum = now + cfg.quantum
                 push(next_quantum, "quantum")
 
+        def tile_roundup(task: Task, elapsed: float) -> float:
+            """Extra time to reach the next tile boundary (≥ elapsed)."""
+            tt = getattr(task, "node_tile_times", None)
+            if tt is None:
+                return 0.0
+            node = task.current_node()
+            if node >= task.total_nodes:
+                return 0.0
+            q = float(tt[node])
+            if q <= 0:
+                return 0.0
+            offset = (task.executed + elapsed) - float(task._cum[node])
+            rem = offset % q
+            return 0.0 if rem < 1e-12 else (q - rem)
+
         def start(task: Task, now: float) -> float:
             """Begin/resume execution; returns the execution start time
             after any restore overhead."""
@@ -125,7 +123,6 @@ class NPUSimulator:
                 t0 += lat
             running = task
             task.state = TaskState.RUNNING
-            task.device = 0
             if task.first_service is None:
                 task.first_service = t0
             run_start = t0
@@ -173,25 +170,46 @@ class NPUSimulator:
                 run_start = now
 
         def schedule(now: float):
-            """The two-step procedure (§V-C): ask the shared arbiter for a
-            decision, then execute it on the virtual clock."""
+            """The two-step procedure (§V-C): pick candidate, then apply a
+            mechanism appropriate for the context."""
+            nonlocal running
             if not ready:
                 return
             sync_running(now)
-            d = arbiter.decide(ready, now, running, busy_until)
-            if d.action is Action.START:
-                ready.remove(d.cand)
-                start(d.cand, max(now, busy_until))
-            elif d.action is Action.BUSY:
-                push(busy_until, "quantum")  # retry when NPU frees up
-            elif d.action is Action.DRAIN:
+            policy.on_wake(ready, now)
+            cand = policy.select(ready, now, running)
+            if cand is None:
+                return
+            if running is None:
+                if now >= busy_until:
+                    ready.remove(cand)
+                    start(cand, max(now, busy_until))
+                else:
+                    push(busy_until, "quantum")  # retry when NPU frees up
+                return
+            if not policy.preemptive or now < busy_until:
+                return
+            if cand is running:
+                return
+            dynamic = cfg.mechanism == "dynamic"
+            if not should_preempt(policy, running, cand, dynamic):
+                return
+            if dynamic:
+                mech = preemption.select_mechanism(running, cand)
+            else:
+                mech = Mechanism(cfg.mechanism)
+            if mech is Mechanism.DRAIN:
                 # let the running task finish; re-evaluated at every wake
                 log(now, "drain", running.tid)
-            elif d.action is Action.PREEMPT:
-                free_at = preempt(now, d.mechanism)
-                ready.remove(d.cand)
-                start(d.cand, free_at)
-            # IDLE / KEEP / DEFER: nothing to execute this wake-up
+                return
+            if mech is Mechanism.KILL:
+                early = running.executed <= cfg.kill_early_frac * max(
+                    running.predicted_total, 1e-12)
+                if not early or running.n_kills >= cfg.max_kills:
+                    return  # progress guarantee: defer the preemption
+            free_at = preempt(now, mech)
+            ready.remove(cand)
+            start(cand, free_at)
 
         # ---------------- main loop ----------------
         while events:

@@ -1,0 +1,125 @@
+"""Shared-arbiter refactor: the new decision core must be bit-identical to
+the frozen pre-refactor simulator, and may_preempt/reset must behave."""
+import numpy as np
+import pytest
+
+import _legacy_simulator as legacy
+from repro.core import trace
+from repro.core.arbiter import (Action, Arbiter, ArbiterConfig, Decision,
+                                should_preempt)
+from repro.core.scheduler import POLICY_NAMES, make_policy
+from repro.core.simulator import NPUSimulator, SimConfig
+from repro.core.task import Task
+from repro.hw import PAPER_NPU
+
+MECHANISMS = ("checkpoint", "kill", "drain", "dynamic")
+
+
+def mk_task(tid, priority, arrival, total, n=16, predicted=None):
+    return Task(tid=tid, model=f"m{tid}", priority=priority, arrival=arrival,
+                batch=1, node_times=np.full(n, total / n),
+                node_out_bytes=np.full(n, 1 << 20, dtype=np.int64),
+                predicted_total=predicted if predicted is not None else total)
+
+
+def _workload(seed):
+    rng = np.random.default_rng(seed)
+    tasks = []
+    for i in range(8):
+        total = float(rng.uniform(0.5e-3, 30e-3))
+        predicted = total * float(rng.uniform(0.8, 1.25))
+        tasks.append(mk_task(i, int(rng.choice([1, 3, 9])),
+                             float(rng.uniform(0, 20e-3)), total,
+                             predicted=predicted))
+    return tasks
+
+
+def _fingerprint(tasks):
+    return [(t.tid, t.completion, t.executed, t.first_service,
+             t.n_preemptions, t.n_kills, t.checkpoint_overhead, t.tokens)
+            for t in sorted(tasks, key=lambda t: t.tid)]
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+@pytest.mark.parametrize("mech", MECHANISMS)
+def test_refactored_simulator_bit_identical_to_legacy(policy, mech):
+    """Tentpole acceptance: single-device results are bit-identical
+    pre/post refactor for all six policies x four mechanisms."""
+    for seed in (0, 1, 2):
+        tasks = _workload(seed)
+        old = legacy.NPUSimulator(
+            PAPER_NPU, make_policy(policy, True),
+            legacy.SimConfig(mechanism=mech)).run(trace.clone_tasks(tasks))
+        new = NPUSimulator(PAPER_NPU, make_policy(policy, True),
+                           SimConfig(mechanism=mech)).run(
+                               trace.clone_tasks(tasks))
+        assert _fingerprint(new) == _fingerprint(old), (policy, mech, seed)
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_may_preempt_matches_legacy_dispatch_table(policy):
+    pol = make_policy(policy, True)
+    rng = np.random.default_rng(5)
+    for _ in range(40):
+        a = mk_task(0, int(rng.choice([1, 3, 9])),
+                    float(rng.uniform(0, 1e-2)), float(rng.uniform(1e-3, 2e-2)))
+        b = mk_task(1, int(rng.choice([1, 3, 9])),
+                    float(rng.uniform(0, 1e-2)), float(rng.uniform(1e-3, 2e-2)))
+        a.tokens, b.tokens = rng.uniform(1, 12, 2)
+        a.executed = float(rng.uniform(0, a.isolated_time))
+        for dyn in (False, True):
+            assert pol.may_preempt(a, b, dyn) == legacy.should_preempt(
+                pol, a, b, dyn)
+            assert should_preempt(pol, a, b, dyn) == pol.may_preempt(a, b, dyn)
+
+
+def test_base_policy_never_preempts():
+    from repro.core.scheduler import Policy
+    a, b = mk_task(0, 9, 0.0, 1e-3), mk_task(1, 9, 0.0, 1e-3)
+    assert Policy().may_preempt(a, b, True) is False
+
+
+def test_kill_progress_guarantee():
+    arb = Arbiter(make_policy("rrb", True),
+                  ArbiterConfig(mechanism="kill", kill_early_frac=0.5,
+                                max_kills=2))
+    running = mk_task(0, 1, 0.0, 10e-3)
+    cand = mk_task(1, 9, 1e-3, 1e-3)
+    d = arb.arbitrate(running, cand)
+    assert d.action is Action.PREEMPT  # early phase: KILL allowed
+    running.executed = 9e-3            # late phase: defer
+    assert arb.arbitrate(running, cand).action is Action.DEFER
+    running.executed = 0.0
+    running.n_kills = 2                # kill budget exhausted: defer
+    assert arb.arbitrate(running, cand).action is Action.DEFER
+
+
+def test_decide_idle_busy_start_keep():
+    arb = Arbiter(make_policy("hpf", True), ArbiterConfig("checkpoint"))
+    t = mk_task(0, 3, 0.0, 1e-3)
+    assert arb.decide([], 0.0, None).action is Action.IDLE
+    assert arb.decide([t], 0.0, None, busy_until=0.0).action is Action.START
+    assert arb.decide([t], 0.0, None, busy_until=1e-3).action is Action.BUSY
+    run = mk_task(1, 9, 0.0, 1e-3)
+    assert arb.decide([t], 0.0, run).action is Action.KEEP  # lower priority
+
+
+def test_round_robin_reset_between_runs():
+    """Satellite: a reused RoundRobin object must not leak _last_tid
+    across simulator runs."""
+    pol = make_policy("rrb", True)
+    tasks = _workload(3)
+    first = NPUSimulator(PAPER_NPU, pol, SimConfig("checkpoint")).run(
+        trace.clone_tasks(tasks))
+    assert pol._last_tid != -1  # run left internal state behind
+    second = NPUSimulator(PAPER_NPU, pol, SimConfig("checkpoint")).run(
+        trace.clone_tasks(tasks))
+    assert _fingerprint(first) == _fingerprint(second)
+
+
+def test_policy_reset_hook():
+    pol = make_policy("rrb", True)
+    pol._last_tid = 42
+    pol.reset()
+    assert pol._last_tid == -1
+    make_policy("fcfs").reset()  # base hook is a no-op

@@ -1,0 +1,145 @@
+"""Multi-NPU cluster simulator: single-device equivalence, cluster
+invariants, placement policies, per-device metrics."""
+import numpy as np
+import pytest
+
+from repro.core import metrics, trace
+from repro.core.cluster import (PLACEMENT_NAMES, Cluster, ClusterConfig,
+                                ClusterSimulator, make_placement)
+from repro.core.scheduler import POLICY_NAMES, make_policy
+from repro.core.simulator import NPUSimulator, SimConfig
+from repro.core.task import Task, TaskState
+from repro.hw import PAPER_NPU
+
+
+def mk_task(tid, priority, arrival, total, n=16, predicted=None):
+    return Task(tid=tid, model=f"m{tid % 3}", priority=priority,
+                arrival=arrival, batch=1, node_times=np.full(n, total / n),
+                node_out_bytes=np.full(n, 1 << 20, dtype=np.int64),
+                predicted_total=predicted if predicted is not None else total)
+
+
+def _workload(seed, n=10):
+    rng = np.random.default_rng(seed)
+    return [mk_task(i, int(rng.choice([1, 3, 9])),
+                    float(rng.uniform(0, 20e-3)),
+                    float(rng.uniform(0.5e-3, 30e-3)))
+            for i in range(n)]
+
+
+def _fingerprint(tasks):
+    return [(t.tid, t.completion, t.executed, t.first_service,
+             t.n_preemptions, t.n_kills, t.checkpoint_overhead)
+            for t in sorted(tasks, key=lambda t: t.tid)]
+
+
+def run_cluster(tasks, policy="prema", mech="dynamic", n_devices=2,
+                placement="least_loaded", log=False):
+    sim = ClusterSimulator(
+        PAPER_NPU, make_policy(policy, True),
+        ClusterConfig(mechanism=mech, n_devices=n_devices,
+                      placement=placement, log_events=log))
+    return sim, sim.run(tasks)
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+@pytest.mark.parametrize("mech", ("checkpoint", "kill", "drain", "dynamic"))
+def test_single_device_cluster_matches_npusimulator(policy, mech):
+    """ClusterSimulator(n_devices=1) must reproduce the single-NPU loop
+    bit-identically (same arbiter, same event dynamics)."""
+    tasks = _workload(11)
+    ref = NPUSimulator(PAPER_NPU, make_policy(policy, True),
+                       SimConfig(mechanism=mech)).run(trace.clone_tasks(tasks))
+    _, got = run_cluster(trace.clone_tasks(tasks), policy, mech, n_devices=1)
+    assert _fingerprint(got) == _fingerprint(ref)
+
+
+@pytest.mark.parametrize("n_devices", (1, 2, 4, 8))
+def test_all_tasks_complete(n_devices):
+    _, done = run_cluster(_workload(7), n_devices=n_devices)
+    assert all(t.state == TaskState.DONE for t in done)
+    assert all(t.ntt >= 0.999 for t in done)
+
+
+def test_no_task_on_two_devices_at_once():
+    """Cluster invariant: the event log never shows a task starting on a
+    second device before it left the first."""
+    sim, done = run_cluster(_workload(23, n=12), n_devices=4, log=True)
+    on_device = {}          # tid -> dev currently executing
+    for t, kind, tid, dev in sim.log:
+        if kind == "start":
+            assert tid not in on_device, (tid, t)
+            on_device[tid] = dev
+        elif kind.startswith("preempt-") or kind == "complete":
+            assert on_device.pop(tid, None) == dev, (tid, kind, t)
+    assert not on_device
+
+
+def test_more_devices_reduce_makespan():
+    tasks = _workload(3, n=16)
+    spans = {}
+    for n in (1, 2, 4):
+        _, done = run_cluster(trace.clone_tasks(tasks), n_devices=n)
+        spans[n] = max(t.completion for t in done)
+    assert spans[2] < spans[1]
+    assert spans[4] <= spans[2]
+
+
+@pytest.mark.parametrize("placement", PLACEMENT_NAMES)
+def test_placements_complete_and_report_metrics(placement):
+    sim, done = run_cluster(_workload(5, n=12), n_devices=4,
+                            placement=placement)
+    s = sim.summary()
+    assert s["n_devices"] == 4
+    assert 0.0 < s["util_mean"] <= 1.0
+    assert s["throughput"] > 0
+    assert all(t.device is not None for t in done)
+
+
+def test_affinity_avoids_migrations():
+    """Model-affinity placement must not migrate more checkpointed tasks
+    across devices than the random baseline."""
+    tasks = _workload(9, n=16)
+    sim_a, _ = run_cluster(trace.clone_tasks(tasks), n_devices=2,
+                           placement="affinity")
+    sim_r, _ = run_cluster(trace.clone_tasks(tasks), n_devices=2,
+                           placement="random")
+    assert sim_a.cluster.n_migrations <= sim_r.cluster.n_migrations
+
+
+def test_per_device_metrics():
+    sim, done = run_cluster(_workload(13, n=12), n_devices=3)
+    per = metrics.per_device_summary(done)
+    assert sum(d["n_tasks"] for d in per.values()) == len(done)
+    assert set(per) <= {0, 1, 2}
+    makespan = max(t.completion for t in done)
+    utils = metrics.device_utilization(sim.cluster.busy_times(), makespan)
+    assert len(utils) == 3 and all(0.0 <= u <= 1.0 for u in utils)
+    # total busy time can't exceed n_devices * makespan, and must cover
+    # the work actually executed (minus KILLed progress, which re-runs)
+    assert sum(sim.cluster.busy_times()) <= 3 * makespan + 1e-12
+
+
+def test_device_fairness_zero_when_a_device_sits_idle():
+    t = mk_task(0, 3, 0.0, 1e-3)
+    t.completion = 1.5e-3
+    t.device = 0
+    s = metrics.cluster_summary([t], busy_times=[1e-3, 0.0], makespan=1.5e-3)
+    assert s["device_fairness"] == 0.0     # device 1 completed nothing
+    s1 = metrics.cluster_summary([t], busy_times=[1e-3], makespan=1.5e-3)
+    assert s1["device_fairness"] == 1.0    # single device: trivially fair
+
+
+def test_unknown_placement_raises():
+    with pytest.raises(KeyError):
+        make_placement("nope")
+    with pytest.raises(ValueError):
+        Cluster(0)
+
+
+def test_cluster_summary_contains_balance_keys():
+    sim, _ = run_cluster(_workload(17, n=12), n_devices=4)
+    s = sim.summary()
+    for k in ("load_imbalance", "device_fairness", "util_min", "util_max",
+              "makespan", "migrations"):
+        assert k in s

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.scheduler import FCFS
 from repro.models import get_model
 from repro.serving import (InferenceRequest, KVCacheManager,
                            PreemptibleExecutor, ServingEngine)
@@ -103,6 +104,123 @@ def test_engine_straggler_hook(tiny_models, rng):
                          else 1.0)
     slow.run(reqs)
     assert len(slow.completed) == 4
+
+
+class _AbstainUntil(FCFS):
+    """Policy that returns no candidate before time ``t`` (regression
+    harness for the engine's no-candidate livelock)."""
+
+    def __init__(self, t):
+        super().__init__(preemptive=False)
+        self.t_open = t
+
+    def select(self, ready, now, running):
+        if now < self.t_open:
+            return None
+        return super().select(ready, now, running)
+
+
+def test_engine_no_candidate_does_not_livelock(tiny_models):
+    """Satellite regression: policy abstains, ready non-empty, arrivals
+    empty — the old loop spun forever with the clock frozen; the engine
+    must now advance by scheduling quanta until the policy yields."""
+    rng = np.random.default_rng(1)
+    reqs = _requests(rng, n=2, window=0.0)      # both arrive at t=0
+    eng = ServingEngine(tiny_models, policy=_AbstainUntil(2e-3),
+                        mechanism="drain", execute=False)
+    results = eng.run(reqs)
+    assert len(results) == 2
+    # no request started before the policy opened the gate
+    assert all(t.first_service >= 2e-3 for t in eng.tasks)
+
+
+def test_engine_accepts_policy_instance(tiny_models, rng):
+    from repro.core.scheduler import PREMA
+    reqs = _requests(rng, n=3)
+    eng = ServingEngine(tiny_models, policy=PREMA(preemptive=True),
+                        mechanism="dynamic", execute=False)
+    assert len(eng.run(reqs)) == 3
+    # explicit preemptive overrides the instance's own flag
+    eng2 = ServingEngine(tiny_models, policy=FCFS(), preemptive=True,
+                         execute=False)
+    assert eng2.policy.preemptive is True
+    eng3 = ServingEngine(tiny_models, policy=PREMA(preemptive=True),
+                         preemptive=False, execute=False)
+    assert eng3.policy.preemptive is False
+
+
+def test_engine_multi_device_summary_empty_and_reused(tiny_models):
+    """summary() must not crash on an empty run and must keep cumulative
+    per-task aggregates while scoping cluster health to the latest run."""
+    eng = ServingEngine(tiny_models, policy="prema", mechanism="dynamic",
+                        execute=False, n_devices=2)
+    eng.run([])                                    # no requests: no crash
+    rng = np.random.default_rng(2)
+    eng.run(_requests(rng, n=4))
+    s1 = eng.summary()
+    assert s1["n_tasks"] == 4.0
+    eng.run([InferenceRequest(**{**r.__dict__, "rid": r.rid + 100})
+             for r in _requests(np.random.default_rng(2), n=4)])
+    s2 = eng.summary()
+    assert s2["n_tasks"] == 8.0                    # cumulative aggregates
+    assert s2["throughput"] > 0                    # latest-run health
+
+
+def test_engine_multi_device_tokens_exact(tiny_models):
+    """Cluster engine: all requests complete across 2 devices and
+    preemption/migration never alters model outputs."""
+    rng = np.random.default_rng(9)
+    reqs = _requests(rng, n=6, window=1e-6)
+    eng = ServingEngine(tiny_models, policy="prema", mechanism="dynamic",
+                        n_devices=2, placement="affinity")
+    results = eng.run(reqs)
+    assert len(results) == 6
+    assert {t.device for t in eng.tasks} <= {0, 1}
+    s = eng.summary()
+    assert s["n_devices"] == 2 and 0 < s["util_mean"] <= 1.0
+    for r in results:
+        req = next(q for q in reqs if q.rid == r.rid)
+        model, params = tiny_models[r.arch]
+        ex = PreemptibleExecutor(model, params)
+        iso = ex.run_uninterrupted({"tokens": jnp.asarray(req.prompt)},
+                                   max_new_tokens=r.tokens.shape[1])
+        assert np.array_equal(np.stack(iso.tokens_out[:r.tokens.shape[1]], 1),
+                              r.tokens), r.rid
+
+
+def test_engine_multi_device_speedup_virtual(tiny_models):
+    rng = np.random.default_rng(4)
+    reqs = _requests(rng, n=8, window=1e-6)
+    spans = {}
+    for n in (1, 2):
+        eng = ServingEngine(tiny_models, policy="fcfs", preemptive=False,
+                            mechanism="drain", execute=False, n_devices=n)
+        eng.run([InferenceRequest(**{**r.__dict__}) for r in reqs])
+        spans[n] = max(t.completion for t in eng.tasks)
+    assert spans[2] < spans[1]
+
+
+def test_engine_reuse_and_policy_reset(tiny_models):
+    """Satellite regression: a reused engine (and its round-robin policy
+    object) must not leak scheduler state between runs."""
+    rng = np.random.default_rng(6)
+    reqs = _requests(rng, n=3, window=0.0)
+    eng = ServingEngine(tiny_models, policy="rrb", preemptive=True,
+                        mechanism="checkpoint", execute=False)
+    eng.run([InferenceRequest(**{**r.__dict__}) for r in reqs])
+    first = [(t.tid, t.completion) for t in sorted(eng.tasks,
+                                                   key=lambda t: t.tid)]
+    eng2 = ServingEngine(tiny_models, policy="rrb", preemptive=True,
+                         mechanism="checkpoint", execute=False)
+    eng2.policy._last_tid = 99          # simulate stale cross-run state
+    eng2.run([InferenceRequest(**{**r.__dict__}) for r in reqs])
+    second = [(t.tid, t.completion) for t in sorted(eng2.tasks,
+                                                    key=lambda t: t.tid)]
+    assert first == second
+    # same engine object run twice terminates and appends results
+    eng.run([InferenceRequest(**{**r.__dict__, "rid": r.rid + 10})
+             for r in reqs])
+    assert len(eng.completed) == 6
 
 
 def test_kv_manager_offload_and_fetch():
