@@ -1,9 +1,9 @@
 # Tier-1 verification and benchmark smoke for the PREMA reproduction.
 #
 #   make test         - full test suite (tier-1 gate)
-#   make test-fast    - scheduling-core tests only (no model execution)
-#   make bench-smoke  - cluster-scaling benchmark, CI-sized sweep
-#   make bench        - every figure-reproduction benchmark + cluster sweep
+#   make test-fast    - scheduling-core + workload tests (no model execution)
+#   make bench-smoke  - cluster-scaling + load-sweep benchmarks, CI-sized
+#   make bench        - every figure-reproduction benchmark + sweeps
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
@@ -15,10 +15,12 @@ test:
 
 test-fast:
 	$(PYTHON) -m pytest -x -q tests/test_arbiter.py tests/test_cluster.py \
-	    tests/test_scheduler.py tests/test_simulator.py tests/test_metrics.py
+	    tests/test_scheduler.py tests/test_simulator.py tests/test_metrics.py \
+	    tests/test_workloads.py -k "not engine"
 
 bench-smoke:
 	$(PYTHON) benchmarks/cluster_scaling.py --smoke
+	$(PYTHON) benchmarks/load_sweep.py --smoke
 
 bench:
 	$(PYTHON) benchmarks/run.py

@@ -59,7 +59,7 @@ def _workloads(n_runs: int, n_tasks: int, seed0: int = 4000,
     cluster sizes (the window is a fraction of the *parallel* makespan,
     not the serial one)."""
     pred = common.predictor()
-    return [trace.make_workload(pred, np.random.default_rng(seed0 + s),
+    return [trace.make_workload(pred, common.rng(seed0 + s),
                                 n_tasks=n_tasks,
                                 contention=0.5 / n_devices)
             for s in range(n_runs)]
@@ -135,7 +135,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="small sweep for CI (policies fcfs/prema, "
                          "dynamic mechanism, 2 workloads per point)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="re-base every benchmark RNG stream")
     args = ap.parse_args()
+    common.set_seed(args.seed)
     print("name,us_per_call,derived")
     common.emit(run(smoke=args.smoke))
 

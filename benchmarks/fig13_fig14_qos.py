@@ -29,7 +29,7 @@ def run() -> List:
     pred = common.predictor()
     tails = {"fcfs": [], "sjf_p": [], "prema_p": []}
     for s in range(common.N_RUNS):
-        rng = np.random.default_rng(3000 + s)
+        rng = common.rng(3000 + s)
         tasks = [trace.make_task(i, str(rng.choice(
             ("CNN-AN", "CNN-GN", "CNN-VN", "CNN-MN", "RNN-SA", "RNN-MT1",
              "RNN-MT2", "RNN-ASR"))), pred, rng,

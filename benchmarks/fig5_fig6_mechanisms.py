@@ -27,7 +27,7 @@ def _two_task_runs(mechanism: str, n_runs: int = 60):
     pred = common.predictor()
     rows = []
     for s in range(n_runs):
-        rng = np.random.default_rng(2000 + s)
+        rng = common.rng(2000 + s)
         lo_model = str(rng.choice(pw.WORKLOAD_NAMES))
         hi_model = str(rng.choice(pw.WORKLOAD_NAMES))
         lo = trace.make_task(0, lo_model, pred, rng, arrival=0.0, priority=1)

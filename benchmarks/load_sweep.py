@@ -1,0 +1,155 @@
+"""Load sweep: offered load x arrival process x policy x device count.
+
+The ROADMAP regime the paper never evaluates: *sustained* open-loop
+traffic.  For each (arrival process, policy, n_devices) curve the sweep
+drives the cluster simulator with the traffic subsystem
+(``repro.workloads``) at increasing offered load — expressed as a fraction
+of aggregate cluster capacity, ``rate = load x n_devices / E[isolated
+time]`` — and reports the latency–throughput curve plus the **SLA knee**:
+the highest offered load whose SLA satisfaction (per-task ``sla_scale``
+targets) still clears ``SLA_KNEE_TARGET``.
+
+Per point: achieved throughput (tasks/s), goodput (SLA-meeting tasks/s),
+p95/p99 NTT and turnaround, SLA satisfaction, and mean utilization.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/load_sweep.py            # full sweep
+    PYTHONPATH=src python benchmarks/load_sweep.py --smoke    # CI-sized
+    PYTHONPATH=src python benchmarks/load_sweep.py --seed 7   # re-based RNG
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+# allow `python benchmarks/load_sweep.py` from anywhere (cluster_scaling
+# does the same): make both `benchmarks` and `repro` importable
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks import common
+from repro.core import metrics
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.scheduler import make_policy
+from repro.hw import PAPER_NPU
+from repro.workloads import MMPP, Poisson, generate, paper_mix
+
+ARRIVAL_KINDS = ("poisson", "mmpp")
+POLICIES = ("fcfs", "prema")
+DEVICE_COUNTS = (1, 4)
+LOADS = (0.2, 0.4, 0.6, 0.8, 1.0, 1.2)
+SLA_KNEE_TARGET = 0.9
+TASKS_PER_DEVICE = 24
+
+_mean_isolated: Dict[int, float] = {}    # keyed by BASE_SEED
+
+
+def mean_isolated_time(n_probe: int = 64) -> float:
+    """E[isolated time] of the paper mix — converts an offered-load
+    fraction into an arrival rate."""
+    key = common.BASE_SEED
+    if key not in _mean_isolated:
+        tr = generate(paper_mix(), common.rng(8400), n_probe,
+                      pred=common.predictor())
+        _mean_isolated[key] = float(
+            np.mean([t.isolated_time for t in tr.tasks()]))
+    return _mean_isolated[key]
+
+
+def make_process(kind: str, rate: float):
+    if kind == "poisson":
+        return Poisson(rate=rate)
+    if kind == "mmpp":
+        return MMPP.bursty(rate, duty=0.3)
+    raise KeyError(f"unknown arrival kind {kind!r}")
+
+
+def run_point(kind: str, policy: str, n_devices: int, load: float,
+              n_tasks: int, n_runs: int, seed0: int = 8500
+              ) -> Dict[str, float]:
+    rate = load * n_devices / mean_isolated_time()
+    runs = []
+    for r in range(n_runs):
+        rng = common.rng(seed0 + 97 * r)
+        tr = generate(paper_mix(arrivals=make_process(kind, rate)), rng,
+                      n_tasks, pred=common.predictor())
+        sim = ClusterSimulator(
+            PAPER_NPU, make_policy(policy, preemptive=True),
+            ClusterConfig(mechanism="dynamic", n_devices=n_devices,
+                          placement="least_loaded"))
+        sim.run(tr)
+        runs.append(sim.summary())
+    return metrics.aggregate(runs)
+
+
+def find_knee(points: Sequence[Tuple[float, Dict[str, float]]],
+              target: float = SLA_KNEE_TARGET) -> float:
+    """Highest offered load whose SLA satisfaction still clears ``target``
+    (0 when even the lightest load misses it)."""
+    knee = 0.0
+    for load, m in sorted(points, key=lambda p: p[0]):
+        if m["sla_satisfaction"] >= target:
+            knee = load
+    return knee
+
+
+def sweep(kinds: Sequence[str], policies: Sequence[str],
+          device_counts: Sequence[int], loads: Sequence[float],
+          n_runs: int, tasks_per_device: int = TASKS_PER_DEVICE
+          ) -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    for kind in kinds:
+        for pol in policies:
+            for nd in device_counts:
+                curve = []
+                for load in loads:
+                    t0 = time.perf_counter()
+                    m = run_point(kind, pol, nd, load,
+                                  n_tasks=tasks_per_device * nd,
+                                  n_runs=n_runs)
+                    us = (time.perf_counter() - t0) / n_runs * 1e6
+                    curve.append((load, m))
+                    tag = f"load_sweep.{kind}.{pol}.d{nd}.load{load:g}"
+                    rows.append((tag, us, (
+                        f"tput={m['throughput']:.1f};"
+                        f"goodput={m['goodput']:.1f};"
+                        f"p95_ntt={m['p95_ntt']:.2f};"
+                        f"p99_ntt={m['p99_ntt']:.2f};"
+                        f"p99_tat={m['p99_turnaround']*1e3:.1f}ms;"
+                        f"sla={m['sla_satisfaction']:.3f};"
+                        f"util={m['util_mean']:.3f}")))
+                knee = find_knee(curve)
+                rows.append((f"load_sweep.{kind}.{pol}.d{nd}.sla_knee",
+                             0.0, f"load={knee:g}@sla>={SLA_KNEE_TARGET}"))
+    return rows
+
+
+def run(smoke: bool = False) -> List[Tuple[str, float, str]]:
+    """Entry point for benchmarks/run.py (full sweep) and --smoke (CI)."""
+    if smoke:
+        return sweep(ARRIVAL_KINDS, POLICIES, DEVICE_COUNTS,
+                     loads=(0.6, 1.2), n_runs=1, tasks_per_device=8)
+    return sweep(ARRIVAL_KINDS, POLICIES, DEVICE_COUNTS, LOADS, n_runs=3)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (2 loads, 1 run per point)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="re-base every benchmark RNG stream")
+    args = ap.parse_args()
+    common.set_seed(args.seed)
+    print("name,us_per_call,derived")
+    common.emit(run(smoke=args.smoke))
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,7 @@ from repro.hw import PAPER_NPU
 
 def run() -> List:
     pred = common.predictor()
-    rng = np.random.default_rng(99)
+    rng = common.rng(99)
     preds, actuals = [], []
     for i in range(500):
         name = str(rng.choice(pw.WORKLOAD_NAMES))

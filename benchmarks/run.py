@@ -3,16 +3,34 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Figures 5/6 (preemption
 mechanisms), 11/12 (scheduling policies, static vs dynamic mechanism),
 13/14 (SLA + tail latency), 15 (CHECKPOINT vs KILL), prediction accuracy
-vs oracle, plus the §Roofline table derived from the dry-run artifacts.
+vs oracle, the §Roofline table derived from the dry-run artifacts, the
+multi-NPU cluster-scaling sweep, and the offered-load sweep (traffic
+subsystem: latency–throughput curves + SLA knee).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/run.py [only] [--seed N]
+
+``only`` filters modules by substring; ``--seed`` re-bases every benchmark
+RNG stream (the default 0 reproduces the historical hard-coded seeds).
 """
+import argparse
+import os
 import sys
 import time
+
+# allow `python benchmarks/run.py` from anywhere, even without
+# PYTHONPATH=src: make both `benchmarks` and `repro` importable
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
 
 
 def main() -> None:
     from benchmarks import (cluster_scaling, common, fig5_fig6_mechanisms,
                             fig11_fig12_policies, fig13_fig14_qos,
-                            fig15_kill_sensitivity, pred_accuracy, roofline)
+                            fig15_kill_sensitivity, load_sweep,
+                            pred_accuracy, roofline)
     modules = [
         ("fig5_fig6", fig5_fig6_mechanisms),
         ("fig11_fig12", fig11_fig12_policies),
@@ -21,11 +39,18 @@ def main() -> None:
         ("pred_accuracy", pred_accuracy),
         ("roofline", roofline),
         ("cluster_scaling", cluster_scaling),
+        ("load_sweep", load_sweep),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("only", nargs="?", default=None,
+                    help="run only modules whose name contains this")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="re-base every benchmark RNG stream")
+    args = ap.parse_args()
+    common.set_seed(args.seed)
     print("name,us_per_call,derived")
     for name, mod in modules:
-        if only and only not in name:
+        if args.only and args.only not in name:
             continue
         t0 = time.perf_counter()
         rows = mod.run()

@@ -8,7 +8,9 @@ from repro.core.cluster import (PLACEMENT_NAMES, Cluster,  # noqa: F401
                                 ClusterConfig, ClusterSimulator, DeviceState,
                                 make_placement)
 from repro.core.metrics import (antt, cluster_summary, fairness,  # noqa: F401
-                                per_device_summary, stp, summarize)
+                                goodput, per_device_summary,
+                                per_tenant_summary, percentile_summary,
+                                sla_satisfaction, stp, summarize)
 from repro.core.predictor import LengthRegressor, Predictor  # noqa: F401
 from repro.core.preemption import Mechanism, select_mechanism  # noqa: F401
 from repro.core.scheduler import POLICY_NAMES, make_policy  # noqa: F401

@@ -164,6 +164,10 @@ class ClusterSimulator:
 
     # ------------------------------------------------------------------
     def run(self, tasks: Sequence[Task]) -> List[Task]:
+        """``tasks`` may be a prebuilt Task list or a
+        :class:`repro.workloads.Trace` (materialized fresh per call)."""
+        from repro.workloads.trace_io import as_task_list  # no import cycle
+        tasks = as_task_list(tasks)
         hw, cfg, arbiter = self.hw, self.cfg, self.arbiter
         arbiter.reset()
         self.log = []

@@ -1,11 +1,15 @@
-"""Multi-program performance metrics (Eyerman & Eeckhout; paper Eq 1-2)."""
+"""Multi-program performance metrics (Eyerman & Eeckhout; paper Eq 1-2),
+tail-latency percentiles, and per-tenant SLA/goodput summaries."""
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.task import Task
+
+DEFAULT_SLA_SCALE = 8.0      # fallback for tasks with no tenant SLA class
+PERCENTILES = (50, 95, 99)
 
 
 def antt(tasks: Sequence[Task]) -> float:
@@ -31,6 +35,22 @@ def sla_violation_rate(tasks: Sequence[Task], n: float) -> float:
     return float(np.mean(v))
 
 
+def sla_satisfaction(tasks: Sequence[Task],
+                     default_scale: float = DEFAULT_SLA_SCALE) -> float:
+    """Fraction of tasks meeting their *own* SLA target (per-task
+    ``sla_scale`` where assigned, ``default_scale`` otherwise)."""
+    return float(np.mean([t.sla_met(default_scale) for t in tasks]))
+
+
+def goodput(tasks: Sequence[Task], makespan: Optional[float] = None,
+            default_scale: float = DEFAULT_SLA_SCALE) -> float:
+    """SLA-meeting completions per second of offered-load wall time."""
+    if makespan is None:
+        makespan = max(t.completion for t in tasks)
+    met = float(np.sum([t.sla_met(default_scale) for t in tasks]))
+    return met / max(makespan, 1e-12)
+
+
 def tail_latency_ratio(tasks: Sequence[Task], priority: int = 9,
                        pct: float = 95.0) -> float:
     """``pct``-ile of NTT among tasks of the given priority (Fig 14)."""
@@ -38,6 +58,23 @@ def tail_latency_ratio(tasks: Sequence[Task], priority: int = 9,
     if not sel:
         return float("nan")
     return float(np.percentile(sel, pct))
+
+
+def percentile_summary(tasks: Sequence[Task],
+                       pcts: Sequence[int] = PERCENTILES) -> Dict[str, float]:
+    """p50/p95/p99 of turnaround, NTT, and TTFT (time to first service —
+    the queueing delay the mean hides)."""
+    tat = [t.turnaround for t in tasks]
+    ntts = [t.ntt for t in tasks]
+    ttft = [t.first_service - t.arrival for t in tasks
+            if t.first_service is not None]
+    out: Dict[str, float] = {}
+    for p in pcts:
+        out[f"p{p}_turnaround"] = float(np.percentile(tat, p))
+        out[f"p{p}_ntt"] = float(np.percentile(ntts, p))
+        out[f"p{p}_ttft"] = (float(np.percentile(ttft, p)) if ttft
+                             else float("nan"))
+    return out
 
 
 def summarize(tasks: Sequence[Task]) -> Dict[str, float]:
@@ -50,7 +87,10 @@ def summarize(tasks: Sequence[Task]) -> Dict[str, float]:
         "preemptions": float(np.sum([t.n_preemptions for t in tasks])),
         "kills": float(np.sum([t.n_kills for t in tasks])),
         "ckpt_overhead": float(np.sum([t.checkpoint_overhead for t in tasks])),
+        "sla_satisfaction": sla_satisfaction(tasks),
+        "goodput": goodput(tasks),
     }
+    out.update(percentile_summary(tasks))
     for n in (2, 4, 8, 12, 16, 20):
         out[f"sla_viol@{n}"] = sla_violation_rate(tasks, n)
     return out
@@ -64,18 +104,46 @@ def aggregate(runs: Iterable[Dict[str, float]]) -> Dict[str, float]:
 
 
 # ---------------------------------------------------------------------------
+# Tenant (SLA-class) metrics — see repro/workloads/
+# ---------------------------------------------------------------------------
+
+def per_tenant_summary(tasks: Sequence[Task],
+                       default_scale: float = DEFAULT_SLA_SCALE
+                       ) -> Dict[str, Dict[str, float]]:
+    """ANTT/STP, tail percentiles, and SLA satisfaction per tenant class
+    (tasks with no tenant group under ``"-"``)."""
+    groups: Dict[str, List[Task]] = {}
+    for t in tasks:
+        groups.setdefault(t.tenant if t.tenant is not None else "-",
+                          []).append(t)
+    out: Dict[str, Dict[str, float]] = {}
+    for tenant, ts in sorted(groups.items()):
+        row = {"antt": antt(ts), "stp": stp(ts), "n_tasks": float(len(ts)),
+               "sla_satisfaction": sla_satisfaction(ts, default_scale),
+               "goodput": goodput(ts, max(t.completion for t in tasks),
+                                  default_scale)}
+        row.update(percentile_summary(ts))
+        out[tenant] = row
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Cluster (multi-NPU) metrics — see core/cluster.py
 # ---------------------------------------------------------------------------
 
 def per_device_summary(tasks: Sequence[Task]) -> Dict[int, Dict[str, float]]:
-    """ANTT/STP per device, grouped by the device each task completed on."""
+    """ANTT/STP and tail percentiles per device, grouped by the device each
+    task completed on."""
     groups: Dict[int, List[Task]] = {}
     for t in tasks:
         groups.setdefault(t.device if t.device is not None else -1,
                           []).append(t)
-    return {dev: {"antt": antt(ts), "stp": stp(ts),
-                  "n_tasks": float(len(ts))}
-            for dev, ts in sorted(groups.items())}
+    out: Dict[int, Dict[str, float]] = {}
+    for dev, ts in sorted(groups.items()):
+        row = {"antt": antt(ts), "stp": stp(ts), "n_tasks": float(len(ts))}
+        row.update(percentile_summary(ts))
+        out[dev] = row
+    return out
 
 
 def device_utilization(busy_times: Sequence[float],
@@ -112,8 +180,9 @@ def cluster_health(tasks: Sequence[Task], busy_times: Sequence[float],
 
 def cluster_summary(tasks: Sequence[Task], busy_times: Sequence[float],
                     makespan: float) -> Dict[str, float]:
-    """Global ``summarize`` plus cluster-level utilization, throughput and
-    cross-device balance (STP/ANTT across devices)."""
+    """Global ``summarize`` (incl. tail percentiles) plus cluster-level
+    utilization, throughput and cross-device balance (STP/ANTT across
+    devices)."""
     out = summarize(tasks)
     out.update(cluster_health(tasks, busy_times, makespan))
     return out

@@ -37,6 +37,8 @@ class Task:
     node_out_bytes: np.ndarray
     predicted_total: float             # Time_estimated (predictor, LUT unroll)
     in_len: int = 0
+    tenant: Optional[str] = None       # SLA class this task belongs to
+    sla_scale: Optional[float] = None  # SLA target = sla_scale x isolated time
 
     # ---- dynamic scheduling state ----
     state: TaskState = TaskState.WAITING
@@ -102,3 +104,15 @@ class Task:
     def ntt(self) -> float:
         """Normalized turnaround time C_multi / C_single (Eq 1)."""
         return self.turnaround / self.isolated_time
+
+    @property
+    def sla_target(self) -> Optional[float]:
+        """Absolute turnaround budget (seconds), or None when the task has
+        no tenant-assigned SLA class."""
+        if self.sla_scale is None:
+            return None
+        return self.sla_scale * self.isolated_time
+
+    def sla_met(self, default_scale: float = 8.0) -> bool:
+        scale = self.sla_scale if self.sla_scale is not None else default_scale
+        return self.turnaround <= scale * self.isolated_time

@@ -7,21 +7,27 @@ RNN tasks additionally sample an input sentence length from the profiled
 set; the *actual* time-unrolled length is drawn from the profiled output
 lengths for that input length, while the scheduler only sees the LUT
 prediction (paper §VI).
+
+The sampling itself now lives in the traffic subsystem
+(``repro.workloads``): specs are drawn by ``sample_task_spec`` and expanded
+RNG-free by ``materialize_task``, and :func:`make_workload` is a thin
+wrapper over ``generate(paper_mix(...))`` with the ``uniform_window``
+compatibility process — bit-identical to the original generator at equal
+seeds (pinned by tests/test_workloads.py).  Use ``repro.workloads``
+directly for open-loop arrival processes, tenant SLA classes, and trace
+record/replay.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.configs import paper_workloads as pw
-from repro.core.ops import GemmOp, NetworkDesc, VectorOp
-from repro.core.predictor import LengthRegressor, Predictor, node_time
-from repro.core.task import PRIORITY_LEVELS, Task
-from repro.hw import HardwareModel
-
-BATCH_CHOICES = (1, 4, 16)
+from repro.core.predictor import LengthRegressor, Predictor
+from repro.core.task import Task
+from repro.workloads.spec import (BATCH_CHOICES,  # noqa: F401  (re-export)
+                                  materialize_task, sample_task_spec)
 
 
 def build_regressors(pred: Predictor, rng: np.random.Generator) -> None:
@@ -31,56 +37,15 @@ def build_regressors(pred: Predictor, rng: np.random.Generator) -> None:
         pred.register_regressor(name, LengthRegressor().fit(pairs))
 
 
-def _node_arrays(net: NetworkDesc, in_len: int, unroll: int,
-                 pred: Predictor) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    ops = net.ops(in_len, unroll)
-    times = np.asarray([float(node_time(o, pred.hw, pred.acc)) for o in ops])
-    out_bytes = np.asarray([
-        o.output_bytes(pred.hw.bytes_per_elem) if isinstance(o, GemmOp)
-        else o.elems * pred.hw.bytes_per_elem
-        for o in ops], dtype=np.int64)
-    # per-node tile quantum (preemption-point granularity): inner-tile time
-    sw, sh = pred.hw.sa_rows, pred.hw.sa_cols
-    c1 = (pred.acc + sh + 2 * sw) / pred.hw.freq_hz
-    m1 = (sh * sw + sh * pred.acc) * pred.hw.bytes_per_elem / pred.hw.hbm_bw
-    tile_t = max(c1, m1) / pred.hw.n_mxu
-    tile_times = np.full(len(ops), tile_t)
-    return times, out_bytes, tile_times
-
-
 def make_task(tid: int, model: str, pred: Predictor,
               rng: np.random.Generator, arrival: float,
               priority: Optional[int] = None,
               batch: Optional[int] = None,
               in_len: Optional[int] = None) -> Task:
-    net = pw.get_network(model)
-    batch = batch if batch is not None else int(rng.choice(BATCH_CHOICES))
-    net = net.with_batch(batch)
-    priority = priority if priority is not None else int(
-        rng.choice(PRIORITY_LEVELS))
-
-    actual_unroll = 0
-    if net.kind == "rnn_seq2seq":
-        reg = pred.regressor(model)
-        if in_len is None:
-            in_len = int(rng.choice(reg.input_lengths))
-        actual_unroll = reg.sample_actual(in_len, rng)
-        predicted = pred.predict(net, in_len=in_len).total_time
-    elif net.kind == "rnn_linear":
-        if in_len is None:
-            in_len = int(rng.integers(4, 61))
-        predicted = pred.predict(net, in_len=in_len).total_time
-    else:
-        in_len = 0
-        predicted = pred.predict(net).total_time
-
-    times, out_bytes, tile_times = _node_arrays(net, in_len or 0,
-                                                actual_unroll, pred)
-    task = Task(tid=tid, model=model, priority=priority, arrival=arrival,
-                batch=batch, node_times=times, node_out_bytes=out_bytes,
-                predicted_total=predicted, in_len=in_len or 0)
-    task.node_tile_times = tile_times
-    return task
+    """Sample one §III task (thin wrapper: spec draw + materialization)."""
+    spec = sample_task_spec(tid, model, pred, rng, arrival=arrival,
+                            priority=priority, batch=batch, in_len=in_len)
+    return materialize_task(spec, pred)
 
 
 def make_workload(pred: Predictor, rng: np.random.Generator,
@@ -94,15 +59,11 @@ def make_workload(pred: Predictor, rng: np.random.Generator,
     isolated time: 0 → all arrive at t=0 (max contention); 1 → arrivals
     spread over the whole serial makespan (light contention).
     """
-    chosen = [str(rng.choice(models)) for _ in range(n_tasks)]
-    tasks = [make_task(i, m, pred, rng, arrival=0.0) for i, m in enumerate(chosen)]
-    if window is None:
-        total = sum(t.isolated_time for t in tasks)
-        window = contention * total
-    for t in tasks:
-        t.arrival = float(rng.uniform(0.0, window))
-        t.last_wake = t.arrival
-    return tasks
+    from repro.workloads import UniformWindow, generate, paper_mix
+    mix = paper_mix(arrivals=UniformWindow(contention=contention,
+                                           window=window),
+                    models=tuple(models))
+    return generate(mix, rng, n_tasks, pred=pred).tasks()
 
 
 def clone_tasks(tasks: Sequence[Task]) -> List[Task]:
@@ -114,7 +75,8 @@ def clone_tasks(tasks: Sequence[Task]) -> List[Task]:
                   arrival=t.arrival, batch=t.batch,
                   node_times=t.node_times.copy(),
                   node_out_bytes=t.node_out_bytes.copy(),
-                  predicted_total=t.predicted_total, in_len=t.in_len)
+                  predicted_total=t.predicted_total, in_len=t.in_len,
+                  tenant=t.tenant, sla_scale=t.sla_scale)
         nt.node_tile_times = getattr(t, "node_tile_times", None)
         out.append(nt)
     return out

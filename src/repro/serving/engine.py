@@ -155,7 +155,8 @@ class ServingEngine:
         task = Task(tid=req.rid, model=req.arch, priority=req.priority,
                     arrival=req.arrival, batch=req.batch,
                     node_times=node_times, node_out_bytes=node_out_bytes,
-                    predicted_total=predicted_total, in_len=req.prompt_len)
+                    predicted_total=predicted_total, in_len=req.prompt_len,
+                    tenant=req.tenant, sla_scale=req.sla_scale)
         return _Job(req=req, task=task, executor=self._executors[req.arch],
                     prefill_step_time=prefill_step,
                     decode_step_time=decode_step)
@@ -174,6 +175,11 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def run(self, requests: List[InferenceRequest]) -> List[RequestResult]:
+        """``requests`` may be a prebuilt request list or a serving-kind
+        :class:`repro.workloads.Trace` (payloads synthesized per record)."""
+        if hasattr(requests, "records"):     # workloads.Trace (duck-typed)
+            from repro.workloads.serving_adapter import to_requests
+            requests = to_requests(requests, self._models)
         jobs = {r.rid: self._make_job(r) for r in requests}
         arrivals = [(r.arrival, r.rid) for r in requests]
         heapq.heapify(arrivals)
@@ -276,7 +282,8 @@ class ServingEngine:
                 completion=clock, isolated_time=t.isolated_time,
                 n_preemptions=t.n_preemptions, n_kills=t.n_kills,
                 ckpt_overhead=t.checkpoint_overhead, priority=j.req.priority,
-                sla_target=j.req.sla_scale * t.isolated_time)
+                sla_target=j.req.sla_scale * t.isolated_time,
+                tenant=j.req.tenant)
             self.completed.append(j.result)
             self.tasks.append(t)
             self._run_tasks.append(t)
@@ -385,6 +392,12 @@ class ServingEngine:
             if step_done(j):
                 complete(d, j)
         return self.completed
+
+    # ------------------------------------------------------------------
+    def per_tenant(self) -> Dict[str, Dict[str, float]]:
+        """SLA-class breakdown of every completed request (ANTT/STP, tail
+        percentiles, SLA satisfaction per tenant)."""
+        return metrics.per_tenant_summary(self.tasks)
 
     # ------------------------------------------------------------------
     def summary(self) -> Dict[str, float]:

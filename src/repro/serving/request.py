@@ -16,6 +16,7 @@ class InferenceRequest:
     priority: int = 3               # 1 / 3 / 9
     arrival: float = 0.0            # engine virtual seconds
     sla_scale: float = 8.0          # SLA target = sla_scale x isolated time
+    tenant: Optional[str] = None    # SLA class (see repro.workloads)
     eos_id: Optional[int] = None    # stop token (None → run to max_new)
     # ground-truth decode length for simulation-mode runs (sampled from the
     # profiled distribution, unknown to the scheduler)
@@ -46,6 +47,7 @@ class RequestResult:
     ckpt_overhead: float
     priority: int
     sla_target: float
+    tenant: Optional[str] = None
 
     @property
     def turnaround(self) -> float:

@@ -1,0 +1,71 @@
+"""Traffic-generation subsystem: arrival processes, tenant SLA classes,
+and trace record/replay.
+
+This package replaces ad-hoc task lists with a composable workload layer —
+the evaluation vehicle for every load-dependent question the ROADMAP asks
+(sustained heavy traffic, bursts, per-tenant SLAs, latency–throughput
+knees).
+
+Arrival processes (``repro.workloads.arrivals``)
+------------------------------------------------
+``sample(rng, service_times) -> arrival times``, one per task:
+
+* ``UniformWindow(contention, window)`` — the paper's §III dispatch;
+  bit-compatible with the pre-refactor ``core.trace.make_workload``.
+* ``Poisson(rate)`` — open-loop memoryless arrivals (requests/second).
+* ``MMPP(rate_on, rate_off, mean_on, mean_off)`` — bursty on/off traffic;
+  ``MMPP.bursty(rate, duty)`` builds a burst source with a target mean rate.
+* ``Diurnal(base_rate, amplitude, period)`` — sinusoidal rate curve
+  (non-homogeneous Poisson via thinning).
+* ``ClosedLoop(n_clients, think_time)`` — N synchronous clients; next
+  request follows the previous one's (isolated-time-approximated)
+  completion plus an exponential think time.
+
+``make_arrival(name, **kwargs)`` is the string-keyed factory.
+
+Tenant specs (``repro.workloads.tenants``)
+------------------------------------------
+``TenantSpec(name, models, share, priority, sla_scale, batch_choices,
+prompt_len_range, decode_len_range, ...)`` describes one tenant's model
+mix, traffic share, scheduler priority and SLA multiplier (target
+turnaround = ``sla_scale`` x isolated time).  ``TrafficMix(tenants,
+arrivals, kind)`` composes tenants with an arrival process; ``kind`` is
+``"paper"`` (§III 8-DNN suite → simulator ``Task``s) or ``"serving"``
+(registered architectures → engine ``InferenceRequest``s).
+``paper_mix()`` is the §III methodology as a one-tenant mix.
+
+Generation and replay
+---------------------
+``generate(mix, rng, n_tasks, pred) -> Trace`` samples a replayable trace:
+same (mix, seed) ⇒ identical records, always.  ``Trace.save(path)`` /
+``Trace.load(path, pred)`` round-trip JSONL; ``Trace.tasks()`` materializes
+fresh simulator tasks (RNG-free, bit-identical per call) and
+``to_requests(trace, models)`` expands serving-kind traces into engine
+requests with payloads synthesized from each record's own seed.  The
+simulators and the serving engine accept a ``Trace`` directly in ``run``.
+
+Determinism guarantees
+----------------------
+1. ``generate`` is a pure function of (mix, seed, n_tasks).
+2. Materialization never consumes RNG: export → reload → run is
+   bit-identical to running the original trace, on the single-NPU
+   simulator, the cluster simulator, and the serving engine alike.
+3. ``paper_mix()`` + ``UniformWindow`` reproduces the pre-refactor §III
+   generator exactly at equal seeds (pinned by tests/test_workloads.py).
+"""
+from repro.workloads.arrivals import (ARRIVAL_NAMES, ArrivalProcess,  # noqa: F401
+                                      ClosedLoop, Diurnal, MMPP, Poisson,
+                                      UniformWindow, make_arrival)
+from repro.workloads.generator import generate  # noqa: F401
+from repro.workloads.spec import (BATCH_CHOICES, TaskSpec,  # noqa: F401
+                                  materialize_task, sample_task_spec)
+from repro.workloads.tenants import (TenantSpec, TrafficMix,  # noqa: F401
+                                     paper_mix)
+from repro.workloads.trace_io import Trace, as_task_list  # noqa: F401
+
+
+def to_requests(trace, models):
+    """Expand a serving-kind trace into engine requests (lazy import: the
+    serving stack pulls in JAX model code the simulators don't need)."""
+    from repro.workloads.serving_adapter import to_requests as _impl
+    return _impl(trace, models)

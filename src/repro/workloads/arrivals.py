@@ -1,0 +1,215 @@
+"""Arrival processes: when the sampled tasks hit the cluster.
+
+Every process maps ``(rng, service_times) -> arrival times`` for one task
+each; ``service_times[i]`` is task *i*'s isolated service estimate, which
+processes that pace themselves off the work itself (``uniform_window``,
+``closed_loop``) consume and open-loop processes ignore.  All sampling goes
+through the passed ``numpy.random.Generator``, so a (process, seed) pair is
+a complete, replayable description of the arrival pattern.
+
+=================  ========================================================
+``uniform_window``  the paper's §III dispatch: uniform over a contention
+                    window (a fraction of the summed isolated time) —
+                    bit-compatible with the pre-refactor generator.
+``poisson``         open-loop memoryless arrivals at a fixed rate (req/s);
+                    the classic sustained-traffic model.
+``mmpp``            Markov-modulated Poisson: exponentially-dwelling ON/OFF
+                    states with per-state rates — bursty traffic.
+``diurnal``         non-homogeneous Poisson with a sinusoidal rate curve
+                    (thinning), for day/night load patterns.
+``closed_loop``     N clients issuing think-time-separated requests; the
+                    next request of a client follows the (isolated-service
+                    approximated) completion of its previous one.
+=================  ========================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class ArrivalProcess:
+    """Base: ``sample`` returns one arrival time per service-time entry."""
+    name = "base"
+
+    def sample(self, rng: np.random.Generator,
+               service_times: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def describe(self) -> Dict:
+        d = {k: v for k, v in dataclasses.asdict(self).items()}
+        d["process"] = self.name
+        return d
+
+
+@dataclasses.dataclass
+class UniformWindow(ArrivalProcess):
+    """§III compatibility: arrivals uniform over ``window`` seconds, which
+    defaults to ``contention x sum(service_times)`` (0 → all at t=0,
+    1 → spread over the whole serial makespan)."""
+    contention: float = 0.5
+    window: Optional[float] = None
+    name = "uniform_window"
+
+    def sample(self, rng, service_times):
+        window = self.window
+        if window is None:
+            window = self.contention * float(np.sum(service_times))
+        # one scalar draw per task, mirroring the legacy generator's loop
+        # (bit-compatibility is part of this process's contract)
+        return np.asarray([float(rng.uniform(0.0, window))
+                           for _ in range(len(service_times))])
+
+
+@dataclasses.dataclass
+class Poisson(ArrivalProcess):
+    """Open-loop Poisson arrivals at ``rate`` requests/second."""
+    rate: float
+    name = "poisson"
+
+    def __post_init__(self):
+        if self.rate <= 0:
+            raise ValueError("poisson rate must be > 0")
+
+    def sample(self, rng, service_times):
+        n = len(service_times)
+        return np.cumsum(rng.exponential(1.0 / self.rate, size=n))
+
+
+@dataclasses.dataclass
+class MMPP(ArrivalProcess):
+    """Two-state Markov-modulated Poisson process (bursty ON/OFF traffic).
+
+    Dwell times in each state are exponential with means ``mean_on`` /
+    ``mean_off``; arrivals are Poisson at ``rate_on`` / ``rate_off`` while
+    the state holds.  ``rate_off = 0`` gives a pure on-off burst source.
+    """
+    rate_on: float
+    rate_off: float
+    mean_on: float
+    mean_off: float
+    name = "mmpp"
+
+    def __post_init__(self):
+        if self.rate_on < 0 or self.rate_off < 0:
+            raise ValueError("mmpp rates must be >= 0")
+        if self.rate_on == 0 and self.rate_off == 0:
+            raise ValueError("mmpp needs a positive rate in >= 1 state")
+        if self.mean_on <= 0 or self.mean_off <= 0:
+            raise ValueError("mmpp dwell means must be > 0")
+
+    @classmethod
+    def bursty(cls, rate: float, duty: float = 0.3,
+               cycle: Optional[float] = None) -> "MMPP":
+        """ON/OFF source with long-run average ``rate``: ON for
+        ``duty x cycle`` at ``rate/duty``, silent otherwise."""
+        if not 0 < duty <= 1:
+            raise ValueError("duty must be in (0, 1]")
+        if cycle is None:
+            cycle = 20.0 / rate      # ~20 arrivals per ON burst
+        return cls(rate_on=rate / duty, rate_off=0.0,
+                   mean_on=duty * cycle, mean_off=(1.0 - duty) * cycle)
+
+    def sample(self, rng, service_times):
+        n = len(service_times)
+        out = np.empty(n)
+        t, k, on = 0.0, 0, True
+        while k < n:
+            rate = self.rate_on if on else self.rate_off
+            dwell = rng.exponential(self.mean_on if on else self.mean_off)
+            if rate > 0:
+                # memorylessness: arrivals vs. state-switch race
+                dt = rng.exponential(1.0 / rate)
+                while dt < dwell and k < n:
+                    t += dt
+                    dwell -= dt
+                    out[k] = t
+                    k += 1
+                    dt = rng.exponential(1.0 / rate)
+            t += dwell
+            on = not on
+        return out
+
+
+@dataclasses.dataclass
+class Diurnal(ArrivalProcess):
+    """Non-homogeneous Poisson with rate
+    ``base_rate * (1 + amplitude * sin(2*pi*t / period))`` via thinning."""
+    base_rate: float
+    amplitude: float = 0.5
+    period: float = 1.0
+    name = "diurnal"
+
+    def __post_init__(self):
+        if not 0 <= self.amplitude < 1:
+            raise ValueError("amplitude must be in [0, 1)")
+
+    def rate_at(self, t: float) -> float:
+        return self.base_rate * (
+            1.0 + self.amplitude * math.sin(2.0 * math.pi * t / self.period))
+
+    def sample(self, rng, service_times):
+        n = len(service_times)
+        lam_max = self.base_rate * (1.0 + self.amplitude)
+        out = np.empty(n)
+        t, k = 0.0, 0
+        while k < n:
+            t += rng.exponential(1.0 / lam_max)
+            if rng.uniform() * lam_max <= self.rate_at(t):
+                out[k] = t
+                k += 1
+        return out
+
+
+@dataclasses.dataclass
+class ClosedLoop(ArrivalProcess):
+    """``n_clients`` synchronous clients with exponential think time.
+
+    Tasks are dealt to clients round-robin; a client issues its next
+    request one think time after its previous request *completes*, with
+    completion approximated by the isolated service time (the actual
+    contended completion is execution-dependent, which a pre-sampled,
+    replayable trace cannot observe — so this is the standard open-loop
+    approximation of a closed system, documented and deterministic).
+    """
+    n_clients: int
+    think_time: float
+    name = "closed_loop"
+
+    def __post_init__(self):
+        if self.n_clients < 1:
+            raise ValueError("n_clients must be >= 1")
+
+    def sample(self, rng, service_times):
+        n = len(service_times)
+        clocks = np.zeros(self.n_clients)
+        out = np.empty(n)
+        for i in range(n):
+            c = i % self.n_clients
+            out[i] = clocks[c]
+            clocks[c] += float(service_times[i]) + rng.exponential(
+                self.think_time)
+        return out
+
+
+_PROCESSES = {
+    "uniform_window": UniformWindow,
+    "poisson": Poisson,
+    "mmpp": MMPP,
+    "diurnal": Diurnal,
+    "closed_loop": ClosedLoop,
+}
+
+ARRIVAL_NAMES = tuple(_PROCESSES)
+
+
+def make_arrival(name: str, **kwargs) -> ArrivalProcess:
+    try:
+        cls = _PROCESSES[name.lower()]
+    except KeyError:
+        raise KeyError(f"unknown arrival process {name!r}; "
+                       f"choose from {ARRIVAL_NAMES}") from None
+    return cls(**kwargs)

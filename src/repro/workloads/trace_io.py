@@ -1,0 +1,104 @@
+"""Trace record/replay: JSONL export and deterministic reload.
+
+A :class:`Trace` is the replayable unit of this subsystem: an ordered list
+of :class:`~repro.workloads.spec.TaskSpec` records plus mix metadata.
+``save``/``load`` round-trip it through JSONL (one header line, then one
+record per line), and :meth:`Trace.tasks` materializes *fresh* Task objects
+on every call — so the same trace can drive any number of policy runs, each
+starting from pristine dynamic state, across the single-NPU simulator, the
+cluster simulator, and the serving engine, with bit-identical inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import IO, Dict, List, Optional, Sequence, Union
+
+from repro.core.predictor import Predictor
+from repro.core.task import Task
+from repro.workloads.spec import TaskSpec, materialize_task
+
+TRACE_FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass
+class Trace:
+    """An ordered, replayable set of sampled task records."""
+    records: List[TaskSpec]
+    kind: str = "paper"                 # "paper" | "serving"
+    meta: Dict = dataclasses.field(default_factory=dict)
+    # bound at generation/load time; not serialized
+    pred: Optional[Predictor] = None
+    _fresh: Optional[List[Task]] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    # ------------------------------------------------------------------
+    def tasks(self, pred: Optional[Predictor] = None) -> List[Task]:
+        """Materialize fresh :class:`Task` objects (paper-kind traces).
+
+        Every call returns brand-new tasks with pristine dynamic state;
+        materialization is RNG-free, so repeated calls are bit-identical.
+        """
+        if self.kind != "paper":
+            raise ValueError(
+                f"{self.kind!r} traces materialize into serving requests; "
+                "use repro.workloads.to_requests(trace, models)")
+        pred = pred or self.pred
+        if pred is None:
+            raise ValueError("trace is not bound to a Predictor; "
+                             "pass one to tasks(pred)")
+        if self._fresh is not None and pred is self.pred:
+            out, self._fresh = self._fresh, None   # one-shot generation cache
+            return out
+        return [materialize_task(s, pred) for s in self.records]
+
+    # ------------------------------------------------------------------
+    def save(self, path_or_fp: Union[str, IO[str]]) -> None:
+        """Write JSONL: a header line, then one record per line."""
+        header = {"version": TRACE_FORMAT_VERSION, "kind": self.kind,
+                  "n_records": len(self.records), "meta": self.meta}
+        if hasattr(path_or_fp, "write"):
+            self._write(path_or_fp, header)
+        else:
+            with open(path_or_fp, "w") as fp:
+                self._write(fp, header)
+
+    def _write(self, fp: IO[str], header: Dict) -> None:
+        fp.write(json.dumps(header, sort_keys=True) + "\n")
+        for rec in self.records:
+            fp.write(json.dumps(rec.to_json(), sort_keys=True) + "\n")
+
+    @classmethod
+    def load(cls, path_or_fp: Union[str, IO[str]],
+             pred: Optional[Predictor] = None) -> "Trace":
+        if hasattr(path_or_fp, "read"):
+            lines = [ln for ln in path_or_fp.read().splitlines() if ln]
+        else:
+            with open(path_or_fp) as fp:
+                lines = [ln for ln in fp.read().splitlines() if ln]
+        if not lines:
+            raise ValueError("empty trace file")
+        header = json.loads(lines[0])
+        version = header.get("version")
+        if version != TRACE_FORMAT_VERSION:
+            raise ValueError(f"unsupported trace version {version!r}")
+        records = [TaskSpec.from_json(json.loads(ln)) for ln in lines[1:]]
+        if header.get("n_records") not in (None, len(records)):
+            raise ValueError(
+                f"truncated trace: header says {header['n_records']} "
+                f"records, file has {len(records)}")
+        return cls(records=records, kind=header.get("kind", "paper"),
+                   meta=header.get("meta", {}), pred=pred)
+
+
+def as_task_list(obj: Union[Trace, Sequence[Task]],
+                 pred: Optional[Predictor] = None) -> List[Task]:
+    """Normalize a run() input: a Trace materializes fresh tasks, a plain
+    sequence passes through unchanged."""
+    if isinstance(obj, Trace) or (hasattr(obj, "records")
+                                  and callable(getattr(obj, "tasks", None))):
+        return obj.tasks(pred)
+    return list(obj)

@@ -3,6 +3,8 @@ import sys
 
 # tests run on the single real CPU device (the dry-run sets its own flags)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, so tests can import the benchmarks namespace package
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
 import numpy as np

@@ -6,12 +6,14 @@ from repro.core import metrics
 from repro.core.task import Task
 
 
-def done_task(tid, priority, single, multi, arrival=0.0):
+def done_task(tid, priority, single, multi, arrival=0.0, tenant=None,
+              sla_scale=None, first_service=None):
     t = Task(tid=tid, model="m", priority=priority, arrival=arrival, batch=1,
              node_times=np.asarray([single]),
              node_out_bytes=np.asarray([1024]),
-             predicted_total=single)
+             predicted_total=single, tenant=tenant, sla_scale=sla_scale)
     t.completion = arrival + multi
+    t.first_service = first_service
     return t
 
 
@@ -55,3 +57,78 @@ def test_tail_latency_high_priority_only():
 def test_aggregate_means():
     r = metrics.aggregate([{"a": 1.0, "b": 2.0}, {"a": 3.0, "b": 4.0}])
     assert r == {"a": 2.0, "b": 3.0}
+
+
+# ---------------------------------------------------------------------------
+# tail percentiles, per-tenant SLA classes, goodput
+# ---------------------------------------------------------------------------
+
+def test_percentile_summary_hand_computed():
+    # NTT 1..100 over unit isolated time: p50=50.5, p95=95.05, p99=99.01
+    ts = [done_task(i, 3, 1.0, float(i + 1), first_service=float(i))
+          for i in range(100)]
+    p = metrics.percentile_summary(ts)
+    assert p["p50_ntt"] == pytest.approx(50.5)
+    assert p["p95_ntt"] == pytest.approx(95.05)
+    assert p["p99_ntt"] == pytest.approx(99.01)
+    assert p["p50_turnaround"] == p["p50_ntt"]      # isolated time is 1
+    assert p["p99_ttft"] == pytest.approx(98.01)    # ttft = i
+
+
+def test_percentile_summary_without_first_service_is_nan():
+    p = metrics.percentile_summary([done_task(0, 3, 1.0, 2.0)])
+    assert np.isnan(p["p95_ttft"])
+    assert p["p95_ntt"] == pytest.approx(2.0)
+
+
+def test_summarize_includes_percentiles_and_sla():
+    ts = [done_task(0, 3, 1.0, 2.0, first_service=1.0),
+          done_task(1, 3, 1.0, 4.0, first_service=3.0)]
+    s = metrics.summarize(ts)
+    for key in ("p50_ntt", "p95_ntt", "p99_ntt", "p95_turnaround",
+                "p95_ttft", "sla_satisfaction", "goodput"):
+        assert key in s
+    assert s["sla_satisfaction"] == 1.0             # both under 8x
+
+
+def test_sla_uses_per_task_scale_with_default_fallback():
+    tight = done_task(0, 3, 1.0, 5.0, sla_scale=4.0)    # misses 4x
+    loose = done_task(1, 3, 1.0, 5.0, sla_scale=6.0)    # meets 6x
+    unset = done_task(2, 3, 1.0, 5.0)                   # default 8x: meets
+    assert metrics.sla_satisfaction([tight, loose, unset]) == \
+        pytest.approx(2.0 / 3.0)
+    assert metrics.sla_satisfaction([unset], default_scale=4.0) == 0.0
+
+
+def test_goodput_counts_only_sla_meeting_tasks():
+    ts = [done_task(0, 3, 1.0, 2.0, sla_scale=4.0),     # met
+          done_task(1, 3, 1.0, 10.0, sla_scale=4.0)]    # missed
+    assert metrics.goodput(ts, makespan=10.0) == pytest.approx(0.1)
+    assert metrics.goodput(ts) == pytest.approx(0.1)    # makespan inferred
+
+
+def test_per_tenant_summary_grouping():
+    ts = [done_task(0, 9, 1.0, 2.0, tenant="a", sla_scale=4.0),
+          done_task(1, 1, 1.0, 8.0, tenant="b", sla_scale=4.0),
+          done_task(2, 3, 1.0, 3.0)]
+    pt = metrics.per_tenant_summary(ts)
+    assert set(pt) == {"a", "b", "-"}
+    assert pt["a"]["sla_satisfaction"] == 1.0
+    assert pt["b"]["sla_satisfaction"] == 0.0
+    assert pt["a"]["n_tasks"] == 1.0
+
+
+def test_per_device_summary_has_percentiles():
+    a = done_task(0, 3, 1.0, 2.0)
+    b = done_task(1, 3, 1.0, 4.0)
+    a.device, b.device = 0, 1
+    pd = metrics.per_device_summary([a, b])
+    assert pd[0]["p95_ntt"] == pytest.approx(2.0)
+    assert pd[1]["p95_ntt"] == pytest.approx(4.0)
+
+
+def test_cluster_summary_carries_percentiles():
+    a = done_task(0, 3, 1.0, 2.0)
+    a.device = 0
+    s = metrics.cluster_summary([a], busy_times=[1.0], makespan=2.0)
+    assert "p99_ntt" in s and "util_mean" in s

@@ -1,0 +1,320 @@
+"""Traffic subsystem: arrival processes, tenant mixes, trace record/replay.
+
+The pinned fingerprints in ``GOLDEN`` were produced by the pre-refactor
+``core.trace.make_workload`` (PR 2 tree) with the paper predictor profiled
+at seed 1234 — the ``uniform_window`` compatibility contract is that the
+refactored generator reproduces them bit-for-bit forever.
+"""
+import io
+
+import numpy as np
+import pytest
+
+from repro.core import metrics, trace
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.predictor import Predictor
+from repro.core.scheduler import make_policy
+from repro.core.simulator import NPUSimulator, SimConfig
+from repro.hw import PAPER_NPU
+from repro.workloads import (MMPP, ClosedLoop, Diurnal, Poisson, TenantSpec,
+                             Trace, TrafficMix, UniformWindow, generate,
+                             make_arrival, paper_mix)
+
+# (tid, model, priority, batch, in_len, arrival, isolated, predicted, nodes)
+GOLDEN = {
+    0: [
+        (0, 'RNN-MT2', 9, 1, 40, 0.050540451896, 0.13153096, 0.119847131429, 690),
+        (1, 'RNN-MT1', 3, 4, 60, 0.248357853012, 0.270820297143, 0.228411062857, 1340),
+        (2, 'RNN-SA', 3, 4, 35, 0.155791739891, 0.019931108571, 0.019931108571, 142),
+        (3, 'CNN-VN', 1, 16, 0, 0.086234498699, 0.071246628571, 0.071246628571, 31),
+        (4, 'CNN-VN', 9, 16, 0, 0.121617532628, 0.071246628571, 0.071246628571, 31),
+        (5, 'CNN-AN', 3, 1, 0, 0.008148267458, 0.002262681071, 0.002262681071, 15),
+        (6, 'CNN-AN', 3, 16, 0, 0.035759362187, 0.006148314286, 0.006148314286, 15),
+        (7, 'CNN-AN', 9, 1, 0, 0.19295517476, 0.002262681071, 0.002262681071, 15),
+    ],
+    1000: [
+        (0, 'CNN-GN', 3, 4, 0, 0.060808922475, 0.002594348571, 0.002594348571, 69),
+        (1, 'RNN-SA', 1, 1, 32, 0.044224334477, 0.018067851429, 0.018067851429, 130),
+        (2, 'RNN-MT2', 1, 1, 46, 0.135562901632, 0.133618022857, 0.14062832, 718),
+        (3, 'RNN-SA', 1, 4, 53, 0.141535647006, 0.030160868571, 0.030160868571, 214),
+        (4, 'RNN-MT2', 9, 16, 44, 0.194931755771, 0.129614994286, 0.139348114286, 672),
+        (5, 'CNN-MN', 1, 16, 0, 0.211405010704, 0.116328594286, 0.116328594286, 42),
+        (6, 'CNN-GN', 9, 4, 0, 0.03338457467, 0.002594348571, 0.002594348571, 69),
+        (7, 'CNN-GN', 9, 1, 0, 0.151617221185, 0.000777364286, 0.000777364286, 69),
+    ],
+    4242: [
+        (0, 'CNN-MN', 3, 16, 0, 0.196139080421, 0.116328594286, 0.116328594286, 42),
+        (1, 'RNN-MT2', 1, 1, 10, 0.154338025647, 0.025288251429, 0.029961782857, 140),
+        (2, 'RNN-MT2', 1, 16, 56, 0.026304876098, 0.23132672, 0.17049472, 1128),
+        (3, 'RNN-MT1', 9, 16, 4, 0.194861437278, 0.014437668571, 0.014437668571, 72),
+        (4, 'CNN-AN', 9, 4, 0, 0.15284816209, 0.003048804286, 0.003048804286, 15),
+        (5, 'CNN-GN', 3, 16, 0, 0.075708762681, 0.009773417143, 0.009773417143, 69),
+        (6, 'RNN-MT1', 3, 4, 6, 0.047436381355, 0.018600182857, 0.02331232, 98),
+        (7, 'CNN-GN', 9, 16, 0, 0.195876493925, 0.009773417143, 0.009773417143, 69),
+    ],
+}
+
+
+@pytest.fixture(scope="module")
+def pred():
+    p = Predictor(PAPER_NPU)
+    trace.build_regressors(p, np.random.default_rng(1234))
+    return p
+
+
+def fingerprint(tasks):
+    return [(t.tid, t.model, t.priority, t.batch, t.in_len,
+             round(t.arrival, 12), round(t.isolated_time, 12),
+             round(t.predicted_total, 12), t.total_nodes) for t in tasks]
+
+
+def run_fp(tasks_or_trace, sim=None):
+    sim = sim or NPUSimulator(PAPER_NPU, make_policy("prema", True),
+                              SimConfig(mechanism="dynamic"))
+    done = sim.run(tasks_or_trace)
+    return sorted((t.tid, t.completion, t.n_preemptions, t.n_kills)
+                  for t in done)
+
+
+# ---------------------------------------------------------------------------
+# uniform_window compatibility: bit-identical to the pre-refactor §III path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", sorted(GOLDEN))
+def test_uniform_window_matches_pre_refactor_golden(pred, seed):
+    tasks = trace.make_workload(pred, np.random.default_rng(seed), n_tasks=8)
+    assert fingerprint(tasks) == GOLDEN[seed]
+
+
+@pytest.mark.parametrize("seed", sorted(GOLDEN))
+def test_generate_paper_mix_equals_make_workload(pred, seed):
+    via_mix = generate(paper_mix(), np.random.default_rng(seed), 8,
+                       pred=pred).tasks()
+    assert fingerprint(via_mix) == GOLDEN[seed]
+    assert all(t.tenant == "paper" and t.sla_scale == 8.0 for t in via_mix)
+
+
+def test_make_workload_contention_and_window_forwarding(pred):
+    rng = np.random.default_rng(3)
+    tasks = trace.make_workload(pred, rng, n_tasks=6, window=0.01)
+    assert all(0.0 <= t.arrival <= 0.01 for t in tasks)
+    zero = trace.make_workload(pred, np.random.default_rng(3), n_tasks=6,
+                               contention=0.0)
+    assert all(t.arrival == 0.0 for t in zero)
+
+
+# ---------------------------------------------------------------------------
+# determinism + record/replay
+# ---------------------------------------------------------------------------
+
+def test_same_seed_identical_trace(pred):
+    mix = paper_mix(arrivals=Poisson(rate=200.0))
+    a = generate(mix, np.random.default_rng(42), 16, pred=pred)
+    b = generate(mix, np.random.default_rng(42), 16, pred=pred)
+    assert a.records == b.records
+    c = generate(mix, np.random.default_rng(43), 16, pred=pred)
+    assert a.records != c.records
+
+
+def test_trace_tasks_are_fresh_and_bit_identical(pred):
+    tr = generate(paper_mix(), np.random.default_rng(5), 8, pred=pred)
+    t1, t2 = tr.tasks(), tr.tasks()
+    assert all(x is not y for x, y in zip(t1, t2))
+    for x, y in zip(t1, t2):
+        assert (x.tid, x.arrival, x.predicted_total) == \
+            (y.tid, y.arrival, y.predicted_total)
+        assert np.array_equal(x.node_times, y.node_times)
+        assert np.array_equal(x.node_out_bytes, y.node_out_bytes)
+
+
+def test_jsonl_roundtrip_preserves_records(pred, tmp_path):
+    tr = generate(paper_mix(arrivals=MMPP.bursty(300.0)),
+                  np.random.default_rng(8), 12, pred=pred)
+    path = tmp_path / "trace.jsonl"
+    tr.save(str(path))
+    back = Trace.load(str(path), pred=pred)
+    assert back.records == tr.records
+    assert back.kind == tr.kind
+    assert back.meta["arrivals"]["process"] == "mmpp"
+
+
+def test_jsonl_rejects_truncation_and_bad_version(tmp_path):
+    path = tmp_path / "bad.jsonl"
+    path.write_text('{"version": 999, "kind": "paper", "n_records": 0}\n')
+    with pytest.raises(ValueError, match="version"):
+        Trace.load(str(path))
+    path.write_text('{"version": 1, "kind": "paper", "n_records": 5}\n')
+    with pytest.raises(ValueError, match="truncated"):
+        Trace.load(str(path))
+
+
+def test_replay_identical_on_simulator_and_cluster(pred, tmp_path):
+    tr = generate(paper_mix(arrivals=Poisson(rate=150.0)),
+                  np.random.default_rng(21), 12, pred=pred)
+    path = tmp_path / "t.jsonl"
+    tr.save(str(path))
+    replay = Trace.load(str(path), pred=pred)
+
+    ref = run_fp(tr)
+    assert run_fp(replay) == ref
+    csim = ClusterSimulator(PAPER_NPU, make_policy("prema", True),
+                            ClusterConfig(mechanism="dynamic", n_devices=1))
+    assert run_fp(replay, sim=csim) == ref    # cluster(n=1) parity holds too
+
+
+def test_engine_accepts_and_replays_serving_trace(tmp_path):
+    jax = pytest.importorskip("jax")
+    from repro.models import get_model
+    from repro.serving import ServingEngine
+
+    m = get_model("olmo-1b", tiny=True)
+    models = {"olmo-1b": (m, m.init_params(jax.random.PRNGKey(0)))}
+    mix = TrafficMix(tenants=(
+        TenantSpec(name="chat", models=("olmo-1b",), batch=1,
+                   prompt_len_range=(4, 10), decode_len_range=(2, 5),
+                   max_new_tokens=6, sla_scale=6.0),),
+        arrivals=Poisson(rate=5000.0), kind="serving")
+    tr = generate(mix, np.random.default_rng(9), 8)
+    path = tmp_path / "srv.jsonl"
+    tr.save(str(path))
+    replay = Trace.load(str(path))
+
+    def run(t):
+        eng = ServingEngine(models, policy="prema", mechanism="dynamic",
+                            execute=False)
+        res = eng.run(t)
+        return sorted((r.rid, r.completion, r.ttft, r.tenant) for r in res)
+
+    a, b = run(tr), run(replay)
+    assert a == b
+    assert all(row[3] == "chat" for row in a)
+
+
+def test_paper_trace_refuses_serving_materialization(pred):
+    tr = generate(paper_mix(), np.random.default_rng(1), 4, pred=pred)
+    tr.kind = "serving"
+    with pytest.raises(ValueError, match="serving"):
+        tr.tasks(pred)
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+def test_poisson_hits_target_rate():
+    rng = np.random.default_rng(0)
+    arr = Poisson(rate=1000.0).sample(rng, np.zeros(4000))
+    assert np.all(np.diff(arr) >= 0)
+    assert 1.0 / np.mean(np.diff(arr)) == pytest.approx(1000.0, rel=0.1)
+
+
+def test_mmpp_burstier_than_poisson():
+    rng = np.random.default_rng(0)
+    pois = np.diff(Poisson(rate=1000.0).sample(rng, np.zeros(4000)))
+    mmpp = np.diff(MMPP.bursty(1000.0, duty=0.2).sample(
+        np.random.default_rng(0), np.zeros(4000)))
+    cv = lambda x: np.std(x) / np.mean(x)
+    assert cv(mmpp) > 1.5 * cv(pois)     # on/off bursts fatten the tail
+    assert 1.0 / np.mean(mmpp) == pytest.approx(1000.0, rel=0.25)
+
+
+def test_diurnal_is_valid_nonhomogeneous_stream():
+    rng = np.random.default_rng(7)
+    proc = Diurnal(base_rate=500.0, amplitude=0.8, period=1.0)
+    arr = proc.sample(rng, np.zeros(2000))
+    assert np.all(np.diff(arr) > 0)
+    assert proc.rate_at(0.25) == pytest.approx(900.0)    # peak of the sine
+    assert proc.rate_at(0.75) == pytest.approx(100.0)    # trough
+
+
+def test_closed_loop_clients_never_self_overlap():
+    rng = np.random.default_rng(3)
+    service = np.full(40, 0.01)
+    proc = ClosedLoop(n_clients=4, think_time=0.005)
+    arr = proc.sample(rng, service)
+    for c in range(4):
+        mine = arr[c::4]
+        # next request of a client waits out service + think (> 0)
+        assert np.all(np.diff(mine) >= 0.01)
+
+
+def test_mmpp_rejects_degenerate_configs():
+    with pytest.raises(ValueError, match="positive rate"):
+        MMPP(rate_on=0.0, rate_off=0.0, mean_on=1.0, mean_off=1.0)
+    with pytest.raises(ValueError, match=">= 0"):
+        MMPP(rate_on=-1.0, rate_off=0.0, mean_on=1.0, mean_off=1.0)
+    with pytest.raises(ValueError, match="dwell"):
+        MMPP(rate_on=10.0, rate_off=0.0, mean_on=0.0, mean_off=1.0)
+
+
+def test_make_arrival_factory():
+    assert isinstance(make_arrival("poisson", rate=10.0), Poisson)
+    assert isinstance(make_arrival("uniform_window"), UniformWindow)
+    with pytest.raises(KeyError, match="unknown arrival"):
+        make_arrival("zipf")
+
+
+# ---------------------------------------------------------------------------
+# tenant mixes + per-tenant metrics
+# ---------------------------------------------------------------------------
+
+def two_tenant_mix():
+    return TrafficMix(tenants=(
+        TenantSpec(name="batch", models=("CNN-VN", "CNN-GN"), share=0.75,
+                   priority=1, sla_scale=16.0),
+        TenantSpec(name="interactive", models=("CNN-AN", "RNN-SA"),
+                   share=0.25, priority=9, sla_scale=4.0, batch=1),
+    ), arrivals=Poisson(rate=300.0))
+
+
+def test_tenant_attributes_and_shares(pred):
+    tr = generate(two_tenant_mix(), np.random.default_rng(17), 200,
+                  pred=pred)
+    tasks = tr.tasks()
+    by = {"batch": [], "interactive": []}
+    for t in tasks:
+        by[t.tenant].append(t)
+    assert all(t.priority == 1 and t.sla_scale == 16.0
+               for t in by["batch"])
+    assert all(t.priority == 9 and t.sla_scale == 4.0 and t.batch == 1
+               for t in by["interactive"])
+    assert all(t.model in ("CNN-AN", "RNN-SA") for t in by["interactive"])
+    share = len(by["batch"]) / len(tasks)
+    assert 0.6 < share < 0.9             # 0.75 +/- sampling noise
+
+
+def test_per_tenant_summary_groups_and_scores(pred):
+    tr = generate(two_tenant_mix(), np.random.default_rng(23), 24, pred=pred)
+    done = NPUSimulator(PAPER_NPU, make_policy("prema", True),
+                        SimConfig(mechanism="dynamic")).run(tr)
+    pt = metrics.per_tenant_summary(done)
+    assert set(pt) == {"batch", "interactive"}
+    assert pt["batch"]["n_tasks"] + pt["interactive"]["n_tasks"] == len(done)
+    for row in pt.values():
+        assert 0.0 <= row["sla_satisfaction"] <= 1.0
+        assert row["p50_ntt"] <= row["p95_ntt"] <= row["p99_ntt"]
+
+
+def test_mix_validation():
+    with pytest.raises(ValueError, match="tenant"):
+        TrafficMix(tenants=(), arrivals=Poisson(rate=1.0))
+    t = TenantSpec(name="a", models=("CNN-AN",))
+    with pytest.raises(ValueError, match="duplicate"):
+        TrafficMix(tenants=(t, t), arrivals=Poisson(rate=1.0))
+    with pytest.raises(ValueError, match="kind"):
+        TrafficMix(tenants=(t,), arrivals=Poisson(rate=1.0), kind="nope")
+
+
+# ---------------------------------------------------------------------------
+# load-sweep helpers
+# ---------------------------------------------------------------------------
+
+def test_find_knee():
+    from benchmarks.load_sweep import find_knee
+    pts = [(0.2, {"sla_satisfaction": 1.0}),
+           (0.6, {"sla_satisfaction": 0.95}),
+           (1.0, {"sla_satisfaction": 0.70}),
+           (1.4, {"sla_satisfaction": 0.40})]
+    assert find_knee(pts) == 0.6
+    assert find_knee(pts, target=0.3) == 1.4
+    assert find_knee([(0.2, {"sla_satisfaction": 0.1})]) == 0.0
