@@ -1,0 +1,163 @@
+"""CI sanity gate over the bench-smoke JSON artifacts.
+
+``make bench-smoke`` writes one JSON file per benchmark (the ``--out``
+contract of ``benchmarks/common.write_json``); this script validates that
+the results are not merely present but *shaped like the physics they
+claim*:
+
+* every file: parses, has non-empty rows;
+* ``cluster_scaling``: the n=1 parity assertion ran (the single-NPU
+  simulator and ``ClusterSimulator(n_devices=1)`` agreed bit-exactly);
+* ``load_sweep``: the SLA-knee rows exist and parse;
+* ``overload_sweep``: closed-loop arrivals demonstrably react to
+  congestion — offered throughput self-limits past saturation while the
+  open-loop curve keeps climbing and its tail blows up — and with
+  admission control enabled PREMA keeps the interactive tenant's SLA
+  satisfaction >= 90 % at every swept load.
+
+Exit code 0 = all gates pass.  Usage::
+
+    python benchmarks/check_smoke.py out/cluster_scaling.json \
+        out/load_sweep.json out/overload_sweep.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+GROWTH_MIN_OPEN = 1.2       # open-loop offered rate must scale with load
+BACKLOG_RATIO_MIN = 1.5     # open peak backlog vs closed, past saturation
+TAIL_BLOWUP_MIN = 2.0       # open-loop FCFS p99 NTT growth past the knee
+SLA_HI_MIN = 0.9
+
+
+class GateError(AssertionError):
+    pass
+
+
+def _check(cond: bool, msg: str) -> None:
+    if not cond:
+        raise GateError(msg)
+
+
+def load_payload(path: str) -> Dict:
+    with open(path) as fp:
+        payload = json.load(fp)
+    _check(isinstance(payload.get("rows"), list) and payload["rows"],
+           f"{path}: empty or missing rows")
+    for row in payload["rows"]:
+        _check({"name", "us_per_call", "derived"} <= set(row),
+               f"{path}: malformed row {row!r}")
+    return payload
+
+
+def check_cluster_scaling(payload: Dict) -> None:
+    parity = [r for r in payload["rows"] if "parity" in r["name"]]
+    _check(bool(parity), "cluster_scaling: n=1 parity row missing")
+    _check(all(r["derived"] == "exact" for r in parity),
+           f"cluster_scaling: parity not exact: {parity}")
+
+
+def check_load_sweep(payload: Dict) -> None:
+    knees = [r for r in payload["rows"] if r["name"].endswith(".sla_knee")]
+    _check(bool(knees), "load_sweep: SLA-knee rows missing")
+    for r in knees:
+        _check(r["derived"].startswith("load="),
+               f"load_sweep: unparseable knee row {r!r}")
+
+
+def _points(payload: Dict, **match) -> List[Dict]:
+    pts = payload.get("extra", {}).get("points", [])
+    return [p for p in pts
+            if all(p.get(k) == v for k, v in match.items())]
+
+
+def check_overload_sweep(payload: Dict) -> None:
+    points = payload.get("extra", {}).get("points", [])
+    _check(bool(points), "overload_sweep: structured points missing")
+    loads = sorted({p["load"] for p in points})
+    _check(len(loads) >= 2, f"overload_sweep: need >= 2 loads, got {loads}")
+    lo, hi = loads[0], loads[-1]
+
+    for policy in sorted({p["policy"] for p in points}):
+        open_lo = _points(payload, mode="open", policy=policy,
+                          admission="none", load=lo)
+        open_hi = _points(payload, mode="open", policy=policy,
+                          admission="none", load=hi)
+        closed_lo = _points(payload, mode="closed", policy=policy,
+                            admission="none", load=lo)
+        closed_hi = _points(payload, mode="closed", policy=policy,
+                            admission="none", load=hi)
+        if not (open_lo and open_hi and closed_lo and closed_hi):
+            continue
+        o_lo, o_hi = open_lo[0]["offered_tps"], open_hi[0]["offered_tps"]
+        c_lo, c_hi = closed_lo[0]["offered_tps"], closed_hi[0]["offered_tps"]
+        _check(o_hi >= o_lo * GROWTH_MIN_OPEN,
+               f"overload[{policy}]: open-loop offered rate did not grow "
+               f"with load ({o_lo:.2f} -> {o_hi:.2f})")
+        # closed clients slow down with the system: their offered rate must
+        # grow strictly slower than the open-loop curve ...
+        _check(c_hi / max(c_lo, 1e-9) < o_hi / max(o_lo, 1e-9),
+               f"overload[{policy}]: closed-loop offered rate did not "
+               f"self-limit ({c_lo:.2f} -> {c_hi:.2f} vs open "
+               f"{o_lo:.2f} -> {o_hi:.2f})")
+        # ... and past saturation the open-loop backlog outgrows the
+        # client-bounded closed-loop backlog (the unbounded-queue signature)
+        _check(open_hi[0]["peak_backlog"]
+               >= BACKLOG_RATIO_MIN * closed_hi[0]["peak_backlog"],
+               f"overload[{policy}]: open-loop backlog "
+               f"({open_hi[0]['peak_backlog']:.0f}) did not outgrow "
+               f"closed-loop ({closed_hi[0]['peak_backlog']:.0f})")
+
+    fcfs_lo = _points(payload, mode="open", policy="fcfs",
+                      admission="none", load=lo)
+    fcfs_hi = _points(payload, mode="open", policy="fcfs",
+                      admission="none", load=hi)
+    if fcfs_lo and fcfs_hi:
+        _check(fcfs_hi[0]["p99_ntt"] >= fcfs_lo[0]["p99_ntt"] * TAIL_BLOWUP_MIN,
+               "overload: open-loop FCFS tail did not blow up past "
+               f"saturation ({fcfs_lo[0]['p99_ntt']:.1f} -> "
+               f"{fcfs_hi[0]['p99_ntt']:.1f})")
+
+    guarded = [p for p in points if p["policy"] == "prema"
+               and p["admission"] != "none" and p["mode"] == "open"]
+    _check(bool(guarded), "overload: no prema+admission points")
+    for p in guarded:
+        _check(p["sla_hi"] >= SLA_HI_MIN,
+               f"overload: prema+{p['admission']} interactive SLA "
+               f"{p['sla_hi']:.3f} < {SLA_HI_MIN} at load {p['load']}")
+
+
+CHECKS = {
+    "cluster_scaling": check_cluster_scaling,
+    "load_sweep": check_load_sweep,
+    "overload_sweep": check_overload_sweep,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("paths", nargs="+", help="bench-smoke JSON files")
+    args = ap.parse_args()
+    failures = []
+    for path in args.paths:
+        try:
+            payload = load_payload(path)
+            name = payload.get("benchmark", "")
+            check = CHECKS.get(name)
+            if check is None:
+                raise GateError(f"{path}: unknown benchmark {name!r}")
+            check(payload)
+            print(f"ok   {path} ({name}, {len(payload['rows'])} rows)")
+        except (GateError, OSError, json.JSONDecodeError) as exc:
+            failures.append(f"FAIL {path}: {exc}")
+            print(failures[-1])
+    if failures:
+        sys.exit(1)
+    print(f"bench-smoke sanity: {len(args.paths)} file(s) pass")
+
+
+if __name__ == "__main__":
+    main()

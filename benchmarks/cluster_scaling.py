@@ -32,8 +32,6 @@ import sys
 import time
 from typing import Dict, List, Tuple
 
-import numpy as np
-
 # allow `python benchmarks/cluster_scaling.py` from anywhere, even
 # without PYTHONPATH=src: make both `benchmarks` and `repro` importable
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -137,10 +135,15 @@ def main() -> None:
                          "dynamic mechanism, 2 workloads per point)")
     ap.add_argument("--seed", type=int, default=0,
                     help="re-base every benchmark RNG stream")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also write machine-readable JSON results")
     args = ap.parse_args()
     common.set_seed(args.seed)
     print("name,us_per_call,derived")
-    common.emit(run(smoke=args.smoke))
+    rows = run(smoke=args.smoke)
+    common.emit(rows)
+    if args.out:
+        common.write_json(args.out, "cluster_scaling", rows)
 
 
 if __name__ == "__main__":

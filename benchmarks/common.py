@@ -7,6 +7,8 @@ averaged over ``N_RUNS`` workloads per configuration.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -83,3 +85,23 @@ def emit(rows: List[Tuple[str, float, str]]):
     """Print the ``name,us_per_call,derived`` CSV contract."""
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def write_json(path: str, benchmark: str, rows: List[Tuple[str, float, str]],
+               extra: Optional[Dict] = None) -> None:
+    """Machine-readable benchmark output (the ``--out`` contract): the CSV
+    rows as structured records plus an optional ``extra`` payload of
+    benchmark-specific structured results.  Consumed by
+    ``benchmarks/check_smoke.py`` in CI."""
+    payload = {
+        "benchmark": benchmark,
+        "base_seed": BASE_SEED,
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+        "extra": extra or {},
+    }
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as fp:
+        json.dump(payload, fp, indent=2, sort_keys=True)
+        fp.write("\n")

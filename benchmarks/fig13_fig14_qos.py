@@ -9,7 +9,6 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import metrics, trace
-from repro.hw import PAPER_NPU
 
 
 def run() -> List:

@@ -10,14 +10,13 @@ and batch size.
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import List
 
 import numpy as np
 
 from benchmarks import common
 from repro.configs import paper_workloads as pw
 from repro.core import metrics, trace
-from repro.core.preemption import checkpoint_latency
 from repro.core.scheduler import make_policy
 from repro.core.simulator import NPUSimulator, SimConfig
 from repro.hw import PAPER_NPU

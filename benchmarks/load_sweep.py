@@ -145,10 +145,15 @@ def main() -> None:
                     help="tiny sweep for CI (2 loads, 1 run per point)")
     ap.add_argument("--seed", type=int, default=0,
                     help="re-base every benchmark RNG stream")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also write machine-readable JSON results")
     args = ap.parse_args()
     common.set_seed(args.seed)
     print("name,us_per_call,derived")
-    common.emit(run(smoke=args.smoke))
+    rows = run(smoke=args.smoke)
+    common.emit(rows)
+    if args.out:
+        common.write_json(args.out, "load_sweep", rows)
 
 
 if __name__ == "__main__":

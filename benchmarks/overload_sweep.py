@@ -1,0 +1,239 @@
+"""Overload sweep: offered load past saturation x admission x policy.
+
+The regime where PREMA's case is strongest: *overload*.  For offered
+loads spanning both sides of cluster saturation, this sweep compares
+
+* **open-loop** Poisson arrivals (clients ignore congestion; the queue
+  and the tail grow without bound past the knee) against **closed-loop**
+  reactive clients (``repro.workloads.ClosedLoop.drive``: each client
+  waits for its previous request's actual ``complete``/``drop`` event
+  plus a think time, so offered throughput self-limits at saturation);
+* **admission control** off vs on (``priority_shed``: shed low-priority
+  arrivals while the queue is congested, protecting the interactive
+  class) and per-tenant ``token_bucket`` rate limiting (full sweep);
+* **fcfs** vs **prema** scheduling.
+
+The workload is a three-tenant mix over the paper's 8-DNN suite —
+``interactive`` (priority 9, tight 4x SLA), ``standard`` (3, 8x), and
+``batch`` (1, loose 20x) — so shedding and scheduling decisions have an
+SLA-visible victim and beneficiary.  Every run is observed through the
+shared event stream (``core/events.py``): offered/achieved throughput and
+shed rate are counted from submit/complete/drop events, latency and SLA
+metrics from the completed tasks.
+
+Per point: offered and achieved throughput (tasks/s), shed rate, SLA
+satisfaction of admitted work (overall and for the interactive tenant),
+and p99 NTT/turnaround.  Per curve: the SLA knee (max load with >= 90 %
+satisfaction of admitted work).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/overload_sweep.py            # full
+    PYTHONPATH=src python benchmarks/overload_sweep.py --smoke    # CI
+    PYTHONPATH=src python benchmarks/overload_sweep.py --out o.json
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# allow `python benchmarks/overload_sweep.py` from anywhere (same pattern
+# as cluster_scaling): make both `benchmarks` and `repro` importable
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks import common
+from benchmarks.load_sweep import SLA_KNEE_TARGET, find_knee
+from repro.configs import paper_workloads as pw
+from repro.core import metrics
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.scheduler import make_policy
+from repro.hw import PAPER_NPU
+from repro.workloads import (ClosedLoop, Poisson, TenantSpec, TrafficMix,
+                             generate, make_admission)
+
+MODES = ("open", "closed")
+POLICIES = ("fcfs", "prema")
+ADMISSIONS = ("none", "priority_shed")
+ADMISSIONS_FULL = ("none", "priority_shed", "token_bucket")
+LOADS = (0.6, 0.9, 1.2, 1.6, 2.0)
+TASKS_PER_DEVICE = 24
+HI_TENANT = "interactive"
+
+_mean_isolated: Dict[int, float] = {}    # keyed by BASE_SEED
+
+
+def tenant_mix(arrivals) -> TrafficMix:
+    """Three SLA classes over the paper suite: the shedding/scheduling
+    trade-off needs a protected class and a sheddable one."""
+    models = tuple(pw.WORKLOAD_NAMES)
+    return TrafficMix(tenants=(
+        TenantSpec(name=HI_TENANT, models=models, share=0.25, priority=9,
+                   sla_scale=4.0),
+        TenantSpec(name="standard", models=models, share=0.375, priority=3,
+                   sla_scale=8.0),
+        TenantSpec(name="batch", models=models, share=0.375, priority=1,
+                   sla_scale=20.0),
+    ), arrivals=arrivals, kind="paper")
+
+
+def mean_isolated_time(n_probe: int = 64) -> float:
+    key = common.BASE_SEED
+    if key not in _mean_isolated:
+        tr = generate(tenant_mix(Poisson(rate=1.0)), common.rng(8700),
+                      n_probe, pred=common.predictor())
+        _mean_isolated[key] = float(
+            np.mean([t.isolated_time for t in tr.tasks()]))
+    return _mean_isolated[key]
+
+
+def make_admission_policy(name: str, n_devices: int):
+    if name == "none":
+        return None
+    if name == "priority_shed":
+        return make_admission("priority_shed", soft_depth=4 * n_devices,
+                              hard_depth=16 * n_devices)
+    if name == "token_bucket":
+        # cap each tenant near its fair share of cluster capacity
+        return make_admission("token_bucket",
+                              rate=0.5 * n_devices / mean_isolated_time(),
+                              burst=4.0)
+    raise KeyError(f"unknown admission config {name!r}")
+
+
+def run_point(mode: str, policy: str, admission: str, n_devices: int,
+              load: float, n_tasks: int, n_runs: int, seed0: int = 8800
+              ) -> Dict[str, float]:
+    """One (mode, policy, admission, load) cell, averaged over runs."""
+    rate = load * n_devices / mean_isolated_time()
+    runs = []
+    for r in range(n_runs):
+        rng = common.rng(seed0 + 131 * r)
+        tr = generate(tenant_mix(Poisson(rate=rate)), rng, n_tasks,
+                      pred=common.predictor())
+        sim = ClusterSimulator(
+            PAPER_NPU, make_policy(policy, preemptive=True),
+            ClusterConfig(mechanism="dynamic", n_devices=n_devices,
+                          placement="least_loaded",
+                          admission=make_admission_policy(
+                              admission, n_devices)))
+        if mode == "closed":
+            think = mean_isolated_time()
+            n_clients = max(1, int(round(rate * 2.0 * think)))
+            proc = ClosedLoop(n_clients=n_clients, think_time=think)
+            tasks = proc.drive(sim, tr.tasks(), seed=seed0 + r)
+        else:
+            tasks = sim.run(tr)
+
+        log = sim.events.log
+        makespan = max(ev.t for ev in log)
+        n_submit = sum(1 for ev in log if ev.kind == "submit")
+        n_drop = sum(1 for ev in log if ev.kind == "drop")
+        n_complete = sum(1 for ev in log if ev.kind == "complete")
+        # peak in-flight work: the queue-growth signature (bounded by the
+        # client count in a closed system, unbounded open-loop past 1.0)
+        backlog, peak_backlog = 0, 0
+        for ev in log:
+            if ev.kind == "submit":
+                backlog += 1
+                peak_backlog = max(peak_backlog, backlog)
+            elif ev.kind in ("complete", "drop"):
+                backlog -= 1
+        m = sim.summary()
+        per_tenant = metrics.per_tenant_summary(tasks)
+        hi = per_tenant.get(HI_TENANT, {})
+        runs.append({
+            "offered_tps": n_submit / max(makespan, 1e-12),
+            "achieved_tps": n_complete / max(makespan, 1e-12),
+            "peak_backlog": float(peak_backlog),
+            "shed_rate": n_drop / max(n_submit, 1),
+            "sla_satisfaction": m["sla_satisfaction"],
+            "sla_hi": float(hi.get("sla_satisfaction", float("nan"))),
+            "shed_hi": float(hi.get("shed_rate", 0.0)),
+            "p99_ntt": m["p99_ntt"],
+            "p99_turnaround": m["p99_turnaround"],
+            "goodput": m["goodput"],
+        })
+    return metrics.aggregate(runs)
+
+
+def sweep(modes: Sequence[str], policies: Sequence[str],
+          admissions: Sequence[str], loads: Sequence[float],
+          n_devices: int, n_runs: int,
+          tasks_per_device: int = TASKS_PER_DEVICE
+          ) -> Tuple[List[Tuple[str, float, str]], List[Dict]]:
+    rows: List[Tuple[str, float, str]] = []
+    points: List[Dict] = []
+    for mode in modes:
+        for pol in policies:
+            for adm in admissions:
+                curve = []
+                for load in loads:
+                    t0 = time.perf_counter()
+                    m = run_point(mode, pol, adm, n_devices, load,
+                                  n_tasks=tasks_per_device * n_devices,
+                                  n_runs=n_runs)
+                    us = (time.perf_counter() - t0) / n_runs * 1e6
+                    curve.append((load, m))
+                    tag = (f"overload.{mode}.{pol}.{adm}."
+                           f"d{n_devices}.load{load:g}")
+                    rows.append((tag, us, (
+                        f"offered={m['offered_tps']:.1f};"
+                        f"achieved={m['achieved_tps']:.1f};"
+                        f"backlog={m['peak_backlog']:.0f};"
+                        f"shed={m['shed_rate']:.3f};"
+                        f"sla={m['sla_satisfaction']:.3f};"
+                        f"sla_hi={m['sla_hi']:.3f};"
+                        f"p99_ntt={m['p99_ntt']:.2f}")))
+                    points.append(dict(mode=mode, policy=pol, admission=adm,
+                                       n_devices=n_devices, load=load, **m))
+                knee = find_knee(curve)
+                rows.append((f"overload.{mode}.{pol}.{adm}."
+                             f"d{n_devices}.sla_knee", 0.0,
+                             f"load={knee:g}@sla>={SLA_KNEE_TARGET}"))
+    return rows, points
+
+
+def run(smoke: bool = False,
+        collect: Optional[Dict] = None) -> List[Tuple[str, float, str]]:
+    """Entry point for benchmarks/run.py (full) and --smoke (CI).  When
+    ``collect`` is given, the structured per-point results land in
+    ``collect['points']`` (the ``--out`` JSON extra payload)."""
+    if smoke:
+        rows, points = sweep(MODES, POLICIES, ADMISSIONS,
+                             loads=(0.8, 1.6), n_devices=1, n_runs=1,
+                             tasks_per_device=24)
+    else:
+        rows, points = sweep(MODES, POLICIES, ADMISSIONS_FULL, LOADS,
+                             n_devices=2, n_runs=3)
+    if collect is not None:
+        collect["points"] = points
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (2 loads, 1 run per point)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="re-base every benchmark RNG stream")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also write machine-readable JSON results")
+    args = ap.parse_args()
+    common.set_seed(args.seed)
+    print("name,us_per_call,derived")
+    extra: Dict = {}
+    rows = run(smoke=args.smoke, collect=extra)
+    common.emit(rows)
+    if args.out:
+        common.write_json(args.out, "overload_sweep", rows, extra=extra)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.hw import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
 

@@ -4,11 +4,8 @@ checkpointed ACCQ state (Pallas kernel, interpret mode on CPU).
 
     PYTHONPATH=src python examples/preemptible_kernel_demo.py
 """
-import time
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.preemptible_matmul import (advance, finish, matmul_ref,
                                               start)

@@ -7,11 +7,9 @@ the ~100M / 300-step configuration (slower on CPU).
     PYTHONPATH=src python examples/train_lm.py [--full] [--resume]
 """
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ArchConfig
 from repro.training import (DataConfig, OptConfig, TokenDataset, TrainConfig,

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Callable, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 # --------------------------------------------------------------------------
 # Block vocabulary

@@ -12,11 +12,11 @@ figure-reproduction benchmarks on the paper's Table-I NPU model.
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 import numpy as np
 
-from repro.core.ops import (GemmOp, NetworkDesc, VectorOp, conv2d,
+from repro.core.ops import (NetworkDesc, VectorOp, conv2d,
                             depthwise_conv2d, fc, lstm_cell)
 
 

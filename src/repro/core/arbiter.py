@@ -31,6 +31,7 @@ import enum
 from typing import List, Optional
 
 from repro.core import preemption
+from repro.core.events import EventBus
 from repro.core.preemption import Mechanism
 from repro.core.scheduler import Policy
 from repro.core.task import Task
@@ -67,9 +68,14 @@ class Arbiter:
     layer.  Stateless apart from the policy it wraps; ``reset()`` clears
     policy state (e.g. round-robin position) at the start of a run."""
 
-    def __init__(self, policy: Policy, cfg: Optional[ArbiterConfig] = None):
+    def __init__(self, policy: Policy, cfg: Optional[ArbiterConfig] = None,
+                 bus: Optional[EventBus] = None):
         self.policy = policy
         self.cfg = cfg or ArbiterConfig()
+        # The shared event stream (core/events.py): every execution layer
+        # built on this arbiter emits submit/dispatch/preempt/complete/drop
+        # through one bus, so observers see one consistent timeline.
+        self.events = bus if bus is not None else EventBus()
 
     # ------------------------------------------------------------------
     def reset(self) -> None:

@@ -40,6 +40,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import events as event_hooks
 from repro.core import metrics, preemption
 from repro.core.arbiter import Action, Arbiter
 from repro.core.preemption import Mechanism
@@ -161,6 +162,20 @@ class ClusterSimulator:
                                self.cfg.placement_seed)
         self.log: List[Tuple[float, str, int, int]] = []
         self._tasks: List[Task] = []
+        self._inject = None          # live only inside run()
+
+    @property
+    def events(self):
+        """The shared event bus (core/events.py); subscribe before run()."""
+        return self.arbiter.events
+
+    def submit(self, task: Task, at: float) -> None:
+        """Inject a task mid-run (closed-loop clients); only valid from an
+        event hook while ``run()`` is executing."""
+        if self._inject is None:
+            raise RuntimeError("submit() is only valid during run() — "
+                               "call it from an event-bus hook")
+        self._inject(task, at)
 
     # ------------------------------------------------------------------
     def run(self, tasks: Sequence[Task]) -> List[Task]:
@@ -169,7 +184,11 @@ class ClusterSimulator:
         from repro.workloads.trace_io import as_task_list  # no import cycle
         tasks = as_task_list(tasks)
         hw, cfg, arbiter = self.hw, self.cfg, self.arbiter
+        bus, admission = arbiter.events, cfg.admission
         arbiter.reset()
+        bus.clear()
+        if admission is not None:
+            admission.reset()
         self.log = []
         self.cluster = Cluster(cfg.n_devices, cfg.placement,
                                cfg.placement_seed)
@@ -186,9 +205,19 @@ class ClusterSimulator:
             t.device = None
             push(t.arrival, "arrival", t.tid)
 
+        def inject(task: Task, at: float):
+            at = float(at)
+            task.state = TaskState.WAITING
+            task.device = None
+            task.arrival = at
+            task.last_wake = at
+            by_id[task.tid] = task
+            push(at, "arrival", task.tid)
+        self._inject = inject
+
         ready: List[Task] = []
         next_quantum = None
-        n_done = 0
+        n_settled = 0            # DONE + DROPPED
 
         def log(t, kind, tid, dev=-1):
             if cfg.log_events:
@@ -222,6 +251,7 @@ class ClusterSimulator:
             d.busy_until = t0
             push(t0 + task.remaining, "complete", task.tid, d.run_gen, d.dev)
             log(now, "start", task.tid, d.dev)
+            bus.dispatch(now, task, d.dev)
             return t0
 
         def preempt(d: DeviceState, now: float, mech: Mechanism) -> float:
@@ -250,6 +280,7 @@ class ClusterSimulator:
             d.run_gen += 1
             d.busy_until = free_at
             log(now, f"preempt-{mech.value}", task.tid, d.dev)
+            bus.preempt(now, task, d.dev, mech.value)
             return free_at
 
         def sync_running(now: float):
@@ -301,43 +332,52 @@ class ClusterSimulator:
                 return
 
         # ---------------- main loop ----------------
-        while events:
-            now, _, kind, tid, gen, dev = heapq.heappop(events)
-            if kind == "arrival":
-                task = by_id[tid]
-                ready.append(task)
-                task.last_wake = now
-                log(now, "arrival", tid)
-                schedule(now)
-                ensure_quantum(now)
-            elif kind == "complete":
-                d = devices[dev]
-                if (d.running is None or d.running.tid != tid
-                        or gen != d.run_gen):
-                    continue  # stale
-                task = d.running
-                d.busy_time += max(0.0, now - d.run_start)
-                task.executed = task.isolated_time
-                task.completion = now
-                task.state = TaskState.DONE
-                n_done += 1
-                d.running = None
-                log(now, "complete", tid, dev)
-                schedule(now)
-                if ready:
-                    ensure_quantum(now)
-            elif kind == "quantum":
-                next_quantum = None
-                if ready or any(d.running is not None for d in devices):
+        try:
+            while events:
+                now, _, kind, tid, gen, dev = heapq.heappop(events)
+                if kind == "arrival":
+                    task = by_id[tid]
+                    if not event_hooks.offer(bus, admission, task, now,
+                                             len(ready)):
+                        task.state = TaskState.DROPPED
+                        n_settled += 1
+                    else:
+                        ready.append(task)
+                        task.last_wake = now
+                        log(now, "arrival", tid)
+                        schedule(now)
+                        ensure_quantum(now)
+                elif kind == "complete":
+                    d = devices[dev]
+                    if (d.running is None or d.running.tid != tid
+                            or gen != d.run_gen):
+                        continue  # stale
+                    task = d.running
+                    d.busy_time += max(0.0, now - d.run_start)
+                    task.executed = task.isolated_time
+                    task.completion = now
+                    task.state = TaskState.DONE
+                    n_settled += 1
+                    d.running = None
+                    log(now, "complete", tid, dev)
+                    bus.complete(now, task, dev)
                     schedule(now)
                     if ready:
                         ensure_quantum(now)
-            if n_done == len(by_id) and not events:
-                break
-
-        assert all(t.state == TaskState.DONE for t in by_id.values()), (
+                elif kind == "quantum":
+                    next_quantum = None
+                    if ready or any(d.running is not None for d in devices):
+                        schedule(now)
+                        if ready:
+                            ensure_quantum(now)
+                if n_settled == len(by_id) and not events:
+                    break
+        finally:
+            self._inject = None   # dead runs must not accept submissions
+        settled = (TaskState.DONE, TaskState.DROPPED)
+        assert all(t.state in settled for t in by_id.values()), (
             f"unfinished tasks: "
-            f"{[t.tid for t in by_id.values() if t.state != TaskState.DONE]}")
+            f"{[t.tid for t in by_id.values() if t.state not in settled]}")
         self._tasks = list(by_id.values())
         return self._tasks
 
@@ -345,7 +385,8 @@ class ClusterSimulator:
     def summary(self) -> Dict[str, float]:
         if not self._tasks:
             raise RuntimeError("summary() requires a completed run()")
-        makespan = max(t.completion for t in self._tasks)
+        done = [t.completion for t in self._tasks if t.completion is not None]
+        makespan = max(done) if done else 0.0
         out = metrics.cluster_summary(self._tasks, self.cluster.busy_times(),
                                       makespan)
         out["migrations"] = float(self.cluster.n_migrations)

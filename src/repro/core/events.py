@@ -1,0 +1,153 @@
+"""Unified execution event hooks: one stream for every execution layer.
+
+Every execution layer — :class:`~repro.core.simulator.NPUSimulator`,
+:class:`~repro.core.cluster.ClusterSimulator`, and
+:class:`~repro.serving.engine.ServingEngine` — emits the same five event
+kinds, with sim-time timestamps, through the :class:`EventBus` carried by
+the shared :class:`~repro.core.arbiter.Arbiter`:
+
+==========  ===============================================================
+``submit``    a task was offered to the system (its arrival instant);
+              fires before any admission decision, ``device == -1``.
+``dispatch``  a task began (or resumed) execution on a device.
+``preempt``   a running task was displaced; carries the mechanism
+              (``checkpoint`` / ``kill``) that was used.
+``complete``  a task finished on a device.
+``drop``      admission control rejected the task at submission
+              (``device == -1``); dropped tasks never dispatch.
+==========  ===============================================================
+
+The bus is the one observation point for reactive subsystems: closed-loop
+clients resample their think time on ``complete``/``drop``
+(:class:`repro.workloads.arrivals.ClosedLoopDriver`), executed-trace
+capture snapshots ``bus.log``
+(:class:`repro.workloads.trace_io.ExecutedTrace`), and admission
+accounting counts ``submit``/``drop`` pairs.  Subscribers persist across
+runs; the log is cleared at the start of every ``run()``.
+
+Determinism contract: with the same seed and workload, the event log is
+bit-identical across ``NPUSimulator`` and ``ClusterSimulator(n_devices=1)``
+(and across repeated runs of either) — pinned by tests/test_events.py.
+Subscribers must not mutate scheduling state; they may inject *new* work
+via the layer's ``submit()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+EVENT_KINDS = ("submit", "dispatch", "preempt", "complete", "drop")
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One scheduling-visible state change, stamped with sim time."""
+    t: float
+    kind: str                       # one of EVENT_KINDS
+    tid: int
+    device: int = -1                # -1: not bound to a device (submit/drop)
+    mechanism: Optional[str] = None  # preempt only: checkpoint | kill
+    tenant: Optional[str] = None
+    priority: int = 0
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Event":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)
+                      if f.name in d})
+
+
+Subscriber = Callable[[Event], None]
+
+
+class EventBus:
+    """Publish/subscribe hub plus an always-on in-order event log.
+
+    ``subscribe(kind, fn)`` registers a hook for one event kind (or
+    ``"*"`` for all); the matching ``on_submit``/``on_dispatch``/
+    ``on_preempt``/``on_complete``/``on_drop`` helpers are sugar for the
+    five kinds.  ``emit`` appends to ``log`` *before* notifying
+    subscribers, so a hook that injects new work observes a log that
+    already contains the triggering event.
+    """
+
+    def __init__(self) -> None:
+        self._subs: Dict[str, List[Subscriber]] = {k: [] for k in EVENT_KINDS}
+        self._subs["*"] = []
+        self.log: List[Event] = []
+
+    # -- subscription --------------------------------------------------
+    def subscribe(self, kind: str, fn: Subscriber) -> Subscriber:
+        if kind not in self._subs:
+            raise KeyError(f"unknown event kind {kind!r}; "
+                           f"choose from {EVENT_KINDS + ('*',)}")
+        self._subs[kind].append(fn)
+        return fn
+
+    def unsubscribe(self, kind: str, fn: Subscriber) -> None:
+        self._subs[kind].remove(fn)
+
+    def on_submit(self, fn: Subscriber) -> Subscriber:
+        return self.subscribe("submit", fn)
+
+    def on_dispatch(self, fn: Subscriber) -> Subscriber:
+        return self.subscribe("dispatch", fn)
+
+    def on_preempt(self, fn: Subscriber) -> Subscriber:
+        return self.subscribe("preempt", fn)
+
+    def on_complete(self, fn: Subscriber) -> Subscriber:
+        return self.subscribe("complete", fn)
+
+    def on_drop(self, fn: Subscriber) -> Subscriber:
+        return self.subscribe("drop", fn)
+
+    # -- emission ------------------------------------------------------
+    def clear(self) -> None:
+        """Drop the log (start of a run); subscriptions are kept."""
+        self.log = []
+
+    def emit(self, ev: Event) -> None:
+        self.log.append(ev)
+        for fn in list(self._subs[ev.kind]):
+            fn(ev)
+        for fn in list(self._subs["*"]):
+            fn(ev)
+
+    def _task_event(self, t: float, kind: str, task, device: int,
+                    mechanism: Optional[str] = None) -> None:
+        self.emit(Event(t=float(t), kind=kind, tid=task.tid, device=device,
+                        mechanism=mechanism,
+                        tenant=getattr(task, "tenant", None),
+                        priority=int(getattr(task, "priority", 0))))
+
+    def submit(self, t: float, task) -> None:
+        self._task_event(t, "submit", task, -1)
+
+    def dispatch(self, t: float, task, device: int) -> None:
+        self._task_event(t, "dispatch", task, device)
+
+    def preempt(self, t: float, task, device: int, mechanism: str) -> None:
+        self._task_event(t, "preempt", task, device, mechanism)
+
+    def complete(self, t: float, task, device: int) -> None:
+        self._task_event(t, "complete", task, device)
+
+    def drop(self, t: float, task) -> None:
+        self._task_event(t, "drop", task, -1)
+
+
+def offer(bus: EventBus, admission, task, now: float,
+          queue_depth: int) -> bool:
+    """Shared submission path: emit ``submit``, consult admission control,
+    and emit ``drop`` on rejection.  Returns True when the task was
+    admitted (the caller enqueues it), False when it was shed (the caller
+    marks it DROPPED and forgets it).  ``queue_depth`` is the number of
+    tasks waiting in the ready queue, excluding running tasks."""
+    bus.submit(now, task)
+    if admission is not None and not admission.admit(task, now, queue_depth):
+        bus.drop(now, task)
+        return False
+    return True

@@ -6,24 +6,41 @@ from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.task import Task
+from repro.core.task import Task, TaskState
 
 DEFAULT_SLA_SCALE = 8.0      # fallback for tasks with no tenant SLA class
 PERCENTILES = (50, 95, 99)
 
 
+def completed(tasks: Sequence[Task]) -> List[Task]:
+    """The subset that actually finished.  Latency/SLA aggregates are
+    defined over this subset; tasks shed by admission control (DROPPED)
+    count toward offered/rejected totals only."""
+    return [t for t in tasks if t.completion is not None]
+
+
+def rejected(tasks: Sequence[Task]) -> List[Task]:
+    """The subset shed by admission control (never executed)."""
+    return [t for t in tasks if t.state is TaskState.DROPPED]
+
+
 def antt(tasks: Sequence[Task]) -> float:
     """Average normalized turnaround time (lower is better)."""
+    tasks = completed(tasks)
     return float(np.mean([t.ntt for t in tasks]))
 
 
 def stp(tasks: Sequence[Task]) -> float:
     """System throughput = sum of per-task progress rates (higher better)."""
+    tasks = completed(tasks)
     return float(np.sum([1.0 / t.ntt for t in tasks]))
 
 
 def fairness(tasks: Sequence[Task]) -> float:
     """Priority-weighted equal-progress metric (Eq 2): min_{i,j} PP_i/PP_j."""
+    tasks = completed(tasks)
+    if not tasks:
+        return float("nan")
     prio_sum = float(np.sum([t.priority for t in tasks]))
     pp = np.asarray([(1.0 / t.ntt) / (t.priority / prio_sum) for t in tasks])
     return float(pp.min() / pp.max())
@@ -31,20 +48,27 @@ def fairness(tasks: Sequence[Task]) -> float:
 
 def sla_violation_rate(tasks: Sequence[Task], n: float) -> float:
     """Fraction of tasks with turnaround > n x isolated time (§VI-C)."""
-    v = [t.turnaround > n * t.isolated_time for t in tasks]
+    v = [t.turnaround > n * t.isolated_time for t in completed(tasks)]
     return float(np.mean(v))
 
 
 def sla_satisfaction(tasks: Sequence[Task],
                      default_scale: float = DEFAULT_SLA_SCALE) -> float:
-    """Fraction of tasks meeting their *own* SLA target (per-task
-    ``sla_scale`` where assigned, ``default_scale`` otherwise)."""
+    """Fraction of *completed* (admitted) tasks meeting their own SLA
+    target (per-task ``sla_scale`` where assigned, ``default_scale``
+    otherwise)."""
+    tasks = completed(tasks)
+    if not tasks:
+        return float("nan")
     return float(np.mean([t.sla_met(default_scale) for t in tasks]))
 
 
 def goodput(tasks: Sequence[Task], makespan: Optional[float] = None,
             default_scale: float = DEFAULT_SLA_SCALE) -> float:
     """SLA-meeting completions per second of offered-load wall time."""
+    tasks = completed(tasks)
+    if not tasks:
+        return 0.0
     if makespan is None:
         makespan = max(t.completion for t in tasks)
     met = float(np.sum([t.sla_met(default_scale) for t in tasks]))
@@ -54,7 +78,7 @@ def goodput(tasks: Sequence[Task], makespan: Optional[float] = None,
 def tail_latency_ratio(tasks: Sequence[Task], priority: int = 9,
                        pct: float = 95.0) -> float:
     """``pct``-ile of NTT among tasks of the given priority (Fig 14)."""
-    sel = [t.ntt for t in tasks if t.priority == priority]
+    sel = [t.ntt for t in completed(tasks) if t.priority == priority]
     if not sel:
         return float("nan")
     return float(np.percentile(sel, pct))
@@ -64,35 +88,46 @@ def percentile_summary(tasks: Sequence[Task],
                        pcts: Sequence[int] = PERCENTILES) -> Dict[str, float]:
     """p50/p95/p99 of turnaround, NTT, and TTFT (time to first service —
     the queueing delay the mean hides)."""
+    tasks = completed(tasks)
     tat = [t.turnaround for t in tasks]
     ntts = [t.ntt for t in tasks]
     ttft = [t.first_service - t.arrival for t in tasks
             if t.first_service is not None]
     out: Dict[str, float] = {}
     for p in pcts:
-        out[f"p{p}_turnaround"] = float(np.percentile(tat, p))
-        out[f"p{p}_ntt"] = float(np.percentile(ntts, p))
+        out[f"p{p}_turnaround"] = (float(np.percentile(tat, p)) if tat
+                                   else float("nan"))
+        out[f"p{p}_ntt"] = (float(np.percentile(ntts, p)) if ntts
+                            else float("nan"))
         out[f"p{p}_ttft"] = (float(np.percentile(ttft, p)) if ttft
                              else float("nan"))
     return out
 
 
 def summarize(tasks: Sequence[Task]) -> Dict[str, float]:
+    """Aggregate over one run's task set.  Latency/SLA keys cover the
+    completed subset; ``n_offered``/``n_rejected``/``shed_rate`` account
+    for admission-control drops (all zero-drop workloads are unchanged:
+    ``n_tasks == n_offered``)."""
+    done = completed(tasks)
     out = {
-        "antt": antt(tasks),
-        "stp": stp(tasks),
-        "fairness": fairness(tasks),
-        "tail95_high": tail_latency_ratio(tasks),
-        "n_tasks": float(len(tasks)),
-        "preemptions": float(np.sum([t.n_preemptions for t in tasks])),
-        "kills": float(np.sum([t.n_kills for t in tasks])),
-        "ckpt_overhead": float(np.sum([t.checkpoint_overhead for t in tasks])),
-        "sla_satisfaction": sla_satisfaction(tasks),
-        "goodput": goodput(tasks),
+        "antt": antt(done),
+        "stp": stp(done),
+        "fairness": fairness(done),
+        "tail95_high": tail_latency_ratio(done),
+        "n_tasks": float(len(done)),
+        "n_offered": float(len(tasks)),
+        "n_rejected": float(len(rejected(tasks))),
+        "shed_rate": float(len(rejected(tasks))) / max(len(tasks), 1),
+        "preemptions": float(np.sum([t.n_preemptions for t in done])),
+        "kills": float(np.sum([t.n_kills for t in done])),
+        "ckpt_overhead": float(np.sum([t.checkpoint_overhead for t in done])),
+        "sla_satisfaction": sla_satisfaction(done),
+        "goodput": goodput(done),
     }
-    out.update(percentile_summary(tasks))
+    out.update(percentile_summary(done))
     for n in (2, 4, 8, 12, 16, 20):
-        out[f"sla_viol@{n}"] = sla_violation_rate(tasks, n)
+        out[f"sla_viol@{n}"] = sla_violation_rate(done, n)
     return out
 
 
@@ -110,19 +145,30 @@ def aggregate(runs: Iterable[Dict[str, float]]) -> Dict[str, float]:
 def per_tenant_summary(tasks: Sequence[Task],
                        default_scale: float = DEFAULT_SLA_SCALE
                        ) -> Dict[str, Dict[str, float]]:
-    """ANTT/STP, tail percentiles, and SLA satisfaction per tenant class
-    (tasks with no tenant group under ``"-"``)."""
+    """ANTT/STP, tail percentiles, SLA satisfaction, and admission
+    accounting per tenant class (tasks with no tenant group under
+    ``"-"``).  Latency/SLA keys cover each tenant's completed subset;
+    ``n_offered = n_admitted + n_rejected`` always holds per tenant."""
     groups: Dict[str, List[Task]] = {}
     for t in tasks:
         groups.setdefault(t.tenant if t.tenant is not None else "-",
                           []).append(t)
+    all_done = completed(tasks)
+    makespan = max((t.completion for t in all_done), default=0.0)
     out: Dict[str, Dict[str, float]] = {}
     for tenant, ts in sorted(groups.items()):
-        row = {"antt": antt(ts), "stp": stp(ts), "n_tasks": float(len(ts)),
-               "sla_satisfaction": sla_satisfaction(ts, default_scale),
-               "goodput": goodput(ts, max(t.completion for t in tasks),
-                                  default_scale)}
-        row.update(percentile_summary(ts))
+        done, shed = completed(ts), rejected(ts)
+        row = {"n_tasks": float(len(done)),
+               "n_offered": float(len(ts)),
+               "n_admitted": float(len(ts) - len(shed)),
+               "n_rejected": float(len(shed)),
+               "shed_rate": float(len(shed)) / max(len(ts), 1),
+               "sla_satisfaction": sla_satisfaction(done, default_scale),
+               "goodput": goodput(done, makespan, default_scale)}
+        if done:
+            row["antt"] = antt(done)
+            row["stp"] = stp(done)
+            row.update(percentile_summary(done))
         out[tenant] = row
     return out
 
@@ -135,7 +181,7 @@ def per_device_summary(tasks: Sequence[Task]) -> Dict[int, Dict[str, float]]:
     """ANTT/STP and tail percentiles per device, grouped by the device each
     task completed on."""
     groups: Dict[int, List[Task]] = {}
-    for t in tasks:
+    for t in completed(tasks):
         groups.setdefault(t.device if t.device is not None else -1,
                           []).append(t)
     out: Dict[int, Dict[str, float]] = {}
@@ -163,7 +209,7 @@ def cluster_health(tasks: Sequence[Task], busy_times: Sequence[float],
     per_dev = per_device_summary(tasks)
     out["n_devices"] = float(len(busy_times))
     out["makespan"] = float(makespan)
-    out["throughput"] = float(len(tasks)) / max(makespan, 1e-12)
+    out["throughput"] = float(len(completed(tasks))) / max(makespan, 1e-12)
     out["util_mean"] = float(np.mean(utils))
     out["util_min"] = float(np.min(utils))
     out["util_max"] = float(np.max(utils))

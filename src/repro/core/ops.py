@@ -8,8 +8,7 @@ folded into the per-tile memory phase of Algorithm 1.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

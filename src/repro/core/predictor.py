@@ -31,7 +31,6 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.configs import ArchConfig
 from repro.core.ops import GemmOp, NetworkDesc, NodeOp, VectorOp
 from repro.hw import HardwareModel
 

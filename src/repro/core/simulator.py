@@ -28,8 +28,7 @@ import heapq
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
+from repro.core import events as event_hooks
 from repro.core import preemption
 from repro.core.arbiter import (Action, Arbiter, ArbiterConfig,
                                 should_preempt)  # noqa: F401  (compat)
@@ -47,6 +46,10 @@ class SimConfig:
     # Progress guarantee for KILL (anti-livelock; see ArbiterConfig).
     kill_early_frac: float = 0.5
     max_kills: int = 4
+    # Admission control (repro.workloads.admission.AdmissionPolicy or
+    # None): consulted once per submission via core.events.offer; rejected
+    # tasks are DROPPED, emit a ``drop`` event, and never execute.
+    admission: Optional[object] = None
 
     def arbiter_config(self) -> ArbiterConfig:
         return ArbiterConfig(mechanism=self.mechanism,
@@ -78,6 +81,20 @@ class NPUSimulator:
         self.cfg = cfg or SimConfig()
         self.arbiter = Arbiter(policy, self.cfg.arbiter_config())
         self.log: List[Tuple[float, str, int]] = []
+        self._inject = None          # live only inside run()
+
+    @property
+    def events(self):
+        """The shared event bus (core/events.py); subscribe before run()."""
+        return self.arbiter.events
+
+    def submit(self, task: Task, at: float) -> None:
+        """Inject a task mid-run (closed-loop clients); only valid from an
+        event hook while ``run()`` is executing."""
+        if self._inject is None:
+            raise RuntimeError("submit() is only valid during run() — "
+                               "call it from an event-bus hook")
+        self._inject(task, at)
 
     # ------------------------------------------------------------------
     def run(self, tasks: Sequence[Task]) -> List[Task]:
@@ -86,7 +103,11 @@ class NPUSimulator:
         from repro.workloads.trace_io import as_task_list  # no import cycle
         tasks = as_task_list(tasks)
         hw, cfg, arbiter = self.hw, self.cfg, self.arbiter
+        bus, admission = arbiter.events, cfg.admission
         arbiter.reset()
+        bus.clear()
+        if admission is not None:
+            admission.reset()
         self.log = []          # per-run, like every other piece of state
         counter = itertools.count()
         events: List[Tuple[float, int, str, int, int]] = []
@@ -99,13 +120,22 @@ class NPUSimulator:
             t.state = TaskState.WAITING
             push(t.arrival, "arrival", t.tid)
 
+        def inject(task: Task, at: float):
+            at = float(at)
+            task.state = TaskState.WAITING
+            task.arrival = at
+            task.last_wake = at
+            by_id[task.tid] = task
+            push(at, "arrival", task.tid)
+        self._inject = inject
+
         ready: List[Task] = []
         running: Optional[Task] = None
         run_start = 0.0          # when current execution segment began
         run_gen = 0              # invalidates stale completion events
         busy_until = 0.0         # switch-overhead window (non-preemptible)
         next_quantum = None
-        n_done = 0
+        n_settled = 0            # DONE + DROPPED
 
         def log(t, kind, tid):
             if cfg.log_events:
@@ -136,7 +166,8 @@ class NPUSimulator:
             run_gen += 1
             busy_until = t0
             push(t0 + task.remaining, "complete", task.tid, run_gen)
-            log(now, f"start", task.tid)
+            log(now, "start", task.tid)
+            bus.dispatch(now, task, 0)
             return t0
 
         def preempt(now: float, mech: Mechanism) -> float:
@@ -166,6 +197,7 @@ class NPUSimulator:
             run_gen += 1
             busy_until = free_at
             log(now, f"preempt-{mech.value}", task.tid)
+            bus.preempt(now, task, 0, mech.value)
             return free_at
 
         def sync_running(now: float):
@@ -198,38 +230,48 @@ class NPUSimulator:
             # IDLE / KEEP / DEFER: nothing to execute this wake-up
 
         # ---------------- main loop ----------------
-        while events:
-            now, _, kind, tid, gen = heapq.heappop(events)
-            if kind == "arrival":
-                task = by_id[tid]
-                ready.append(task)
-                task.last_wake = now
-                log(now, "arrival", tid)
-                schedule(now)
-                ensure_quantum(now)
-            elif kind == "complete":
-                if running is None or running.tid != tid or gen != run_gen:
-                    continue  # stale
-                task = running
-                task.executed = task.isolated_time
-                task.completion = now
-                task.state = TaskState.DONE
-                n_done += 1
-                running = None
-                log(now, "complete", tid)
-                schedule(now)
-                if ready:
-                    ensure_quantum(now)
-            elif kind == "quantum":
-                next_quantum = None
-                if ready or running is not None:
+        try:
+            while events:
+                now, _, kind, tid, gen = heapq.heappop(events)
+                if kind == "arrival":
+                    task = by_id[tid]
+                    if not event_hooks.offer(bus, admission, task, now,
+                                             len(ready)):
+                        task.state = TaskState.DROPPED
+                        n_settled += 1
+                    else:
+                        ready.append(task)
+                        task.last_wake = now
+                        log(now, "arrival", tid)
+                        schedule(now)
+                        ensure_quantum(now)
+                elif kind == "complete":
+                    if (running is None or running.tid != tid
+                            or gen != run_gen):
+                        continue  # stale
+                    task = running
+                    task.executed = task.isolated_time
+                    task.completion = now
+                    task.state = TaskState.DONE
+                    n_settled += 1
+                    running = None
+                    log(now, "complete", tid)
+                    bus.complete(now, task, 0)
                     schedule(now)
                     if ready:
                         ensure_quantum(now)
-            if n_done == len(by_id) and not events:
-                break
-
-        assert all(t.state == TaskState.DONE for t in by_id.values()), (
+                elif kind == "quantum":
+                    next_quantum = None
+                    if ready or running is not None:
+                        schedule(now)
+                        if ready:
+                            ensure_quantum(now)
+                if n_settled == len(by_id) and not events:
+                    break
+        finally:
+            self._inject = None   # dead runs must not accept submissions
+        settled = (TaskState.DONE, TaskState.DROPPED)
+        assert all(t.state in settled for t in by_id.values()), (
             f"unfinished tasks: "
-            f"{[t.tid for t in by_id.values() if t.state != TaskState.DONE]}")
+            f"{[t.tid for t in by_id.values() if t.state not in settled]}")
         return list(by_id.values())

@@ -16,6 +16,7 @@ class TaskState(enum.Enum):
     RUNNING = "running"
     PREEMPTED = "preempted"    # checkpointed, in ReadyQueue
     DONE = "done"
+    DROPPED = "dropped"        # shed by admission control; never executed
 
 
 @dataclasses.dataclass

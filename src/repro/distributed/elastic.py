@@ -10,12 +10,10 @@ memory implications before committing.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
 
 import jax
-import numpy as np
 
-from repro.configs import ArchConfig, Shape
+from repro.configs import ArchConfig
 from repro.distributed import sharding as shd
 
 

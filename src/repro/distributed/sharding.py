@@ -21,11 +21,9 @@ builder serves the 2-device test mesh and the 512-chip production mesh.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import ArchConfig, Shape
@@ -125,7 +123,6 @@ def logical_rules(cfg: ArchConfig, shape: Shape, mesh: Mesh) -> Dict[str, Any]:
 def _param_spec(path: str, shape: Tuple[int, ...], cfg: ArchConfig,
                 mesh: Mesh) -> P:
     fsdp = _axes_in(mesh, FSDP_AXES)
-    nd = len(shape)
     in_slots = "slots/" in path
     base_shape = shape[1:] if in_slots else shape
 

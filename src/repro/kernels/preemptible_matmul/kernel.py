@@ -17,8 +17,6 @@ multiples of the 128-lane MXU.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -332,7 +332,6 @@ def main():
     ap.add_argument("--out", default="results/dryrun.json")
     args = ap.parse_args()
 
-    cells = []
     if args.all:
         archs = configs.ARCH_NAMES
         shapes = list(SHAPES)

@@ -12,7 +12,6 @@ import json
 import jax
 import numpy as np
 
-from repro import configs
 from repro.models import get_model
 from repro.serving import InferenceRequest, ServingEngine
 

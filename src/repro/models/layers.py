@@ -1,9 +1,6 @@
 """Shared neural-net building blocks (pure functions over param pytrees)."""
 from __future__ import annotations
 
-import math
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

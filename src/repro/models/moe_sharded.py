@@ -26,7 +26,6 @@ same path serves train_4k.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Tuple
 
 import jax

@@ -3,10 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict
-
-import jax
-import jax.numpy as jnp
+from typing import Callable
 
 from repro import configs
 from repro.configs import ArchConfig

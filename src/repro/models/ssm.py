@@ -177,7 +177,6 @@ def mamba_decode(x, p, cfg: ArchConfig, cache: Params) -> Tuple[jax.Array, Param
 def init_mlstm(key, cfg: ArchConfig, dtype) -> Params:
     d, h = cfg.d_model, cfg.n_heads
     dp = int(cfg.lstm_proj_factor * d)
-    dh = dp // h
     ks = jax.random.split(key, 8)
     std_d, std_p = d ** -0.5, dp ** -0.5
     return {
@@ -262,7 +261,6 @@ def mlstm_forward(x, p, cfg: ArchConfig) -> jax.Array:
 
 def mlstm_decode(x, p, cfg: ArchConfig, cache: Params) -> Tuple[jax.Array, Params]:
     b = x.shape[0]
-    hh = cfg.n_heads
     dp = int(cfg.lstm_proj_factor * cfg.d_model)
     q, k, v, z, i_pre, f_pre = _mlstm_qkv(x, p, cfg)
     state = (cache["C"], cache["n"], cache["m"])

@@ -42,10 +42,11 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 import numpy as np
 
 from repro.core import arch_ops, metrics, preemption
+from repro.core import events as events_mod
 from repro.core.arbiter import Action, Arbiter, ArbiterConfig
 from repro.core.cluster import Cluster
-from repro.core.predictor import (LengthRegressor, Predictor, network_time,
-                                  per_node_times)
+from repro.core.predictor import (LengthRegressor, Predictor,
+                                  network_time)
 from repro.core.preemption import Mechanism
 from repro.core.scheduler import SCHED_QUANTUM, Policy, make_policy
 from repro.core.task import Task, TaskState
@@ -79,14 +80,18 @@ class ServingEngine:
                  straggler_factor: Optional[Callable[[int, int], float]] = None,
                  execute: bool = True,
                  n_devices: int = 1,
-                 placement: str = "least_loaded"):
+                 placement: str = "least_loaded",
+                 admission=None):
         """``models``: name → (Model, params).  ``policy`` is a name or a
         :class:`Policy` instance; ``preemptive`` overrides the policy's
         flag when given (string policies default to preemptive).
         ``execute=False`` runs the engine in pure virtual-time mode (no
         tensor computation) for large-scale scheduling studies.
         ``n_devices``/``placement`` scale the engine to a multi-NPU
-        cluster (see module docstring)."""
+        cluster (see module docstring).  ``admission`` is an optional
+        :class:`repro.workloads.admission.AdmissionPolicy`: rejected
+        requests are DROPPED at ingest (a ``drop`` event fires, no tensors
+        run) and appear in per-tenant accounting as ``n_rejected``."""
         self.hw = hw
         if isinstance(policy, Policy):
             self.policy = policy
@@ -97,6 +102,7 @@ class ServingEngine:
                 policy, preemptive=True if preemptive is None else preemptive)
         self.mechanism = mechanism
         self.arbiter = Arbiter(self.policy, ArbiterConfig(mechanism=mechanism))
+        self.admission = admission
         self.n_devices = int(n_devices)
         self.placement = placement
         self.cluster = Cluster(self.n_devices, placement)
@@ -113,6 +119,20 @@ class ServingEngine:
         self._length_reg: Dict[str, LengthRegressor] = {}
         self.completed: List[RequestResult] = []
         self.tasks: List[Task] = []
+        self._inject = None          # live only inside run()
+
+    @property
+    def events(self):
+        """The shared event bus (core/events.py); subscribe before run()."""
+        return self.arbiter.events
+
+    def submit(self, req: InferenceRequest, at: float) -> None:
+        """Inject a request mid-run (closed-loop clients); only valid from
+        an event hook while ``run()`` is executing."""
+        if self._inject is None:
+            raise RuntimeError("submit() is only valid during run() — "
+                               "call it from an event-bus hook")
+        self._inject(req, at)
 
     # ------------------------------------------------------------------
     def fit_length_regressor(self, arch: str,
@@ -184,21 +204,39 @@ class ServingEngine:
         arrivals = [(r.arrival, r.rid) for r in requests]
         heapq.heapify(arrivals)
         n_dev = self.n_devices
+        bus, admission = self.arbiter.events, self.admission
         self.arbiter.reset()
+        bus.clear()
+        if admission is not None:
+            admission.reset()
         self.cluster = Cluster(n_dev, self.placement)
         self._run_tasks: List[Task] = []   # this run only (cluster metrics)
         devices = self.cluster.devices
         dev_clock = [0.0] * n_dev
         running: List[Optional[_Job]] = [None] * n_dev
         ready: List[_Job] = []
+        n_dropped = 0
+
+        def inject(req: InferenceRequest, at: float):
+            req.arrival = float(at)
+            jobs[req.rid] = self._make_job(req)
+            heapq.heappush(arrivals, (req.arrival, req.rid))
+        self._inject = inject
 
         def ready_tasks():
             return [j.task for j in ready]
 
         def ingest(now):
+            nonlocal n_dropped
             while arrivals and arrivals[0][0] <= now + 1e-15:
-                _, rid = heapq.heappop(arrivals)
+                at, rid = heapq.heappop(arrivals)
                 j = jobs[rid]
+                if not events_mod.offer(bus, admission, j.task, at,
+                                        len(ready)):
+                    j.task.state = TaskState.DROPPED
+                    self.tasks.append(j.task)
+                    n_dropped += 1
+                    continue
                 j.task.state = TaskState.WAITING
                 j.task.last_wake = j.req.arrival
                 ready.append(j)
@@ -216,6 +254,7 @@ class ServingEngine:
         def begin(d: int, j: _Job):
             t = j.task
             now = dev_clock[d]
+            bus.dispatch(now, t, d)
             if t.restore_pending:
                 lat = preemption.restore_latency(t, self.hw)
                 if t.device is not None and t.device != d:
@@ -289,6 +328,7 @@ class ServingEngine:
             self._run_tasks.append(t)
             running[d] = None
             devices[d].running = None
+            bus.complete(clock, t, d)
 
         def exec_one_step(d: int, j: _Job):
             """Run one boundary-to-boundary step (real tensors + virtual
@@ -330,67 +370,73 @@ class ServingEngine:
         # Per-device virtual clocks; each iteration advances the device
         # with the smallest clock (running devices win ties so an idle
         # device waiting for work cannot starve progress).
-        n_total = len(jobs)
         done_before = len(self.completed)
-        while len(self.completed) - done_before < n_total:
-            d = min(range(n_dev),
-                    key=lambda i: (dev_clock[i],
-                                   0 if running[i] is not None else 1, i))
-            now = dev_clock[d]
-            ingest(now)
-            j = running[d]
-            if j is None:
-                if not ready:
-                    if arrivals:
-                        dev_clock[d] = max(now, arrivals[0][0])
-                    else:
-                        # nothing to do on this device until another one
-                        # finishes or preempts; follow the busy clocks
-                        busy = [dev_clock[i] for i in range(n_dev)
-                                if running[i] is not None]
-                        assert busy, "engine stalled with work outstanding"
-                        dev_clock[d] = max(now, min(busy))
-                    continue
-                cand = pick(d)
-                if cand is None:
-                    # policy abstained with a non-empty queue: advance to
-                    # the next arrival, or by one scheduling quantum when
-                    # there is none (anti-livelock; the old loop spun here)
-                    if arrivals:
-                        dev_clock[d] = max(now, arrivals[0][0])
-                    else:
-                        dev_clock[d] = now + SCHED_QUANTUM
-                    continue
-                # among the devices free *now*, placement chooses which one
-                # takes the candidate (affinity avoids a cross-chip resume)
-                free = [devices[i] for i in range(n_dev)
-                        if running[i] is None and dev_clock[i] <= now + 1e-15]
-                target = (self.cluster.choose(cand.task, free).dev
-                          if len(free) > 1 else d)
-                ready.remove(cand)
-                dev_clock[target] = max(dev_clock[target], now)
-                begin(target, cand)
-                continue
-            # at a step boundary: consider preemption, then run one step
-            if ready and self.policy.preemptive:
-                cand = pick(d)
-                if cand is not None and cand is not j:
-                    dec = self.arbiter.arbitrate(j.task, cand.task)
-                    if dec.action is Action.PREEMPT:
-                        victim = j
-                        if dec.mechanism is Mechanism.KILL:
-                            do_kill(d, victim)
+        # closed-loop hooks can grow ``jobs`` mid-run; dropped requests
+        # settle without completing, so count both against the total
+        try:
+            while len(self.completed) - done_before + n_dropped < len(jobs):
+                d = min(range(n_dev),
+                        key=lambda i: (dev_clock[i],
+                                       0 if running[i] is not None else 1, i))
+                now = dev_clock[d]
+                ingest(now)
+                j = running[d]
+                if j is None:
+                    if not ready:
+                        if arrivals:
+                            dev_clock[d] = max(now, arrivals[0][0])
                         else:
-                            do_checkpoint(d, victim)
-                        devices[d].running = None
-                        ready.append(victim)
-                        victim.task.last_wake = dev_clock[d]
-                        ready.remove(cand)
-                        begin(d, cand)
-            j = running[d]
-            exec_one_step(d, j)
-            if step_done(j):
-                complete(d, j)
+                            # nothing to do on this device until another one
+                            # finishes or preempts; follow the busy clocks
+                            busy = [dev_clock[i] for i in range(n_dev)
+                                    if running[i] is not None]
+                            assert busy, "engine stalled with work outstanding"
+                            dev_clock[d] = max(now, min(busy))
+                        continue
+                    cand = pick(d)
+                    if cand is None:
+                        # policy abstained with a non-empty queue: advance to
+                        # the next arrival, or by one scheduling quantum when
+                        # there is none (anti-livelock; the old loop spun here)
+                        if arrivals:
+                            dev_clock[d] = max(now, arrivals[0][0])
+                        else:
+                            dev_clock[d] = now + SCHED_QUANTUM
+                        continue
+                    # among the devices free *now*, placement chooses which one
+                    # takes the candidate (affinity avoids a cross-chip resume)
+                    free = [devices[i] for i in range(n_dev)
+                            if running[i] is None and dev_clock[i] <= now + 1e-15]
+                    target = (self.cluster.choose(cand.task, free).dev
+                              if len(free) > 1 else d)
+                    ready.remove(cand)
+                    dev_clock[target] = max(dev_clock[target], now)
+                    begin(target, cand)
+                    continue
+                # at a step boundary: consider preemption, then run one step
+                if ready and self.policy.preemptive:
+                    cand = pick(d)
+                    if cand is not None and cand is not j:
+                        dec = self.arbiter.arbitrate(j.task, cand.task)
+                        if dec.action is Action.PREEMPT:
+                            victim = j
+                            bus.preempt(dev_clock[d], victim.task, d,
+                                        dec.mechanism.value)
+                            if dec.mechanism is Mechanism.KILL:
+                                do_kill(d, victim)
+                            else:
+                                do_checkpoint(d, victim)
+                            devices[d].running = None
+                            ready.append(victim)
+                            victim.task.last_wake = dev_clock[d]
+                            ready.remove(cand)
+                            begin(d, cand)
+                j = running[d]
+                exec_one_step(d, j)
+                if step_done(j):
+                    complete(d, j)
+        finally:
+            self._inject = None   # dead runs must not accept submissions
         return self.completed
 
     # ------------------------------------------------------------------

@@ -16,7 +16,6 @@ repeated preemption never triggers recompilation.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional
 
 import jax

@@ -10,7 +10,7 @@ CHECKPOINT/restore pays under memory pressure.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 PCIE_BW = 32e9  # bytes/sec host link
 

@@ -11,7 +11,7 @@ the (sharded) mean-reduce, ``decompress`` after.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

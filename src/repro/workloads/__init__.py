@@ -44,6 +44,22 @@ fresh simulator tasks (RNG-free, bit-identical per call) and
 requests with payloads synthesized from each record's own seed.  The
 simulators and the serving engine accept a ``Trace`` directly in ``run``.
 
+Closed-loop clients, admission control, executed traces
+-------------------------------------------------------
+``ClosedLoop.drive(layer, items, seed)`` (or :class:`ClosedLoopDriver`)
+runs any execution layer under *reactive* closed-loop arrivals: clients
+resample think time off actual ``complete``/``drop`` events from the
+layer's event bus (``core/events.py``) instead of a pre-sampled trace;
+``open_frac``/``open_rate`` mix in an open-loop Poisson side stream.
+``repro.workloads.admission`` provides per-tenant admission control
+(``token_bucket`` rate limiting, ``queue_shed`` load shedding,
+``priority_shed`` priority-aware early drop); rejected work is DROPPED,
+emits a ``drop`` event, and shows up as ``n_rejected`` in
+``metrics.per_tenant_summary``.  :class:`ExecutedTrace` captures the
+dispatch/preempt/complete/drop timeline of what actually ran,
+round-trips through JSONL, replays through any EventBus, and diffs
+against the offered :class:`Trace`.
+
 Determinism guarantees
 ----------------------
 1. ``generate`` is a pure function of (mix, seed, n_tasks).
@@ -52,16 +68,26 @@ Determinism guarantees
    simulator, the cluster simulator, and the serving engine alike.
 3. ``paper_mix()`` + ``UniformWindow`` reproduces the pre-refactor §III
    generator exactly at equal seeds (pinned by tests/test_workloads.py).
+4. Same seed + same workload ⇒ the execution event log is bit-identical
+   across ``NPUSimulator`` and ``ClusterSimulator(n_devices=1)``, and an
+   ``ExecutedTrace`` save → load → replay reproduces it exactly
+   (tests/test_events.py).
 """
+from repro.workloads.admission import (ADMISSION_NAMES,  # noqa: F401
+                                       AdmissionPolicy, AdmitAll,
+                                       PriorityShed, QueueShed, TokenBucket,
+                                       make_admission)
 from repro.workloads.arrivals import (ARRIVAL_NAMES, ArrivalProcess,  # noqa: F401
-                                      ClosedLoop, Diurnal, MMPP, Poisson,
-                                      UniformWindow, make_arrival)
+                                      ClosedLoop, ClosedLoopDriver, Diurnal,
+                                      MMPP, Poisson, UniformWindow,
+                                      make_arrival)
 from repro.workloads.generator import generate  # noqa: F401
 from repro.workloads.spec import (BATCH_CHOICES, TaskSpec,  # noqa: F401
                                   materialize_task, sample_task_spec)
 from repro.workloads.tenants import (TenantSpec, TrafficMix,  # noqa: F401
                                      paper_mix)
-from repro.workloads.trace_io import Trace, as_task_list  # noqa: F401
+from repro.workloads.trace_io import (ExecutedTrace, Trace,  # noqa: F401
+                                      as_task_list)
 
 
 def to_requests(trace, models):

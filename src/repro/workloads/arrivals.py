@@ -17,13 +17,17 @@ a complete, replayable description of the arrival pattern.
                     states with per-state rates — bursty traffic.
 ``diurnal``         non-homogeneous Poisson with a sinusoidal rate curve
                     (thinning), for day/night load patterns.
-``closed_loop``     N clients issuing think-time-separated requests; the
-                    next request of a client follows the (isolated-service
-                    approximated) completion of its previous one.
+``closed_loop``     N clients issuing think-time-separated requests.  The
+                    *reactive* form (:meth:`ClosedLoop.drive`) paces each
+                    client off its previous request's actual completion/
+                    drop event; :meth:`ClosedLoop.sample` is the
+                    pre-sampled open-loop approximation (completion ≈
+                    isolated service time) for replayable traces.
 =================  ========================================================
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 from typing import Dict, Optional
@@ -168,20 +172,37 @@ class Diurnal(ArrivalProcess):
 class ClosedLoop(ArrivalProcess):
     """``n_clients`` synchronous clients with exponential think time.
 
-    Tasks are dealt to clients round-robin; a client issues its next
-    request one think time after its previous request *completes*, with
-    completion approximated by the isolated service time (the actual
-    contended completion is execution-dependent, which a pre-sampled,
-    replayable trace cannot observe — so this is the standard open-loop
-    approximation of a closed system, documented and deterministic).
+    The *reactive* form (the real closed loop): :meth:`drive` runs an
+    execution layer directly, dealing tasks to clients round-robin; each
+    client issues its next request one freshly-sampled think time after
+    its previous request's **actual** ``complete`` (or ``drop``) event,
+    observed through the layer's event bus (``core/events.py``).  Under
+    congestion the clients slow down with the system — offered throughput
+    self-limits instead of growing an unbounded queue.
+
+    ``open_frac``/``open_rate`` give the open/closed *hybrid* (partly-open
+    loop): that fraction of the workload arrives as an open-loop Poisson
+    stream at ``open_rate`` req/s regardless of completions, the rest is
+    closed-loop.
+
+    :meth:`sample` remains the pre-sampled open-loop *approximation*
+    (completion ≈ isolated service time) for contexts that need a
+    replayable arrival-time trace without running a simulator; it ignores
+    the hybrid knobs.
     """
     n_clients: int
     think_time: float
+    open_frac: float = 0.0      # hybrid: fraction arriving open-loop
+    open_rate: float = 0.0      # hybrid: open-loop Poisson rate (req/s)
     name = "closed_loop"
 
     def __post_init__(self):
         if self.n_clients < 1:
             raise ValueError("n_clients must be >= 1")
+        if not 0.0 <= self.open_frac <= 1.0:
+            raise ValueError("open_frac must be in [0, 1]")
+        if self.open_frac > 0 and self.open_rate <= 0:
+            raise ValueError("hybrid mode (open_frac > 0) needs open_rate > 0")
 
     def sample(self, rng, service_times):
         n = len(service_times)
@@ -193,6 +214,100 @@ class ClosedLoop(ArrivalProcess):
             clocks[c] += float(service_times[i]) + rng.exponential(
                 self.think_time)
         return out
+
+    def drive(self, layer, items, seed: int = 0):
+        """Run ``layer`` (simulator, cluster, or engine) under reactive
+        closed-loop arrivals over ``items`` (Tasks or InferenceRequests);
+        returns the layer's ``run`` result.  See :class:`ClosedLoopDriver`."""
+        return ClosedLoopDriver(self, items, seed=seed).run(layer)
+
+
+class ClosedLoopDriver:
+    """Event-driven client pool behind :class:`ClosedLoop`.
+
+    ``items`` are dealt to clients round-robin (after carving off the
+    leading ``open_frac`` slice as the hybrid open-loop stream — items are
+    i.i.d. draws from the mix, so a prefix split is unbiased).  Each
+    client owns its own RNG stream keyed by ``(seed, client)``, so think
+    times resample deterministically in that client's completion order:
+    same seed + same workload ⇒ bit-identical arrivals and event logs.
+
+    The driver works against any layer exposing the common execution
+    surface: ``events`` (an :class:`repro.core.events.EventBus`),
+    ``submit(item, at)`` (mid-run injection), and ``run(initial_items)``.
+    A client whose request is shed by admission control observes the
+    ``drop`` event and moves on to its next request after a think time,
+    like a rejected user coming back later.
+    """
+
+    def __init__(self, process: ClosedLoop, items, seed: int = 0):
+        items = list(items)
+        self.process = process
+        n_open = int(round(process.open_frac * len(items)))
+        self._open_items = items[:n_open]
+        self._queues = [collections.deque()
+                        for _ in range(process.n_clients)]
+        for i, item in enumerate(items[n_open:]):
+            self._queues[i % process.n_clients].append(item)
+        self._rngs = [np.random.default_rng([seed, c])
+                      for c in range(process.n_clients)]
+        self._open_rng = np.random.default_rng([seed, process.n_clients])
+        self._owner: Dict[int, int] = {}      # in-flight tid -> client
+        self.n_offered = 0
+
+    @staticmethod
+    def _tid(item) -> int:
+        return item.tid if hasattr(item, "tid") else item.rid
+
+    @staticmethod
+    def _set_arrival(item, t: float) -> None:
+        item.arrival = float(t)
+        if hasattr(item, "last_wake"):
+            item.last_wake = float(t)
+
+    def _next_for(self, client: int, at: float, layer) -> None:
+        queue = self._queues[client]
+        if not queue:
+            return
+        item = queue.popleft()
+        think = float(self._rngs[client].exponential(
+            self.process.think_time))
+        self._owner[self._tid(item)] = client
+        self.n_offered += 1
+        layer.submit(item, at + think)
+
+    def run(self, layer):
+        """Drive one run of ``layer``; returns ``layer.run``'s result."""
+        bus = layer.events
+        initial = []
+        t = 0.0
+        for item in self._open_items:       # open-loop Poisson side stream
+            t += float(self._open_rng.exponential(1.0 / self.process.open_rate))
+            self._set_arrival(item, t)
+            self.n_offered += 1
+            initial.append(item)
+        for c, queue in enumerate(self._queues):
+            if not queue:
+                continue
+            item = queue.popleft()
+            t0 = float(self._rngs[c].exponential(self.process.think_time))
+            self._set_arrival(item, t0)
+            self._owner[self._tid(item)] = c
+            self.n_offered += 1
+            initial.append(item)
+
+        def settled(ev) -> None:
+            client = self._owner.pop(ev.tid, None)
+            if client is not None:
+                self._next_for(client, ev.t, layer)
+
+        bus.on_complete(settled)
+        bus.on_drop(settled)
+        try:
+            return layer.run(initial)
+        finally:
+            bus.unsubscribe("complete", settled)
+            bus.unsubscribe("drop", settled)
 
 
 _PROCESSES = {

@@ -7,6 +7,14 @@ record per line), and :meth:`Trace.tasks` materializes *fresh* Task objects
 on every call — so the same trace can drive any number of policy runs, each
 starting from pristine dynamic state, across the single-NPU simulator, the
 cluster simulator, and the serving engine, with bit-identical inputs.
+
+An :class:`ExecutedTrace` is the other direction: a capture of what
+actually *ran* — the dispatch/preempt/complete/drop timeline from the
+shared event bus (``core/events.py``), with device and mechanism — in the
+same JSONL framing.  It round-trips losslessly (save → load → identical
+events), replays through any :class:`~repro.core.events.EventBus`, and
+:meth:`ExecutedTrace.diff` compares it against the *offered* trace
+(queueing delays, sheds, tasks offered but never run).
 """
 from __future__ import annotations
 
@@ -14,6 +22,7 @@ import dataclasses
 import json
 from typing import IO, Dict, List, Optional, Sequence, Union
 
+from repro.core.events import Event, EventBus
 from repro.core.predictor import Predictor
 from repro.core.task import Task
 from repro.workloads.spec import TaskSpec, materialize_task
@@ -92,6 +101,135 @@ class Trace:
                 f"records, file has {len(records)}")
         return cls(records=records, kind=header.get("kind", "paper"),
                    meta=header.get("meta", {}), pred=pred)
+
+
+@dataclasses.dataclass
+class ExecutedTrace:
+    """What actually ran: an ordered capture of the execution event stream.
+
+    ``capture`` snapshots a layer's event bus after (or during) a run;
+    ``save``/``load`` round-trip the JSONL form; ``replay`` re-emits the
+    events through a bus, driving any subscriber exactly as the original
+    run did — same-seed capture → save → load → replay reproduces the
+    original event log bit-identically (tests/test_events.py).
+    """
+    events: List[Event]
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    @classmethod
+    def capture(cls, layer_or_bus, meta: Optional[Dict] = None
+                ) -> "ExecutedTrace":
+        """Snapshot the event log of an execution layer (anything with an
+        ``events`` bus: NPUSimulator, ClusterSimulator, ServingEngine) or
+        of a bare :class:`EventBus`."""
+        bus = getattr(layer_or_bus, "events", layer_or_bus)
+        return cls(events=list(bus.log), meta=dict(meta or {}))
+
+    # ------------------------------------------------------------------
+    def save(self, path_or_fp: Union[str, IO[str]]) -> None:
+        header = {"version": TRACE_FORMAT_VERSION, "kind": "executed",
+                  "n_records": len(self.events), "meta": self.meta}
+        if hasattr(path_or_fp, "write"):
+            self._write(path_or_fp, header)
+        else:
+            with open(path_or_fp, "w") as fp:
+                self._write(fp, header)
+
+    def _write(self, fp: IO[str], header: Dict) -> None:
+        fp.write(json.dumps(header, sort_keys=True) + "\n")
+        for ev in self.events:
+            fp.write(json.dumps(ev.to_json(), sort_keys=True) + "\n")
+
+    @classmethod
+    def load(cls, path_or_fp: Union[str, IO[str]]) -> "ExecutedTrace":
+        if hasattr(path_or_fp, "read"):
+            lines = [ln for ln in path_or_fp.read().splitlines() if ln]
+        else:
+            with open(path_or_fp) as fp:
+                lines = [ln for ln in fp.read().splitlines() if ln]
+        if not lines:
+            raise ValueError("empty executed-trace file")
+        header = json.loads(lines[0])
+        if header.get("version") != TRACE_FORMAT_VERSION:
+            raise ValueError(
+                f"unsupported trace version {header.get('version')!r}")
+        if header.get("kind") != "executed":
+            raise ValueError(
+                f"not an executed trace (kind={header.get('kind')!r}); "
+                "use Trace.load for offered traces")
+        events = [Event.from_json(json.loads(ln)) for ln in lines[1:]]
+        if header.get("n_records") not in (None, len(events)):
+            raise ValueError(
+                f"truncated trace: header says {header['n_records']} "
+                f"events, file has {len(events)}")
+        return cls(events=events, meta=header.get("meta", {}))
+
+    # ------------------------------------------------------------------
+    def replay(self, bus: Optional[EventBus] = None) -> EventBus:
+        """Re-emit every captured event through ``bus`` (a fresh one when
+        omitted), driving its subscribers in original order; returns the
+        bus, whose log then equals ``self.events``."""
+        bus = bus if bus is not None else EventBus()
+        for ev in self.events:
+            bus.emit(ev)
+        return bus
+
+    # ------------------------------------------------------------------
+    def per_task(self) -> Dict[int, Dict]:
+        """Fold the timeline into per-task facts: submit/first-dispatch/
+        completion times, preemption count, drop flag, device set."""
+        out: Dict[int, Dict] = {}
+        for ev in self.events:
+            row = out.setdefault(ev.tid, {
+                "submit": None, "dispatch": None, "complete": None,
+                "dropped": False, "n_preemptions": 0, "devices": []})
+            if ev.kind == "submit" and row["submit"] is None:
+                row["submit"] = ev.t
+            elif ev.kind == "dispatch":
+                if row["dispatch"] is None:
+                    row["dispatch"] = ev.t
+                if ev.device not in row["devices"]:
+                    row["devices"].append(ev.device)
+            elif ev.kind == "preempt":
+                row["n_preemptions"] += 1
+            elif ev.kind == "complete":
+                row["complete"] = ev.t
+            elif ev.kind == "drop":
+                row["dropped"] = True
+        return out
+
+    def diff(self, offered: "Trace") -> Dict:
+        """Offered-vs-executed comparison: which offered tasks were shed
+        or never ran, which executed tasks were not in the offered trace
+        (e.g. closed-loop injections), and how far execution drifted from
+        the offer (queueing delay, arrival skew)."""
+        per = self.per_task()
+        offered_at = {rec.tid: rec.arrival for rec in offered.records}
+        ran = {tid: row for tid, row in per.items()
+               if row["dispatch"] is not None}
+        delays = [row["dispatch"] - row["submit"] for row in per.values()
+                  if row["dispatch"] is not None and row["submit"] is not None]
+        skews = [abs(per[tid]["submit"] - offered_at[tid])
+                 for tid in offered_at
+                 if tid in per and per[tid]["submit"] is not None]
+        return {
+            "n_offered": len(offered_at),
+            "n_submitted": len(per),
+            "n_executed": len(ran),
+            "n_completed": sum(1 for r in per.values()
+                               if r["complete"] is not None),
+            "n_dropped": sum(1 for r in per.values() if r["dropped"]),
+            "n_preemptions": sum(r["n_preemptions"] for r in per.values()),
+            "dropped": sorted(t for t, r in per.items() if r["dropped"]),
+            "never_ran": sorted(t for t in offered_at
+                                if t not in ran),
+            "not_offered": sorted(t for t in per if t not in offered_at),
+            "mean_queue_delay": (sum(delays) / len(delays)) if delays else 0.0,
+            "max_arrival_skew": max(skews, default=0.0),
+        }
 
 
 def as_task_list(obj: Union[Trace, Sequence[Task]],

@@ -1,0 +1,236 @@
+"""Admission control: per-tenant shedding with exact accounting.
+
+Pins the admission contracts of workloads/admission.py and the
+``offer``/``drop`` path in core/events.py:
+
+* admitted + rejected == offered, per tenant and globally, on both
+  virtual-clock layers and the serving engine;
+* token buckets rate-limit deterministically, queue shedding bounds the
+  backlog, priority shedding protects the high-priority class;
+* dropped tasks never execute and are excluded from latency/SLA
+  aggregates but counted in shed accounting.
+"""
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.scheduler import make_policy
+from repro.core.simulator import NPUSimulator, SimConfig
+from repro.core.task import Task, TaskState
+from repro.hw import PAPER_NPU
+from repro.workloads import (
+    ADMISSION_NAMES,
+    Poisson,
+    PriorityShed,
+    QueueShed,
+    TenantSpec,
+    TokenBucket,
+    TrafficMix,
+    generate,
+    make_admission,
+)
+from repro.configs import paper_workloads as pw
+
+
+def mk_task(tid, priority=3, arrival=0.0, total=2e-3, tenant=None):
+    n = 4
+    return Task(
+        tid=tid,
+        model=f"m{tid}",
+        priority=priority,
+        arrival=arrival,
+        batch=1,
+        node_times=np.full(n, total / n),
+        node_out_bytes=np.full(n, 1 << 16, dtype=np.int64),
+        predicted_total=total,
+        tenant=tenant,
+    )
+
+
+def overload_mix(rate):
+    models = tuple(pw.WORKLOAD_NAMES)
+    return TrafficMix(
+        tenants=(
+            TenantSpec(name="hi", models=models, share=0.3, priority=9, sla_scale=4.0),
+            TenantSpec(name="lo", models=models, share=0.7, priority=1, sla_scale=20.0),
+        ),
+        arrivals=Poisson(rate=rate),
+        kind="paper",
+    )
+
+
+# ---------------------------------------------------------------------------
+# policy unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_token_bucket_rate_limits_exactly():
+    tb = TokenBucket(rate=10.0, burst=2.0)
+    tb.reset()
+    t = mk_task(0, tenant="a")
+    # burst of 2 admits the first two back-to-back submissions
+    assert tb.admit(t, 0.0, 0) and tb.admit(t, 0.0, 0)
+    assert not tb.admit(t, 0.0, 0)
+    # 0.1 s at 10 tokens/s refills exactly one admission
+    assert tb.admit(t, 0.1, 0)
+    assert not tb.admit(t, 0.1, 0)
+
+
+def test_token_bucket_buckets_are_per_tenant():
+    tb = TokenBucket(rate=1.0, burst=1.0)
+    tb.reset()
+    assert tb.admit(mk_task(0, tenant="a"), 0.0, 0)
+    assert not tb.admit(mk_task(1, tenant="a"), 0.0, 0)
+    assert tb.admit(mk_task(2, tenant="b"), 0.0, 0)  # b has its own bucket
+    shared = TokenBucket(rate=1.0, burst=1.0, per_tenant=False)
+    shared.reset()
+    assert shared.admit(mk_task(0, tenant="a"), 0.0, 0)
+    assert not shared.admit(mk_task(1, tenant="b"), 0.0, 0)
+
+
+def test_queue_shed_bounds_depth():
+    qs = QueueShed(max_depth=3)
+    assert qs.admit(mk_task(0), 0.0, 2)
+    assert not qs.admit(mk_task(1), 0.0, 3)
+
+
+def test_priority_shed_protects_high_priority():
+    ps = PriorityShed(soft_depth=2, hard_depth=5)
+    assert ps.admit(mk_task(0, priority=1), 0.0, 1)  # below soft: everyone
+    assert not ps.admit(mk_task(1, priority=1), 0.0, 3)  # congested: lo shed
+    assert ps.admit(mk_task(2, priority=9), 0.0, 3)  # ... hi admitted
+    assert not ps.admit(mk_task(3, priority=9), 0.0, 5)  # hard limit: all shed
+
+
+def test_make_admission_factory():
+    for name in ADMISSION_NAMES:
+        kwargs = {
+            "admit_all": {},
+            "token_bucket": {"rate": 1.0},
+            "queue_shed": {"max_depth": 4},
+            "priority_shed": {"soft_depth": 4},
+        }[name]
+        assert make_admission(name, **kwargs).name == name
+    with pytest.raises(KeyError, match="unknown admission"):
+        make_admission("bogus")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_devices", [1, 2])
+def test_admitted_plus_dropped_equals_offered_per_tenant(paper_predictor, n_devices):
+    tr = generate(overload_mix(rate=4000.0), np.random.default_rng(11), 40, pred=paper_predictor)
+    sim = ClusterSimulator(
+        PAPER_NPU,
+        make_policy("prema", True),
+        ClusterConfig(
+            mechanism="dynamic",
+            n_devices=n_devices,
+            admission=make_admission("queue_shed", max_depth=3),
+        ),
+    )
+    tasks = sim.run(tr)
+    assert len(tasks) == 40
+    n_dropped = sum(1 for t in tasks if t.state is TaskState.DROPPED)
+    assert n_dropped > 0, "overload workload was expected to shed"
+    per = metrics.per_tenant_summary(tasks)
+    for row in per.values():
+        assert row["n_admitted"] + row["n_rejected"] == row["n_offered"]
+        assert row["n_tasks"] == row["n_admitted"]  # all admitted completed
+    assert sum(r["n_offered"] for r in per.values()) == 40
+    # event accounting agrees with task-state accounting
+    log = sim.events.log
+    assert sum(1 for ev in log if ev.kind == "submit") == 40
+    assert sum(1 for ev in log if ev.kind == "drop") == n_dropped
+    dropped_tids = {ev.tid for ev in log if ev.kind == "drop"}
+    assert dropped_tids == {t.tid for t in tasks if t.state is TaskState.DROPPED}
+
+
+def test_dropped_tasks_never_execute_and_metrics_filter_them(paper_predictor):
+    tr = generate(overload_mix(rate=4000.0), np.random.default_rng(3), 24, pred=paper_predictor)
+    sim = NPUSimulator(
+        PAPER_NPU,
+        make_policy("fcfs", True),
+        SimConfig(admission=make_admission("queue_shed", max_depth=2)),
+    )
+    tasks = sim.run(tr)
+    dropped = [t for t in tasks if t.state is TaskState.DROPPED]
+    assert dropped
+    for t in dropped:
+        assert t.completion is None and t.executed == 0.0
+    dispatched = {ev.tid for ev in sim.events.log if ev.kind == "dispatch"}
+    assert not dispatched & {t.tid for t in dropped}
+    m = metrics.summarize(tasks)
+    assert m["n_offered"] == 24
+    assert m["n_rejected"] == len(dropped)
+    assert m["n_tasks"] == 24 - len(dropped)
+    assert m["shed_rate"] == pytest.approx(len(dropped) / 24)
+    assert np.isfinite(m["antt"])
+
+
+def test_priority_shed_integration_prefers_high_priority(paper_predictor):
+    tr = generate(overload_mix(rate=6000.0), np.random.default_rng(7), 48, pred=paper_predictor)
+    sim = ClusterSimulator(
+        PAPER_NPU,
+        make_policy("fcfs", True),
+        ClusterConfig(
+            mechanism="dynamic",
+            n_devices=1,
+            admission=make_admission("priority_shed", soft_depth=2, hard_depth=32),
+        ),
+    )
+    tasks = sim.run(tr)
+    per = metrics.per_tenant_summary(tasks)
+    assert per["lo"]["shed_rate"] > 0
+    assert per["hi"]["shed_rate"] < per["lo"]["shed_rate"]
+
+
+def test_no_admission_is_a_no_op(paper_predictor):
+    tr = generate(overload_mix(rate=4000.0), np.random.default_rng(11), 24, pred=paper_predictor)
+    ref = NPUSimulator(PAPER_NPU, make_policy("prema", True), SimConfig())
+    got = NPUSimulator(
+        PAPER_NPU,
+        make_policy("prema", True),
+        SimConfig(admission=make_admission("admit_all")),
+    )
+    fp_ref = sorted((t.tid, t.completion) for t in ref.run(tr))
+    fp_got = sorted((t.tid, t.completion) for t in got.run(tr))
+    assert fp_ref == fp_got
+    assert not any(ev.kind == "drop" for ev in got.events.log)
+
+
+def test_engine_admission_accounting():
+    jax = pytest.importorskip("jax")
+    from repro.models import get_model
+    from repro.serving import InferenceRequest, ServingEngine
+
+    m = get_model("olmo-1b", tiny=True)
+    eng = ServingEngine(
+        {"olmo-1b": (m, m.init_params(jax.random.PRNGKey(0)))},
+        policy="fcfs",
+        execute=False,
+        admission=make_admission("queue_shed", max_depth=2),
+    )
+    reqs = [
+        InferenceRequest(
+            rid=i,
+            arch="olmo-1b",
+            prompt=np.ones((1, 8), np.int32),
+            max_new_tokens=8,
+            arrival=0.0,  # all at once: depth cap must shed the tail
+            tenant="burst",
+        )
+        for i in range(8)
+    ]
+    results = eng.run(reqs)
+    n_dropped = sum(1 for t in eng.tasks if t.state is TaskState.DROPPED)
+    assert n_dropped > 0
+    assert len(results) + n_dropped == 8
+    per = eng.per_tenant()
+    row = per["burst"]
+    assert row["n_admitted"] + row["n_rejected"] == row["n_offered"] == 8
+    assert sum(1 for ev in eng.events.log if ev.kind == "drop") == n_dropped

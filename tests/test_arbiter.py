@@ -5,7 +5,7 @@ import pytest
 
 import _legacy_simulator as legacy
 from repro.core import trace
-from repro.core.arbiter import (Action, Arbiter, ArbiterConfig, Decision,
+from repro.core.arbiter import (Action, Arbiter, ArbiterConfig,
                                 should_preempt)
 from repro.core.scheduler import POLICY_NAMES, make_policy
 from repro.core.simulator import NPUSimulator, SimConfig

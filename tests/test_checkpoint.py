@@ -11,6 +11,9 @@ from repro import configs
 from repro.training import (DataConfig, TokenDataset, TrainConfig,
                             checkpoint, init_train_state, make_train_step)
 
+# Model/kernel execution (real JAX compute): excluded from `make test-fast`.
+pytestmark = pytest.mark.slow
+
 
 def _train(params, opt, step_fn, data, start, n):
     for i in range(start, start + n):

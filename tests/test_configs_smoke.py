@@ -10,6 +10,9 @@ from repro import configs
 from repro.models import get_model
 from repro.training import TrainConfig, init_train_state, make_train_step
 
+# Model/kernel execution (real JAX compute): excluded from `make test-fast`.
+pytestmark = pytest.mark.slow
+
 
 def _batch_for(cfg, rng, b=2, s=16):
     batch = {"labels": rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32)}

@@ -1,0 +1,246 @@
+"""Event-hook layer: one consistent, deterministic stream per run.
+
+Pins the tentpole contracts of core/events.py:
+
+* same seed => bit-identical event logs across ``NPUSimulator``,
+  ``ClusterSimulator(n_devices=1)``, and the replay of a captured
+  executed trace (save -> load -> replay);
+* closed-loop arrivals are *reactive*: submission times move when the
+  actual completions move;
+* executed traces diff cleanly against the offered trace.
+"""
+import io
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.events import EVENT_KINDS, Event, EventBus
+from repro.core.scheduler import make_policy
+from repro.core.simulator import NPUSimulator, SimConfig
+from repro.core.task import Task
+from repro.hw import PAPER_NPU
+from repro.workloads import ClosedLoop, ExecutedTrace, Poisson, generate, paper_mix
+
+
+@pytest.fixture(scope="module")
+def trace(paper_predictor):
+    return generate(
+        paper_mix(arrivals=Poisson(rate=150.0)),
+        np.random.default_rng(42),
+        16,
+        pred=paper_predictor,
+    )
+
+
+def run_sim(trace, policy="prema"):
+    sim = NPUSimulator(PAPER_NPU, make_policy(policy, True), SimConfig())
+    sim.run(trace)
+    return sim
+
+
+def run_cluster(trace, policy="prema", n_devices=1):
+    sim = ClusterSimulator(
+        PAPER_NPU,
+        make_policy(policy, True),
+        ClusterConfig(mechanism="dynamic", n_devices=n_devices),
+    )
+    sim.run(trace)
+    return sim
+
+
+def mk_task(tid, total, priority=3, arrival=0.0, scale=1):
+    n = 8
+    return Task(
+        tid=tid,
+        model=f"m{tid}",
+        priority=priority,
+        arrival=arrival,
+        batch=1,
+        node_times=np.full(n, scale * total / n),
+        node_out_bytes=np.full(n, 1 << 18, dtype=np.int64),
+        predicted_total=scale * total,
+    )
+
+
+# ---------------------------------------------------------------------------
+# identity across execution layers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["fcfs", "prema"])
+def test_event_log_identical_sim_vs_cluster_n1(trace, policy):
+    log_sim = list(run_sim(trace, policy).events.log)
+    log_cluster = list(run_cluster(trace, policy).events.log)
+    assert log_sim, "no events emitted"
+    assert log_sim == log_cluster
+
+
+def test_event_log_identical_after_capture_save_load_replay(trace):
+    sim = run_sim(trace)
+    ref = list(sim.events.log)
+
+    captured = ExecutedTrace.capture(sim, meta={"policy": "prema"})
+    buf = io.StringIO()
+    captured.save(buf)
+    buf.seek(0)
+    reloaded = ExecutedTrace.load(buf)
+    assert reloaded.meta == {"policy": "prema"}
+
+    replay_bus = reloaded.replay()
+    assert replay_bus.log == ref
+
+
+def test_event_log_deterministic_and_cleared_between_runs(trace):
+    sim = NPUSimulator(PAPER_NPU, make_policy("prema", True), SimConfig())
+    sim.run(trace)
+    first = list(sim.events.log)
+    sim.run(trace)
+    assert sim.events.log == first  # same seed, fresh log (not appended)
+
+
+def test_every_lifecycle_event_present_and_ordered(trace):
+    log = run_sim(trace).events.log
+    kinds = {ev.kind for ev in log}
+    assert kinds <= set(EVENT_KINDS)
+    n = len(trace)
+    assert sum(1 for ev in log if ev.kind == "submit") == n
+    assert sum(1 for ev in log if ev.kind == "complete") == n
+    assert all(ev.t >= 0 for ev in log)
+    times = [ev.t for ev in log]
+    assert times == sorted(times)  # virtual clock never rewinds
+    per = ExecutedTrace.capture(run_sim(trace)).per_task()
+    for row in per.values():
+        assert row["submit"] <= row["dispatch"] <= row["complete"]
+
+
+def test_engine_emits_same_event_stream_shape(trace):
+    jax = pytest.importorskip("jax")
+    from repro.models import get_model
+    from repro.serving import InferenceRequest, ServingEngine
+
+    m = get_model("olmo-1b", tiny=True)
+    eng = ServingEngine(
+        {"olmo-1b": (m, m.init_params(jax.random.PRNGKey(0)))},
+        policy="prema",
+        execute=False,
+    )
+    reqs = [
+        InferenceRequest(
+            rid=i,
+            arch="olmo-1b",
+            prompt=np.ones((1, 6), np.int32),
+            max_new_tokens=4,
+            arrival=0.001 * i,
+        )
+        for i in range(6)
+    ]
+    eng.run(reqs)
+    log = eng.events.log
+    assert sum(1 for ev in log if ev.kind == "submit") == 6
+    assert sum(1 for ev in log if ev.kind == "complete") == 6
+    assert {ev.kind for ev in log} <= set(EVENT_KINDS)
+
+
+# ---------------------------------------------------------------------------
+# reactive closed loop
+# ---------------------------------------------------------------------------
+
+
+def test_closed_loop_reacts_to_actual_completions():
+    """Same clients, same seed: slower service must delay later arrivals —
+    impossible for a pre-sampled trace, definitional for a reactive one."""
+    proc = ClosedLoop(n_clients=2, think_time=1e-3)
+
+    def submits(scale):
+        items = [mk_task(i, 4e-3, scale=scale) for i in range(12)]
+        sim = NPUSimulator(PAPER_NPU, make_policy("fcfs", False), SimConfig())
+        proc.drive(sim, items, seed=5)
+        return [ev.t for ev in sim.events.log if ev.kind == "submit"]
+
+    fast, slow = submits(1), submits(4)
+    assert len(fast) == len(slow) == 12
+    # first submission per client is pure think time: unaffected
+    assert fast[0] == slow[0]
+    # once completions lag, every later submission lags with them
+    assert slow[-1] > fast[-1] * 2
+    assert sum(s > f for f, s in zip(fast, slow)) >= 8
+
+
+def test_closed_loop_same_seed_bit_identical_across_layers(trace):
+    proc = ClosedLoop(n_clients=3, think_time=0.01)
+
+    def log_of(layer):
+        proc.drive(layer, trace.tasks(), seed=9)
+        return list(layer.events.log)
+
+    sim_log = log_of(NPUSimulator(PAPER_NPU, make_policy("prema", True), SimConfig()))
+    cl_log = log_of(
+        ClusterSimulator(
+            PAPER_NPU,
+            make_policy("prema", True),
+            ClusterConfig(mechanism="dynamic", n_devices=1),
+        )
+    )
+    assert sim_log == cl_log
+    again = log_of(NPUSimulator(PAPER_NPU, make_policy("prema", True), SimConfig()))
+    assert again == sim_log
+
+
+def test_hybrid_open_closed_mix(trace):
+    proc = ClosedLoop(n_clients=2, think_time=0.01, open_frac=0.5, open_rate=200.0)
+    sim = NPUSimulator(PAPER_NPU, make_policy("prema", True), SimConfig())
+    tasks = proc.drive(sim, trace.tasks(), seed=3)
+    assert len(tasks) == len(trace)
+    assert all(t.completion is not None for t in tasks)
+    assert sum(1 for ev in sim.events.log if ev.kind == "submit") == len(trace)
+
+
+def test_closed_loop_validates_hybrid_config():
+    with pytest.raises(ValueError, match="open_rate"):
+        ClosedLoop(n_clients=2, think_time=0.01, open_frac=0.5)
+    with pytest.raises(ValueError, match="open_frac"):
+        ClosedLoop(n_clients=2, think_time=0.01, open_frac=1.5, open_rate=1.0)
+
+
+def test_submit_outside_run_raises():
+    sim = NPUSimulator(PAPER_NPU, make_policy("prema", True), SimConfig())
+    with pytest.raises(RuntimeError, match="during run"):
+        sim.submit(mk_task(0, 1e-3), at=0.0)
+
+
+# ---------------------------------------------------------------------------
+# executed-trace diff and plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_executed_trace_diff_against_offered(trace):
+    sim = run_sim(trace)
+    diff = ExecutedTrace.capture(sim).diff(trace)
+    assert diff["n_offered"] == diff["n_submitted"] == len(trace)
+    assert diff["n_completed"] == len(trace)
+    assert diff["n_dropped"] == 0
+    assert diff["never_ran"] == [] and diff["not_offered"] == []
+    assert diff["mean_queue_delay"] >= 0.0
+    assert diff["max_arrival_skew"] == 0.0  # offered arrivals were honored
+
+
+def test_executed_trace_load_rejects_offered_kind(tmp_path, trace):
+    path = tmp_path / "offered.jsonl"
+    trace.save(str(path))
+    with pytest.raises(ValueError, match="not an executed trace"):
+        ExecutedTrace.load(str(path))
+
+
+def test_event_bus_subscribe_unsubscribe():
+    bus = EventBus()
+    seen = []
+    fn = bus.on_complete(lambda ev: seen.append(ev.tid))
+    with pytest.raises(KeyError):
+        bus.subscribe("bogus", fn)
+    bus.emit(Event(t=0.0, kind="complete", tid=7))
+    bus.emit(Event(t=0.0, kind="submit", tid=8))  # other kinds ignored
+    bus.unsubscribe("complete", fn)
+    bus.emit(Event(t=1.0, kind="complete", tid=9))
+    assert seen == [7]
+    assert [ev.tid for ev in bus.log] == [7, 8, 9]

@@ -10,6 +10,9 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels.decode_attention import decode_attention, decode_attention_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention
 
+# Model/kernel execution (real JAX compute): excluded from `make test-fast`.
+pytestmark = pytest.mark.slow
+
 CASES = [  # b, hq, hkv, s, t, d, causal
     (2, 4, 2, 128, 128, 64, True),
     (1, 8, 8, 256, 256, 32, True),

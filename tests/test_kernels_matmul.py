@@ -12,6 +12,9 @@ from repro.kernels.preemptible_matmul import (advance, finish, matmul,
                                               matmul_partial_ref, matmul_ref,
                                               start)
 
+# Model/kernel execution (real JAX compute): excluded from `make test-fast`.
+pytestmark = pytest.mark.slow
+
 SHAPES = [(128, 128, 128), (256, 384, 512), (100, 200, 300), (64, 1000, 72),
           (1, 129, 1), (257, 64, 130)]
 

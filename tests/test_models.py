@@ -7,9 +7,11 @@ import pytest
 
 from repro import configs
 from repro.models import get_model
-from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models.layers import chunked_unembed_cross_entropy, cross_entropy
+
+# Model/kernel execution (real JAX compute): excluded from `make test-fast`.
+pytestmark = pytest.mark.slow
 
 DECODE_ARCHS = [a for a in configs.ARCH_NAMES
                 if not configs.get_config(a).encoder_only]

@@ -5,9 +5,8 @@ import pytest
 from repro.configs import paper_workloads as pw
 from repro.core import arch_ops
 from repro.core.ops import GemmOp
-from repro.core.predictor import (LengthRegressor, Predictor, gemm_time,
-                                  network_time)
-from repro.hw import PAPER_NPU, TPU_V5E
+from repro.core.predictor import LengthRegressor, gemm_time
+from repro.hw import PAPER_NPU
 from repro import configs
 
 

@@ -1,6 +1,5 @@
 """Serving engine: bit-exact preemption, scheduling behaviour under
 contention, KV-manager offload accounting."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -9,6 +8,9 @@ from repro.core.scheduler import FCFS
 from repro.models import get_model
 from repro.serving import (InferenceRequest, KVCacheManager,
                            PreemptibleExecutor, ServingEngine)
+
+# Model/kernel execution (real JAX compute): excluded from `make test-fast`.
+pytestmark = pytest.mark.slow
 
 
 @pytest.fixture(scope="module")

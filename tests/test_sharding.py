@@ -12,6 +12,9 @@ from repro.distributed.context import current, hint, use_rules
 from repro.launch.mesh import make_mesh
 from repro.models import transformer
 
+# Model/kernel execution (real JAX compute): excluded from `make test-fast`.
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def mesh():
@@ -48,8 +51,6 @@ def test_divisibility_fallback():
 def test_logical_rules_head_vs_seq_sharding(mesh):
     """deepseek (56 heads) must fall back to sequence-parallel attention;
     qwen3 (32 heads) shards heads — on a 16-way model axis."""
-    fake16 = type("M", (), {})()  # lightweight mesh stand-in
-
     class FakeMesh:
         axis_names = ("data", "model")
         devices = np.empty((16, 16))

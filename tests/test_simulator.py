@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 
 from repro.core import metrics, trace
-from repro.core.predictor import Predictor
 from repro.core.scheduler import make_policy
 from repro.core.simulator import NPUSimulator, SimConfig
 from repro.core.task import Task, TaskState
@@ -86,7 +85,6 @@ def test_drain_mechanism_never_preempts():
 
 
 def test_prema_beats_fcfs_on_random_workloads(paper_predictor):
-    rng = np.random.default_rng(7)
     antt_f, antt_p = [], []
     for seed in range(3):
         r = np.random.default_rng(seed)

@@ -12,7 +12,6 @@ import numpy as np
 import pytest
 
 from repro.core import metrics, trace
-from repro.core.predictor import Predictor
 from repro.core.scheduler import make_policy
 from repro.core.simulator import NPUSimulator, SimConfig
 from repro.hw import PAPER_NPU

@@ -13,6 +13,9 @@ from repro.training.compression import (compress_with_feedback,
                                         quantize_int8)
 from repro.training.optimizer import lr_at
 
+# Model/kernel execution (real JAX compute): excluded from `make test-fast`.
+pytestmark = pytest.mark.slow
+
 
 def _setup(arch="olmo-1b", ga=1, compress=False, key=None):
     cfg = configs.get_tiny_config(arch)

@@ -5,8 +5,6 @@ The pinned fingerprints in ``GOLDEN`` were produced by the pre-refactor
 at seed 1234 — the ``uniform_window`` compatibility contract is that the
 refactored generator reproduces them bit-for-bit forever.
 """
-import io
-
 import numpy as np
 import pytest
 
