@@ -1,26 +1,37 @@
 # Tier-1 verification and benchmark smoke for the PREMA reproduction.
 #
-#   make test         - full test suite (tier-1 gate)
-#   make test-fast    - everything not marked slow (no model/kernel JAX
-#                       execution); new test files are picked up
-#                       automatically unless they opt into @slow
-#   make lint         - ruff check + format check (see pyproject.toml)
-#   make bench-smoke  - CI-sized benchmarks -> $(BENCH_OUT)/*.json,
-#                       validated by benchmarks/check_smoke.py
-#   make bench        - every figure-reproduction benchmark + sweeps
+#   make test             - full test suite (tier-1 gate)
+#   make test-fast        - everything not marked slow (no model/kernel JAX
+#                           execution); new test files are picked up
+#                           automatically unless they opt into @slow
+#   make lint             - ruff check + format check (see pyproject.toml)
+#   make fmt              - ruff-format the FORMAT_PATHS file set in place
+#   make bench-smoke      - CI-sized benchmarks -> $(BENCH_OUT)/*.json,
+#                           validated by benchmarks/check_smoke.py
+#   make bench-regression - bench-smoke + compare against the committed
+#                           baselines (fails on >10% SLA/latency drift)
+#   make bench-baseline   - refresh benchmarks/baselines/*.json (commit the
+#                           result when a metric shift is intentional)
+#   make bench            - every figure-reproduction benchmark + sweeps
+#   make bench-full       - the full (non-smoke) sweep suite with JSON out
+#                           (the nightly CI job)
 
 PYTHON ?= python
 BENCH_OUT ?= bench-out
+BASELINE_DIR := benchmarks/baselines
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 # Files held to ruff-format styling (grown file-by-file; the frozen
 # legacy simulator and the pre-existing tree are check-only via `ruff
 # check`, which runs repo-wide).
-FORMAT_PATHS = src/repro/core/events.py src/repro/workloads/admission.py \
-    benchmarks/overload_sweep.py benchmarks/check_smoke.py \
-    tests/test_events.py tests/test_admission.py
+FORMAT_PATHS = src/repro/core/events.py src/repro/core/autoscaler.py \
+    src/repro/workloads/admission.py \
+    benchmarks/overload_sweep.py benchmarks/autoscale_sweep.py \
+    benchmarks/check_smoke.py \
+    tests/test_events.py tests/test_admission.py tests/test_autoscaler.py
 
-.PHONY: test test-fast lint bench-smoke bench
+.PHONY: test test-fast lint fmt bench-smoke bench-regression \
+    bench-baseline bench bench-full
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -32,17 +43,48 @@ lint:
 	ruff check .
 	ruff format --check $(FORMAT_PATHS)
 
-bench-smoke:
-	mkdir -p $(BENCH_OUT)
+fmt:
+	ruff format $(FORMAT_PATHS)
+
+# The four --out sweeps at smoke size; $(1) is the output directory.
+define run_smoke_sweeps
+	mkdir -p $(1)
 	$(PYTHON) benchmarks/cluster_scaling.py --smoke \
-	    --out $(BENCH_OUT)/cluster_scaling.json
+	    --out $(1)/cluster_scaling.json
 	$(PYTHON) benchmarks/load_sweep.py --smoke \
-	    --out $(BENCH_OUT)/load_sweep.json
+	    --out $(1)/load_sweep.json
 	$(PYTHON) benchmarks/overload_sweep.py --smoke \
-	    --out $(BENCH_OUT)/overload_sweep.json
+	    --out $(1)/overload_sweep.json
+	$(PYTHON) benchmarks/autoscale_sweep.py --smoke \
+	    --out $(1)/autoscale_sweep.json
+endef
+
+bench-smoke:
+	$(call run_smoke_sweeps,$(BENCH_OUT))
 	$(PYTHON) benchmarks/check_smoke.py $(BENCH_OUT)/cluster_scaling.json \
-	    $(BENCH_OUT)/load_sweep.json $(BENCH_OUT)/overload_sweep.json
+	    $(BENCH_OUT)/load_sweep.json $(BENCH_OUT)/overload_sweep.json \
+	    $(BENCH_OUT)/autoscale_sweep.json
+
+bench-regression:
+	$(call run_smoke_sweeps,$(BENCH_OUT))
+	$(PYTHON) benchmarks/check_smoke.py $(BENCH_OUT)/cluster_scaling.json \
+	    $(BENCH_OUT)/load_sweep.json $(BENCH_OUT)/overload_sweep.json \
+	    $(BENCH_OUT)/autoscale_sweep.json --baseline $(BASELINE_DIR)
+
+bench-baseline:
+	$(call run_smoke_sweeps,$(BASELINE_DIR))
+	$(PYTHON) benchmarks/check_smoke.py $(BASELINE_DIR)/cluster_scaling.json \
+	    $(BASELINE_DIR)/load_sweep.json $(BASELINE_DIR)/overload_sweep.json \
+	    $(BASELINE_DIR)/autoscale_sweep.json
 
 bench:
 	$(PYTHON) benchmarks/run.py
 	$(PYTHON) benchmarks/cluster_scaling.py
+
+bench-full:
+	mkdir -p $(BENCH_OUT)
+	$(PYTHON) benchmarks/run.py
+	$(PYTHON) benchmarks/cluster_scaling.py --out $(BENCH_OUT)/cluster_scaling.json
+	$(PYTHON) benchmarks/load_sweep.py --out $(BENCH_OUT)/load_sweep.json
+	$(PYTHON) benchmarks/overload_sweep.py --out $(BENCH_OUT)/overload_sweep.json
+	$(PYTHON) benchmarks/autoscale_sweep.py --out $(BENCH_OUT)/autoscale_sweep.json

@@ -1,0 +1,262 @@
+"""Autoscale sweep: elastic capacity vs static fleets under time-varying load.
+
+PREMA's economic case assumes the fleet rides demand: cloud DNN traffic
+is diurnal and bursty, so a fixed-size cluster is either over-provisioned
+(paying for idle accelerators at night) or under-provisioned (blowing the
+interactive SLA at peak).  This sweep drives the cluster simulator with
+the traffic subsystem's non-stationary processes and compares three
+capacity configurations at identical offered load:
+
+* ``static1``     one device, always on (the paper's setting);
+* ``staticmax``   ``MAX_DEVICES`` devices, always on (peak-provisioned);
+* ``autoscale``   start at one device; ``core/autoscaler.py`` subscribes
+  to the event bus and scales between 1 and ``MAX_DEVICES`` off the
+  queue-depth signal (devices pay a provision delay on the way up and
+  drain-migrate their residents on the way down);
+* ``hetero``      ``MAX_DEVICES`` devices but half of them at half clock,
+  with speed-aware placement (heterogeneous baseline, not gated).
+
+Traffic is the three-tenant SLA mix of the overload sweep (interactive /
+standard / batch) under ``diurnal`` (sinusoidal rate, trace starts at the
+trough so scale-up is observable) and ``mmpp`` (bursty on-off) arrivals.
+
+Per point: interactive-tenant SLA satisfaction, overall SLA, p99 NTT,
+consumed device-seconds (``capacity_seconds`` — per-device alive time,
+the cost denominator), scale-event counts, and mean utilization.  The
+headline gate (checked by ``benchmarks/check_smoke.py``): on diurnal
+traffic, autoscaled PREMA holds interactive SLA >= 90 % while consuming
+<= 60 % of the static-max configuration's device-seconds.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/autoscale_sweep.py            # full
+    PYTHONPATH=src python benchmarks/autoscale_sweep.py --smoke    # CI
+    PYTHONPATH=src python benchmarks/autoscale_sweep.py --out a.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# allow `python benchmarks/autoscale_sweep.py` from anywhere (same
+# pattern as cluster_scaling): make `benchmarks` and `repro` importable
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks import common
+from benchmarks.overload_sweep import HI_TENANT, mean_isolated_time, tenant_mix
+from repro.core import metrics
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.scheduler import make_policy
+from repro.hw import PAPER_NPU
+from repro.workloads import MMPP, Diurnal, generate
+
+TRAFFICS = ("diurnal", "mmpp")
+CONFIGS = ("static1", "staticmax", "autoscale", "hetero")
+POLICIES = ("fcfs", "prema")
+MAX_DEVICES = 4
+AVG_LOAD = 1.8          # mean offered load, in single-device capacities
+TASKS_PER_RUN = 192
+# The SLA floor / device-seconds ceiling the headline is gated on live in
+# benchmarks/check_smoke.py (SLA_HI_MIN, AUTOSCALE_CAPACITY_MAX).
+
+# Half-clock variant of the paper NPU for the heterogeneous baseline.
+SLOW_NPU = dataclasses.replace(
+    PAPER_NPU, name="paper-npu-half", freq_hz=PAPER_NPU.freq_hz / 2
+)
+
+
+def make_traffic(kind: str, rate: float, period: float):
+    if kind == "diurnal":
+        # amplitude 0.85: peak ~ 1.85x mean, trough ~ 0.15x; phase 0.75
+        # starts the trace at the trough, so the autoscaler must both
+        # grow into the morning ramp and shrink back after the peak
+        return Diurnal(base_rate=rate, amplitude=0.85, period=period, phase=0.75)
+    if kind == "mmpp":
+        return MMPP.bursty(rate, duty=0.3)
+    raise KeyError(f"unknown traffic kind {kind!r}")
+
+
+def make_sim(config: str, policy: str) -> Tuple[ClusterSimulator, Optional[Autoscaler]]:
+    iso = mean_isolated_time()
+    base = dict(mechanism="dynamic")
+    if config == "static1":
+        cfg = ClusterConfig(n_devices=1, **base)
+    elif config == "staticmax":
+        cfg = ClusterConfig(n_devices=MAX_DEVICES, **base)
+    elif config == "hetero":
+        half = MAX_DEVICES // 2
+        cfg = ClusterConfig(
+            device_hw=[PAPER_NPU] * (MAX_DEVICES - half) + [SLOW_NPU] * half,
+            placement="speed_aware",
+            **base,
+        )
+    elif config == "autoscale":
+        cfg = ClusterConfig(n_devices=1, provision_latency=0.5 * iso, **base)
+    else:
+        raise KeyError(f"unknown config {config!r}")
+    sim = ClusterSimulator(PAPER_NPU, make_policy(policy, preemptive=True), cfg)
+    scaler = None
+    if config == "autoscale":
+        scaler = Autoscaler(
+            AutoscalerConfig(
+                min_devices=1,
+                max_devices=MAX_DEVICES,
+                target_queue_per_device=2.0,
+                low_watermark=0.35,
+                window=3.0 * iso,
+                cooldown=1.5 * iso,
+            )
+        ).attach(sim)
+    return sim, scaler
+
+
+def run_point(
+    traffic: str, config: str, policy: str, n_runs: int, n_tasks: int, seed0: int = 9100
+) -> Dict[str, float]:
+    iso = mean_isolated_time()
+    rate = AVG_LOAD / iso
+    period = 64.0 * iso
+    runs = []
+    for r in range(n_runs):
+        rng = common.rng(seed0 + 211 * r)
+        tr = generate(
+            tenant_mix(make_traffic(traffic, rate, period)),
+            rng,
+            n_tasks,
+            pred=common.predictor(),
+        )
+        sim, scaler = make_sim(config, policy)
+        tasks = sim.run(tr)
+        m = sim.summary()
+        hi = metrics.per_tenant_summary(tasks).get(HI_TENANT, {})
+        runs.append(
+            {
+                "sla_satisfaction": m["sla_satisfaction"],
+                "sla_hi": float(hi.get("sla_satisfaction", float("nan"))),
+                "p99_ntt": m["p99_ntt"],
+                "device_seconds": m["capacity_seconds"],
+                "makespan": m["makespan"],
+                "util_mean": m["util_mean"],
+                "n_scale_ups": m["n_scale_ups"],
+                "n_scale_downs": m["n_scale_downs"],
+                "migrations": m["migrations"],
+                "goodput": m["goodput"],
+            }
+        )
+        if scaler is not None:
+            scaler.detach()
+    return metrics.aggregate(runs)
+
+
+def sweep(
+    traffics: Sequence[str],
+    configs: Sequence[str],
+    policies: Sequence[str],
+    n_runs: int,
+    n_tasks: int,
+) -> Tuple[List[Tuple[str, float, str]], List[Dict]]:
+    rows: List[Tuple[str, float, str]] = []
+    points: List[Dict] = []
+    cells: Dict[Tuple[str, str, str], Dict[str, float]] = {}
+    for traffic in traffics:
+        for config in configs:
+            for policy in policies:
+                t0 = time.perf_counter()
+                m = run_point(traffic, config, policy, n_runs, n_tasks)
+                us = (time.perf_counter() - t0) / n_runs * 1e6
+                cells[(traffic, config, policy)] = m
+                tag = f"autoscale.{traffic}.{config}.{policy}"
+                rows.append(
+                    (
+                        tag,
+                        us,
+                        f"sla_hi={m['sla_hi']:.3f};"
+                        f"sla={m['sla_satisfaction']:.3f};"
+                        f"p99_ntt={m['p99_ntt']:.2f};"
+                        f"devsec={m['device_seconds']:.4f};"
+                        f"ups={m['n_scale_ups']:.1f};"
+                        f"downs={m['n_scale_downs']:.1f}",
+                    )
+                )
+                points.append(
+                    dict(traffic=traffic, config=config, policy=policy, **m)
+                )
+    # headline: autoscaled capacity cost relative to peak provisioning
+    for traffic in traffics:
+        for policy in policies:
+            auto = cells.get((traffic, "autoscale", policy))
+            peak = cells.get((traffic, "staticmax", policy))
+            if auto is None or peak is None:
+                continue
+            ratio = auto["device_seconds"] / max(peak["device_seconds"], 1e-12)
+            rows.append(
+                (
+                    f"autoscale.{traffic}.{policy}.capacity_vs_staticmax",
+                    0.0,
+                    f"ratio={ratio:.3f};sla_hi={auto['sla_hi']:.3f}",
+                )
+            )
+            points.append(
+                dict(
+                    traffic=traffic,
+                    config="autoscale_vs_staticmax",
+                    policy=policy,
+                    capacity_ratio=ratio,
+                    sla_hi=auto["sla_hi"],
+                )
+            )
+    return rows, points
+
+
+def run(
+    smoke: bool = False, collect: Optional[Dict] = None
+) -> List[Tuple[str, float, str]]:
+    """Entry point for benchmarks/run.py (full) and --smoke (CI).  When
+    ``collect`` is given, the structured per-point results land in
+    ``collect['points']`` (the ``--out`` JSON extra payload)."""
+    if smoke:
+        rows, points = sweep(
+            TRAFFICS, CONFIGS, POLICIES, n_runs=1, n_tasks=TASKS_PER_RUN
+        )
+    else:
+        rows, points = sweep(
+            TRAFFICS, CONFIGS, POLICIES, n_runs=3, n_tasks=2 * TASKS_PER_RUN
+        )
+    if collect is not None:
+        collect["points"] = points
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "--smoke", action="store_true", help="tiny sweep for CI (1 run per point)"
+    )
+    ap.add_argument(
+        "--seed", type=int, default=0, help="re-base every benchmark RNG stream"
+    )
+    ap.add_argument(
+        "--out",
+        default=None,
+        metavar="PATH",
+        help="also write machine-readable JSON results",
+    )
+    args = ap.parse_args()
+    common.set_seed(args.seed)
+    print("name,us_per_call,derived")
+    extra: Dict = {}
+    rows = run(smoke=args.smoke, collect=extra)
+    common.emit(rows)
+    if args.out:
+        common.write_json(args.out, "autoscale_sweep", rows, extra=extra)
+
+
+if __name__ == "__main__":
+    main()

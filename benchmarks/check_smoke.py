@@ -1,4 +1,4 @@
-"""CI sanity gate over the bench-smoke JSON artifacts.
+"""CI sanity + regression gate over the bench JSON artifacts.
 
 ``make bench-smoke`` writes one JSON file per benchmark (the ``--out``
 contract of ``benchmarks/common.write_json``); this script validates that
@@ -13,17 +13,29 @@ claim*:
   congestion — offered throughput self-limits past saturation while the
   open-loop curve keeps climbing and its tail blows up — and with
   admission control enabled PREMA keeps the interactive tenant's SLA
-  satisfaction >= 90 % at every swept load.
+  satisfaction >= 90 % at every swept load;
+* ``autoscale_sweep``: on diurnal traffic, autoscaled PREMA holds the
+  interactive tenant's SLA >= 90 % while consuming <= 60 % of the
+  static-max fleet's device-seconds.
+
+With ``--baseline DIR`` the script additionally compares every metric it
+can parse out of the rows against the committed baseline JSON of the
+same benchmark (``make bench-baseline`` refreshes them) and fails on a
+>10 % regression in any SLA/latency/throughput-direction metric — the
+``bench-regression`` CI job's contract.  Wall-clock (``us_per_call``)
+and direction-neutral counters are never compared.
 
 Exit code 0 = all gates pass.  Usage::
 
-    python benchmarks/check_smoke.py out/cluster_scaling.json \
-        out/load_sweep.json out/overload_sweep.json
+    python benchmarks/check_smoke.py out/*.json
+    python benchmarks/check_smoke.py out/*.json --baseline benchmarks/baselines
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
+import os
 import sys
 from typing import Dict, List
 
@@ -31,6 +43,8 @@ GROWTH_MIN_OPEN = 1.2       # open-loop offered rate must scale with load
 BACKLOG_RATIO_MIN = 1.5     # open peak backlog vs closed, past saturation
 TAIL_BLOWUP_MIN = 2.0       # open-loop FCFS p99 NTT growth past the knee
 SLA_HI_MIN = 0.9
+AUTOSCALE_CAPACITY_MAX = 0.6   # autoscaled device-seconds vs static-max
+REGRESSION_TOL = 0.10          # --baseline: relative drift allowed
 
 
 class GateError(AssertionError):
@@ -130,16 +144,134 @@ def check_overload_sweep(payload: Dict) -> None:
                f"{p['sla_hi']:.3f} < {SLA_HI_MIN} at load {p['load']}")
 
 
+def check_autoscale_sweep(payload: Dict) -> None:
+    points = payload.get("extra", {}).get("points", [])
+    _check(bool(points), "autoscale_sweep: structured points missing")
+    head = _points(payload, traffic="diurnal", policy="prema",
+                   config="autoscale_vs_staticmax")
+    _check(bool(head), "autoscale_sweep: diurnal prema headline missing")
+    for p in head:
+        _check(p["sla_hi"] >= SLA_HI_MIN,
+               f"autoscale: diurnal prema autoscaled interactive SLA "
+               f"{p['sla_hi']:.3f} < {SLA_HI_MIN}")
+        _check(p["capacity_ratio"] <= AUTOSCALE_CAPACITY_MAX,
+               f"autoscale: diurnal prema consumed "
+               f"{p['capacity_ratio']:.3f} of static-max device-seconds "
+               f"(ceiling {AUTOSCALE_CAPACITY_MAX})")
+    static1 = _points(payload, traffic="diurnal", policy="prema",
+                      config="static1")
+    auto = _points(payload, traffic="diurnal", policy="prema",
+                   config="autoscale")
+    if static1 and auto:
+        _check(auto[0]["sla_hi"] >= static1[0]["sla_hi"],
+               "autoscale: scaling up did not improve on the "
+               "single-device interactive SLA")
+
+
 CHECKS = {
     "cluster_scaling": check_cluster_scaling,
     "load_sweep": check_load_sweep,
     "overload_sweep": check_overload_sweep,
+    "autoscale_sweep": check_autoscale_sweep,
 }
+
+
+# ---------------------------------------------------------------------------
+# --baseline: metric extraction + directional regression comparison
+# ---------------------------------------------------------------------------
+# Tokens classifying a metric's direction.  Only the *final* key
+# component (the metric name itself) is tokenized on "_"/"@" and matched
+# exactly — never the row tag, whose segments ("overload", "load0.8")
+# would otherwise leak a direction onto neutral counters and workload
+# properties ("offered", "ups", "migrations", ...).  Lower-better wins
+# when both match ("sla_viol" carries both "sla" and "viol").
+LOWER_BETTER = frozenset(
+    ("viol", "p95", "p99", "antt", "tail95", "devsec", "seconds",
+     "shed", "backlog", "ckpt", "ratio"))
+HIGHER_BETTER = frozenset(
+    ("sla", "stp", "goodput", "tput", "achieved", "util", "throughput",
+     "fairness", "load", "knee"))
+
+
+def metric_direction(key: str) -> int:
+    """+1 higher-is-better, -1 lower-is-better, 0 not compared."""
+    name = key.rsplit(".", 1)[-1]
+    tokens = set(name.replace("@", "_").split("_"))
+    if tokens & LOWER_BETTER:
+        return -1
+    if tokens & HIGHER_BETTER:
+        return +1
+    return 0
+
+
+def parse_derived(derived: str) -> Dict[str, float]:
+    """A row's ``derived`` field as name→value pairs: either one bare
+    float, or ``k=v;k=v`` (a trailing ``@...`` qualifier is dropped, so
+    the knee rows' ``load=1.6@sla>=0.9`` parses as ``load=1.6``)."""
+    body = derived.split("@")[0]
+    try:
+        return {"": float(body)}
+    except ValueError:
+        pass
+    out: Dict[str, float] = {}
+    for part in body.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            continue
+    return out
+
+
+def extract_metrics(payload: Dict) -> Dict[str, float]:
+    """Flatten a benchmark payload into comparable ``name[.key]`` → value
+    pairs (wall-clock columns are deliberately not extracted)."""
+    out: Dict[str, float] = {}
+    for row in payload["rows"]:
+        for k, v in parse_derived(row["derived"]).items():
+            out[row["name"] + ("." + k if k else "")] = v
+    return out
+
+
+def compare_to_baseline(payload: Dict, base: Dict,
+                        tol: float = REGRESSION_TOL) -> List[str]:
+    """Directional comparison of every parseable metric; returns failure
+    messages for >tol regressions (improvements never fail)."""
+    cur_m, base_m = extract_metrics(payload), extract_metrics(base)
+    failures: List[str] = []
+    for key in sorted(base_m):
+        direction = metric_direction(key)
+        if direction == 0:
+            continue
+        bval = base_m[key]
+        if key not in cur_m:
+            failures.append(f"metric disappeared: {key}")
+            continue
+        cval = cur_m[key]
+        if math.isnan(bval) or math.isnan(cval):
+            continue
+        drift = (cval - bval) / max(abs(bval), 1e-9)
+        if direction * drift < -tol:
+            arrow = "dropped" if direction > 0 else "grew"
+            failures.append(
+                f"{key} {arrow} beyond {tol:.0%}: "
+                f"{bval:.4g} -> {cval:.4g} ({drift:+.1%})")
+    return failures
+
+
+def baseline_path(payload: Dict, baseline_dir: str) -> str:
+    return os.path.join(baseline_dir, payload.get("benchmark", "?") + ".json")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("paths", nargs="+", help="bench-smoke JSON files")
+    ap.add_argument("--baseline", default=None, metavar="DIR",
+                    help="directory of committed baseline JSONs; fail on "
+                         f">{REGRESSION_TOL:.0%} SLA/latency regression "
+                         "(refresh with `make bench-baseline`)")
     args = ap.parse_args()
     failures = []
     for path in args.paths:
@@ -150,7 +282,23 @@ def main() -> None:
             if check is None:
                 raise GateError(f"{path}: unknown benchmark {name!r}")
             check(payload)
-            print(f"ok   {path} ({name}, {len(payload['rows'])} rows)")
+            n_cmp = ""
+            if args.baseline:
+                bpath = baseline_path(payload, args.baseline)
+                try:
+                    base = load_payload(bpath)
+                except OSError:
+                    raise GateError(
+                        f"no committed baseline {bpath}; run "
+                        "`make bench-baseline` and commit the result"
+                    ) from None
+                regressions = compare_to_baseline(payload, base)
+                if regressions:
+                    raise GateError("regression vs baseline:\n  " +
+                                    "\n  ".join(regressions))
+                n_cmp = (f", {len(extract_metrics(base))} baseline "
+                         f"metrics within {REGRESSION_TOL:.0%}")
+            print(f"ok   {path} ({name}, {len(payload['rows'])} rows{n_cmp})")
         except (GateError, OSError, json.JSONDecodeError) as exc:
             failures.append(f"FAIL {path}: {exc}")
             print(failures[-1])

@@ -5,8 +5,10 @@ mechanisms), 11/12 (scheduling policies, static vs dynamic mechanism),
 13/14 (SLA + tail latency), 15 (CHECKPOINT vs KILL), prediction accuracy
 vs oracle, the §Roofline table derived from the dry-run artifacts, the
 multi-NPU cluster-scaling sweep, the offered-load sweep (traffic
-subsystem: latency–throughput curves + SLA knee), and the overload sweep
-(open vs closed loop x admission control x policy past saturation).
+subsystem: latency–throughput curves + SLA knee), the overload sweep
+(open vs closed loop x admission control x policy past saturation), and
+the autoscale sweep (elastic capacity vs static fleets under diurnal and
+bursty traffic).
 
 Usage::
 
@@ -28,10 +30,11 @@ sys.path.insert(0, _ROOT)
 
 
 def main() -> None:
-    from benchmarks import (cluster_scaling, common, fig5_fig6_mechanisms,
-                            fig11_fig12_policies, fig13_fig14_qos,
-                            fig15_kill_sensitivity, load_sweep,
-                            overload_sweep, pred_accuracy, roofline)
+    from benchmarks import (autoscale_sweep, cluster_scaling, common,
+                            fig5_fig6_mechanisms, fig11_fig12_policies,
+                            fig13_fig14_qos, fig15_kill_sensitivity,
+                            load_sweep, overload_sweep, pred_accuracy,
+                            roofline)
     modules = [
         ("fig5_fig6", fig5_fig6_mechanisms),
         ("fig11_fig12", fig11_fig12_policies),
@@ -42,6 +45,7 @@ def main() -> None:
         ("cluster_scaling", cluster_scaling),
         ("load_sweep", load_sweep),
         ("overload_sweep", overload_sweep),
+        ("autoscale_sweep", autoscale_sweep),
     ]
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("only", nargs="?", default=None,

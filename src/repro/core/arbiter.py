@@ -139,6 +139,16 @@ class Arbiter:
         return self.arbitrate(running, cand)
 
 
+def remaining_cost(task: Task, speed: float = 1.0) -> float:
+    """Device-relative predicted remaining *wall* time: the shared
+    ``Time_estimated - Time_executed`` estimate (reference-hardware
+    seconds) dilated by the device's relative speed.  Heterogeneous
+    clusters rank preemption victims and drain candidates by this, so a
+    slow device holding a long task is correctly seen as the costliest
+    slot; with ``speed == 1`` it is exactly ``predicted_remaining``."""
+    return task.predicted_remaining / max(speed, 1e-12)
+
+
 def should_preempt(policy: Policy, running: Task, cand: Task,
                    dynamic_mech: bool) -> bool:
     """Back-compat wrapper for the old free function (pre-arbiter API);

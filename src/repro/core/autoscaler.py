@@ -1,0 +1,237 @@
+"""Event-driven autoscaling: elastic capacity as an EventBus subscriber.
+
+The autoscaler closes the loop the ROADMAP asked for: it watches the
+shared execution event stream (``core/events.py``) — the same
+``submit``/``dispatch``/``preempt``/``complete``/``drop`` timeline every
+execution layer emits — reconstructs the ready-queue depth and a sliding
+SLA-attainment window from it, and drives ``add_device`` /
+``remove_device`` on the attached layer (``ClusterSimulator`` or
+``ServingEngine``) within configured bounds.
+
+Signals
+-------
+* **Queue depth** — submits and preemption re-queues push, dispatches and
+  drops pop; the time-weighted mean over ``window`` seconds, normalized
+  by the live device count, is compared against
+  ``target_queue_per_device`` (scale up) and ``low_watermark`` of it
+  (scale down).
+* **SLA attainment** (optional) — when ``sla_latency`` is set, the
+  fraction of window completions whose turnaround beat that budget; a
+  window below ``sla_target`` forces a scale-up even if the queue looks
+  shallow (latency pain without backlog: slow devices, long residents).
+
+Decisions respect ``cooldown`` sim-seconds between actions and the
+``[min_devices, max_devices]`` bounds; scale-down prefers an idle device
+(slowest first, then the youngest), so draining rarely has to migrate.
+Every action lands on the bus as ``device_up``/``device_drain``/
+``device_down``, making autoscaler runs replayable and bit-deterministic
+for a fixed seed (tests/test_autoscaler.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.core.events import DEVICE_EVENT_KINDS, Event
+from repro.hw import HardwareModel
+
+
+@dataclasses.dataclass
+class AutoscalerConfig:
+    """Scaling policy knobs (times are sim-seconds)."""
+
+    min_devices: int = 1
+    max_devices: int = 8
+    # Scale up when the window-averaged queue depth per live device
+    # exceeds this; scale down when it falls below low_watermark * target.
+    target_queue_per_device: float = 2.0
+    low_watermark: float = 0.25
+    window: float = 0.1
+    cooldown: float = 0.05
+    scale_step: int = 1
+    # Optional SLA-attainment trigger: turnaround budget (absolute
+    # seconds) and the minimum on-time fraction of window completions.
+    sla_latency: Optional[float] = None
+    sla_target: float = 0.9
+    # HardwareModel for scale-up devices (None -> the layer's reference).
+    device_hw: Optional[HardwareModel] = None
+
+    def __post_init__(self):
+        if self.min_devices < 1:
+            raise ValueError("min_devices must be >= 1")
+        if self.max_devices < self.min_devices:
+            raise ValueError("max_devices must be >= min_devices")
+        if not 0.0 <= self.low_watermark < 1.0:
+            raise ValueError("low_watermark must be in [0, 1)")
+
+
+class Autoscaler:
+    """Subscribe to a layer's event bus and drive its elastic capacity.
+
+    Usage::
+
+        scaler = Autoscaler(AutoscalerConfig(max_devices=4)).attach(sim)
+        sim.run(trace)
+        scaler.decisions          # [(t, "up"/"down", device), ...]
+
+    The subscriber persists across runs; call :meth:`reset` (or rely on
+    the automatic rewind detection — sim time restarting near zero) when
+    reusing one instance for several runs.
+    """
+
+    def __init__(self, cfg: Optional[AutoscalerConfig] = None):
+        self.cfg = cfg or AutoscalerConfig()
+        self.layer = None
+        self.decisions: List[Tuple[float, str, int]] = []
+        self._samples: Deque[Tuple[float, float]] = deque()
+        self._area = 0.0           # integral of depth dt over the samples
+        self._completions: Deque[Tuple[float, bool]] = deque()
+        self._submit_t: Dict[int, float] = {}
+        self._backlog = 0
+        self._last_t = 0.0
+        self._last_action = None   # None until the first action
+        self._in_decision = False
+
+    # -- wiring --------------------------------------------------------
+    def attach(self, layer) -> "Autoscaler":
+        """Subscribe to ``layer.events``; the layer must expose
+        ``add_device``/``remove_device`` and ``cluster`` (the shared
+        ``core.cluster.Cluster`` bookkeeping)."""
+        self.layer = layer
+        layer.events.subscribe("*", self._on_event)
+        return self
+
+    def detach(self) -> None:
+        if self.layer is not None:
+            self.layer.events.unsubscribe("*", self._on_event)
+            self.layer = None
+
+    def reset(self) -> None:
+        self.decisions = []
+        self._samples.clear()
+        self._area = 0.0
+        self._completions.clear()
+        self._submit_t.clear()
+        self._backlog = 0
+        self._last_t = 0.0
+        self._last_action = None
+
+    @property
+    def n_scale_events(self) -> int:
+        return len(self.decisions)
+
+    # -- signal maintenance --------------------------------------------
+    def _on_event(self, ev: Event) -> None:
+        if ev.kind in DEVICE_EVENT_KINDS:
+            return  # our own actions are not a load signal
+        if self._samples and ev.t < self._last_t:
+            # A fresh run restarts the sim clock near zero: detect it as a
+            # rewind past our whole observation window AND past the oldest
+            # sample we hold.  Anything smaller is per-device clock skew
+            # (the ServingEngine stamps events on per-device virtual
+            # clocks, which are not globally monotone): monotonize it so
+            # the windowed integral never sees negative time slices.
+            if (ev.t + self.cfg.window < self._last_t
+                    and ev.t < self._samples[0][0]):
+                self.reset()
+            else:
+                ev = dataclasses.replace(ev, t=self._last_t)
+        self._last_t = ev.t
+        if ev.kind == "submit":
+            self._backlog += 1
+            self._submit_t[ev.tid] = ev.t
+        elif ev.kind == "dispatch":
+            self._backlog -= 1
+        elif ev.kind == "preempt":
+            self._backlog += 1
+        elif ev.kind == "drop":
+            self._backlog -= 1
+            self._submit_t.pop(ev.tid, None)
+        elif ev.kind == "complete":
+            t0 = self._submit_t.pop(ev.tid, None)
+            if self.cfg.sla_latency is not None and t0 is not None:
+                ok = (ev.t - t0) <= self.cfg.sla_latency
+                self._completions.append((ev.t, ok))
+        if self._samples:
+            t_prev, d_prev = self._samples[-1]
+            self._area += d_prev * (ev.t - t_prev)
+        self._samples.append((ev.t, float(self._backlog)))
+        self._prune(ev.t)
+        if not self._in_decision:
+            self._in_decision = True
+            try:
+                self._decide(ev.t)
+            finally:
+                self._in_decision = False
+
+    def _prune(self, now: float) -> None:
+        horizon = now - self.cfg.window
+        while len(self._samples) > 1 and self._samples[1][0] <= horizon:
+            t0, d0 = self._samples.popleft()
+            self._area -= d0 * (self._samples[0][0] - t0)
+        while self._completions and self._completions[0][0] <= horizon:
+            self._completions.popleft()
+
+    def _avg_depth(self, now: float) -> float:
+        """Time-weighted mean queue depth over the sliding window, from
+        the incrementally-maintained integral (O(1) per event; _prune
+        keeps at most one sample older than the window as the carrier of
+        the depth at the window's left edge)."""
+        if not self._samples:
+            return 0.0
+        t_first, d_first = self._samples[0]
+        t_last, d_last = self._samples[-1]
+        start = max(t_first, now - self.cfg.window)
+        span = now - start
+        if span <= 0.0:
+            return d_last
+        area = self._area + d_last * (now - t_last)
+        if t_first < start:
+            # clip the first segment's pre-window part (it runs at
+            # d_first until the next sample, or until now if alone)
+            t_next = self._samples[1][0] if len(self._samples) > 1 else now
+            area -= d_first * (min(t_next, start) - t_first)
+        return area / span
+
+    def _sla_bad(self) -> bool:
+        if self.cfg.sla_latency is None or not self._completions:
+            return False
+        ok = sum(1 for _, met in self._completions if met)
+        return ok / len(self._completions) < self.cfg.sla_target
+
+    # -- decisions ------------------------------------------------------
+    def _decide(self, now: float) -> None:
+        cfg, cluster = self.cfg, self.layer.cluster
+        if self._last_action is not None and now - self._last_action < cfg.cooldown:
+            return
+        n_alive = cluster.n_alive
+        depth = self._avg_depth(now)
+        up_thr = cfg.target_queue_per_device * n_alive
+        if (depth > up_thr or self._sla_bad()) and n_alive < cfg.max_devices:
+            for _ in range(min(cfg.scale_step, cfg.max_devices - n_alive)):
+                dev = self.layer.add_device(cfg.device_hw)
+                self.decisions.append((now, "up", dev))
+            self._last_action = now
+        elif (
+            depth < cfg.low_watermark * up_thr
+            and not self._sla_bad()
+            and n_alive > cfg.min_devices
+        ):
+            dev = self._drain_candidate()
+            if dev is not None:
+                self.layer.remove_device(dev)
+                self.decisions.append((now, "down", dev))
+                self._last_action = now
+
+    def _drain_candidate(self) -> Optional[int]:
+        """Pick the device to retire: idle before busy, slow before fast,
+        youngest (highest index) on ties — deterministic by construction."""
+        live = [d for d in self.layer.cluster.devices if d.alive and not d.draining]
+        if len(live) <= self.cfg.min_devices:
+            return None
+        best = min(
+            live,
+            key=lambda d: (d.running is not None, d.speed, -d.dev),
+        )
+        return best.dev

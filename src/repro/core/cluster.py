@@ -6,30 +6,58 @@ arXiv:2404.08950).  This module scales the same scheduling core
 (``core/arbiter.py``) to an N-device cluster:
 
 * :class:`DeviceState` — per-device running slot, switch-overhead busy
-  window, and accumulated service time (utilization accounting);
+  window, accumulated service time (utilization accounting), its own
+  :class:`~repro.hw.HardwareModel`, and an alive window
+  (``alive_since``/``alive_until``) for elastic capacity;
 * :class:`Cluster` — the device set plus a pluggable *placement* policy
   that maps a selected task onto a concrete device;
 * :class:`ClusterSimulator` — the event-driven N-device generalization of
   :class:`~repro.core.simulator.NPUSimulator`; with ``n_devices=1`` it is
   bit-identical to the single-NPU loop (tests/test_cluster.py).
 
+Heterogeneity
+-------------
+``ClusterConfig(device_hw=[...])`` gives each device its own hardware
+model.  Task service times stay expressed on the cluster's *reference*
+hardware; each device carries a ``speed`` factor derived through the same
+Algorithm-1 latency model the predictor trusts
+(:func:`repro.core.predictor.relative_speed`), and the simulator dilates
+execution, preemption-cost, and victim-ranking estimates by it.  A
+homogeneous cluster has ``speed == 1.0`` everywhere and reproduces the
+historical math bit-exactly.
+
+Elasticity
+----------
+Devices can join and leave mid-run: ``add_device`` (schedulable after
+``provision_latency``), ``drain_device`` (stop placing; residents either
+finish or are checkpoint-migrated away over the existing
+``migration_latency`` path), and ``remove_device`` (drain, then leave for
+good once idle).  Each transition emits a ``device_up`` /
+``device_drain`` / ``device_down`` event on the shared bus, which is what
+``core/autoscaler.py`` subscribes to.  Per-device alive windows feed the
+``capacity_seconds`` normalization in ``metrics.cluster_summary``.
+
 Placement policies
 ------------------
 ``least_loaded``  pick the free device with the least accumulated busy
-                  time (classic load balancing).
+                  time per alive second (classic load balancing,
+                  re-normalized over unequal device lifetimes).
 ``affinity``      prefer (1) the device holding the task's checkpoint —
                   resuming elsewhere pays the cross-device
                   :func:`~repro.core.preemption.migration_latency` — then
                   (2) a device that last ran the same model (weights
                   warm), falling back to least-loaded.
+``speed_aware``   interactive-priority tasks go to the fastest free
+                  device; everything else balances load (heterogeneous
+                  clusters).
 ``random``        uniform-random free device (baseline).
 
 Scheduling works on a *global* ready queue: at every wake-up the policy
 selects a candidate exactly as on one NPU, then placement chooses the
 device; if no device is free, the arbiter considers preempting the
-longest-remaining running task (per-device ``may_preempt`` + Algorithm-3
-mechanism choice + KILL progress guarantee, all shared with the
-single-device path).
+running task with the longest device-relative remaining work (per-device
+``may_preempt`` + Algorithm-3 mechanism choice + KILL progress guarantee,
+all shared with the single-device path).
 """
 from __future__ import annotations
 
@@ -42,57 +70,105 @@ import numpy as np
 
 from repro.core import events as event_hooks
 from repro.core import metrics, preemption
-from repro.core.arbiter import Action, Arbiter
+from repro.core.arbiter import Action, Arbiter, remaining_cost
+from repro.core.predictor import relative_speed
 from repro.core.preemption import Mechanism
 from repro.core.scheduler import Policy
 from repro.core.simulator import SimConfig, tile_roundup
 from repro.core.task import Task, TaskState
 from repro.hw import HardwareModel
 
-PLACEMENT_NAMES = ("least_loaded", "affinity", "random")
+PLACEMENT_NAMES = ("least_loaded", "affinity", "speed_aware", "random")
+
+# Priority level treated as "interactive" by speed-aware placement (the
+# paper's high-priority token weight).
+INTERACTIVE_PRIORITY = 9
 
 
 @dataclasses.dataclass
 class DeviceState:
     """One NPU's slot in the cluster."""
     dev: int
+    hw: Optional[HardwareModel] = None  # None -> the cluster's reference hw
+    speed: float = 1.0            # wall time = reference time / speed
     running: Optional[Task] = None
     run_start: float = 0.0        # start of the current execution segment
     run_gen: int = 0              # invalidates stale completion events
     busy_until: float = 0.0       # switch-overhead window (non-preemptible)
     busy_time: float = 0.0        # accumulated service seconds
     last_model: Optional[str] = None
+    # ---- elastic lifecycle ----
+    added_at: float = 0.0         # ordered at (provisioning is paid for)
+    alive_since: float = 0.0      # schedulable from here (post-provision)
+    alive_until: Optional[float] = None   # set on removal (device_down)
+    draining: bool = False        # no new placements
+    remove_pending: bool = False  # leave the cluster once idle
+
+    @property
+    def alive(self) -> bool:
+        return self.alive_until is None
+
+    def schedulable(self, now: float) -> bool:
+        return (self.alive and not self.draining
+                and now + 1e-15 >= self.alive_since)
+
+    def capacity_seconds(self, until: float) -> float:
+        """Paid-for seconds inside ``[0, until]`` — the device's share of
+        the cluster's capacity normalization.  Charged from ``added_at``:
+        a provisioning device is capacity the operator is already paying
+        for, even though it cannot run work yet."""
+        end = until if self.alive_until is None else min(self.alive_until,
+                                                         until)
+        return max(0.0, end - min(self.added_at, until))
 
 
-def _least_loaded(free: List[DeviceState]) -> DeviceState:
-    return min(free, key=lambda d: (d.busy_time, d.dev))
+def _alive_seconds(d: DeviceState, now: float) -> float:
+    return max(now - d.alive_since, 1e-12)
+
+
+def _least_loaded(free: List[DeviceState], now: float) -> DeviceState:
+    # busy time per alive second: devices that joined late are compared at
+    # equal footing with founders (equal lifetimes reduce to raw busy time)
+    return min(free, key=lambda d: (d.busy_time / _alive_seconds(d, now),
+                                    d.dev))
 
 
 def place_least_loaded(task: Task, free: List[DeviceState],
-                       rng: np.random.Generator) -> DeviceState:
-    return _least_loaded(free)
+                       rng: np.random.Generator, now: float) -> DeviceState:
+    return _least_loaded(free, now)
 
 
 def place_affinity(task: Task, free: List[DeviceState],
-                   rng: np.random.Generator) -> DeviceState:
+                   rng: np.random.Generator, now: float) -> DeviceState:
     if task.restore_pending and task.device is not None:
         home = [d for d in free if d.dev == task.device]
         if home:
             return home[0]
     warm = [d for d in free if d.last_model == task.model]
     if warm:
-        return _least_loaded(warm)
-    return _least_loaded(free)
+        return _least_loaded(warm, now)
+    return _least_loaded(free, now)
+
+
+def place_speed_aware(task: Task, free: List[DeviceState],
+                      rng: np.random.Generator, now: float) -> DeviceState:
+    """Interactive-priority work goes to the fastest free device (ties
+    broken least-loaded); the rest balances load over the live set."""
+    if task.priority >= INTERACTIVE_PRIORITY:
+        top = max(d.speed for d in free)
+        return _least_loaded([d for d in free if d.speed == top], now)
+    return _least_loaded(free, now)
 
 
 def place_random(task: Task, free: List[DeviceState],
-                 rng: np.random.Generator) -> DeviceState:
+                 rng: np.random.Generator, now: float) -> DeviceState:
     return free[int(rng.integers(len(free)))]
 
 
 _PLACEMENTS = {
     "least_loaded": place_least_loaded,
     "affinity": place_affinity,
+    "speed_aware": place_speed_aware,
     "random": place_random,
 }
 
@@ -107,32 +183,87 @@ def make_placement(name: str):
 
 class Cluster:
     """Device set + placement; shared by the cluster simulator and the
-    serving engine (which keeps its own job slots but reuses the placement
-    and utilization bookkeeping)."""
+    serving engine (which keeps its own job slots but reuses the placement,
+    lifecycle, and utilization bookkeeping)."""
 
     def __init__(self, n_devices: int, placement: str = "least_loaded",
-                 seed: int = 0):
+                 seed: int = 0, base_hw: Optional[HardwareModel] = None,
+                 device_hw: Optional[Sequence[HardwareModel]] = None):
+        if device_hw is not None and len(device_hw) > 0:
+            n_devices = len(device_hw)
         if n_devices < 1:
             raise ValueError("n_devices must be >= 1")
-        self.devices = [DeviceState(d) for d in range(n_devices)]
+        self.base_hw = base_hw
+        self.devices: List[DeviceState] = []
+        for d in range(n_devices):
+            hw = device_hw[d] if device_hw else None
+            self.devices.append(self._make_device(d, hw))
         self.placement_name = placement
         self._place = make_placement(placement)
         self.rng = np.random.default_rng(seed)
         self.n_migrations = 0
+        self.n_scale_ups = 0
+        self.n_scale_downs = 0
+
+    def _make_device(self, dev: int, hw: Optional[HardwareModel],
+                     added_at: float = 0.0,
+                     alive_since: float = 0.0) -> DeviceState:
+        speed = 1.0
+        if hw is not None and self.base_hw is not None:
+            speed = relative_speed(hw, self.base_hw)
+        return DeviceState(dev, hw=hw, speed=speed, added_at=added_at,
+                           alive_since=alive_since, busy_until=alive_since)
 
     @property
     def n_devices(self) -> int:
         return len(self.devices)
 
+    @property
+    def n_alive(self) -> int:
+        """Devices that can take new placements now or soon: alive and not
+        draining (a still-provisioning device counts, so an autoscaler does
+        not double-order capacity it already paid for)."""
+        return sum(1 for d in self.devices if d.alive and not d.draining)
+
     def free(self, now: float) -> List[DeviceState]:
         return [d for d in self.devices
-                if d.running is None and now >= d.busy_until]
+                if d.schedulable(now) and d.running is None
+                and now >= d.busy_until]
 
-    def choose(self, task: Task, free: List[DeviceState]) -> DeviceState:
-        return self._place(task, free, self.rng)
+    def choose(self, task: Task, free: List[DeviceState],
+               now: float = 0.0) -> DeviceState:
+        return self._place(task, free, self.rng, now)
 
     def busy_times(self) -> List[float]:
         return [d.busy_time for d in self.devices]
+
+    def capacity_seconds(self, until: float) -> List[float]:
+        return [d.capacity_seconds(until) for d in self.devices]
+
+    # ---- elastic transitions (event emission is the caller's job) ----
+    def add_device(self, now: float, hw: Optional[HardwareModel] = None,
+                   provision_latency: float = 0.0) -> DeviceState:
+        d = self._make_device(len(self.devices), hw, added_at=now,
+                              alive_since=now + provision_latency)
+        self.devices.append(d)
+        self.n_scale_ups += 1
+        return d
+
+    def drain_device(self, dev: int) -> DeviceState:
+        d = self.devices[dev]
+        d.draining = True
+        return d
+
+    def remove_device(self, dev: int, now: float) -> DeviceState:
+        d = self.devices[dev]
+        if d.running is not None:
+            raise RuntimeError(f"device {dev} still has a resident task; "
+                               "drain it first")
+        d.draining = True
+        d.remove_pending = False
+        d.alive_until = now
+        self.n_scale_downs += 1
+        return d
 
 
 @dataclasses.dataclass
@@ -140,6 +271,13 @@ class ClusterConfig(SimConfig):
     n_devices: int = 1
     placement: str = "least_loaded"
     placement_seed: int = 0
+    # Heterogeneity: one HardwareModel per device (overrides n_devices).
+    device_hw: Optional[Sequence[HardwareModel]] = None
+    # Elasticity: delay before an added device becomes schedulable, and
+    # what to do with residents of a draining device ("migrate" preempts
+    # them over the checkpoint/migration path, "finish" lets them run out).
+    provision_latency: float = 0.0
+    drain: str = "migrate"
 
 
 class ClusterSimulator:
@@ -147,9 +285,14 @@ class ClusterSimulator:
 
     Same event kinds (arrival / completion / scheduling quantum), same
     arbiter; completions carry the device index.  After ``run`` the
-    ``cluster`` attribute exposes per-device busy time for utilization
-    metrics, and :meth:`summary` reports cluster-level metrics
-    (``metrics.cluster_summary``).
+    ``cluster`` attribute exposes per-device busy time and alive windows
+    for utilization metrics, and :meth:`summary` reports cluster-level
+    metrics (``metrics.cluster_summary``).
+
+    Elastic capacity: :meth:`add_device`, :meth:`drain_device`, and
+    :meth:`remove_device` are valid *during* ``run()`` (call them from an
+    event-bus hook, e.g. ``core/autoscaler.py``); they emit
+    ``device_up``/``device_drain``/``device_down`` events.
     """
 
     def __init__(self, hw: HardwareModel, policy: Policy,
@@ -158,11 +301,16 @@ class ClusterSimulator:
         self.policy = policy
         self.cfg = cfg or ClusterConfig()
         self.arbiter = Arbiter(policy, self.cfg.arbiter_config())
-        self.cluster = Cluster(self.cfg.n_devices, self.cfg.placement,
-                               self.cfg.placement_seed)
+        self.cluster = self._make_cluster()
         self.log: List[Tuple[float, str, int, int]] = []
         self._tasks: List[Task] = []
         self._inject = None          # live only inside run()
+        self._elastic = None         # (add, drain, remove) hooks inside run()
+
+    def _make_cluster(self) -> Cluster:
+        return Cluster(self.cfg.n_devices, self.cfg.placement,
+                       self.cfg.placement_seed, base_hw=self.hw,
+                       device_hw=self.cfg.device_hw)
 
     @property
     def events(self):
@@ -177,6 +325,33 @@ class ClusterSimulator:
                                "call it from an event-bus hook")
         self._inject(task, at)
 
+    # ---- elastic capacity (valid during run(), from event hooks) -----
+    def _elastic_hooks(self):
+        if self._elastic is None:
+            raise RuntimeError("elastic capacity changes are only valid "
+                               "during run() — call from an event-bus hook")
+        return self._elastic
+
+    def add_device(self, hw: Optional[HardwareModel] = None) -> int:
+        """Scale up: join a device (schedulable after the configured
+        ``provision_latency``); returns its index."""
+        return self._elastic_hooks()[0](hw)
+
+    def drain_device(self, dev: int) -> None:
+        """Stop placing on ``dev``; residents migrate or finish per
+        ``cfg.drain``.  The device stays alive (it still counts toward
+        capacity) until removed."""
+        self._elastic_hooks()[1](dev, False)
+
+    def remove_device(self, dev: int) -> None:
+        """Scale down: drain ``dev`` and take it out of the cluster as
+        soon as it is idle (immediately when nothing is resident)."""
+        self._elastic_hooks()[1](dev, True)
+
+    @property
+    def n_alive_devices(self) -> int:
+        return self.cluster.n_alive
+
     # ------------------------------------------------------------------
     def run(self, tasks: Sequence[Task]) -> List[Task]:
         """``tasks`` may be a prebuilt Task list or a
@@ -190,9 +365,8 @@ class ClusterSimulator:
         if admission is not None:
             admission.reset()
         self.log = []
-        self.cluster = Cluster(cfg.n_devices, cfg.placement,
-                               cfg.placement_seed)
-        devices = self.cluster.devices
+        self.cluster = self._make_cluster()
+        devices = self.cluster.devices   # mutated in place by add_device
         counter = itertools.count()
         events: List[Tuple[float, int, str, int, int, int]] = []
 
@@ -218,6 +392,17 @@ class ClusterSimulator:
         ready: List[Task] = []
         next_quantum = None
         n_settled = 0            # DONE + DROPPED
+        retry_pending: set = set()
+
+        def push_retry(t):
+            # deduped wake-up at a known future instant (end of a switch
+            # overhead / provisioning window).  Without the dedup every
+            # schedule() call during the window stacks another event at
+            # the same time, and each of those calls schedule() again —
+            # a quadratic event storm on elastic runs.
+            if t not in retry_pending:
+                retry_pending.add(t)
+                push(t, "retry")
 
         def log(t, kind, tid, dev=-1):
             if cfg.log_events:
@@ -229,13 +414,16 @@ class ClusterSimulator:
                 next_quantum = now + cfg.quantum
                 push(next_quantum, "quantum")
 
+        def dev_hw(d: DeviceState) -> HardwareModel:
+            return d.hw if d.hw is not None else hw
+
         def start(d: DeviceState, task: Task, now: float) -> float:
             t0 = now
             if task.restore_pending:
-                lat = preemption.restore_latency(task, hw)
+                lat = preemption.restore_latency(task, dev_hw(d))
                 if task.device is not None and task.device != d.dev:
                     # checkpoint lives on another chip: pay the transfer
-                    lat += preemption.migration_latency(task, hw)
+                    lat += preemption.migration_latency(task, dev_hw(d))
                     self.cluster.n_migrations += 1
                 task.checkpoint_overhead += lat
                 task.restore_pending = False
@@ -249,7 +437,8 @@ class ClusterSimulator:
             d.run_start = t0
             d.run_gen += 1
             d.busy_until = t0
-            push(t0 + task.remaining, "complete", task.tid, d.run_gen, d.dev)
+            push(t0 + task.remaining / d.speed, "complete", task.tid,
+                 d.run_gen, d.dev)
             log(now, "start", task.tid, d.dev)
             bus.dispatch(now, task, d.dev)
             return t0
@@ -257,7 +446,9 @@ class ClusterSimulator:
         def preempt(d: DeviceState, now: float, mech: Mechanism) -> float:
             task = d.running
             assert task is not None
-            elapsed = max(0.0, now - d.run_start)
+            # progress and tile geometry live in reference-hardware seconds;
+            # the wall clock advances at 1/speed of them on this device
+            elapsed = max(0.0, now - d.run_start) * d.speed
             free_at = now
             if mech is Mechanism.KILL:
                 task.executed = 0.0
@@ -267,13 +458,13 @@ class ClusterSimulator:
             else:  # CHECKPOINT
                 extra = tile_roundup(task, elapsed)
                 task.executed += elapsed + extra
-                d.busy_time += elapsed + extra
-                lat = preemption.checkpoint_latency(task, hw)
+                d.busy_time += (elapsed + extra) / d.speed
+                lat = preemption.checkpoint_latency(task, dev_hw(d))
                 task.checkpoint_overhead += lat
                 task.restore_pending = True
                 task.n_preemptions += 1
                 task.state = TaskState.PREEMPTED
-                free_at = now + extra + lat
+                free_at = now + extra / d.speed + lat
             ready.append(task)
             task.last_wake = now
             d.running = None
@@ -287,11 +478,38 @@ class ClusterSimulator:
             for d in devices:
                 if d.running is not None and now > d.run_start:
                     dt = now - d.run_start
-                    d.running.executed += dt
+                    d.running.executed += dt * d.speed
                     d.busy_time += dt
                     d.run_start = now
 
+        def settle_drain(d: DeviceState, now: float):
+            if not (d.remove_pending and d.alive and d.running is None):
+                return
+            if now < d.busy_until:
+                # its eviction checkpoint is still spilling: the device
+                # is occupied (and paid for) until the write lands
+                push_retry(d.busy_until)
+                return
+            self.cluster.remove_device(d.dev, now)
+            log(now, "device_down", -1, d.dev)
+            bus.device_down(now, d.dev)
+
+        def service_drains(now: float):
+            # a drain that landed while its resident was inside a
+            # restore/switch window deferred the eviction; carry it out
+            # as soon as the window ends, and settle removals whose
+            # eviction spill has finished (both paths schedule retries)
+            for d in devices:
+                if not (d.draining and d.alive):
+                    continue
+                if (d.running is not None and cfg.drain == "migrate"
+                        and now >= d.busy_until):
+                    sync_running(now)
+                    preempt(d, now, Mechanism.CHECKPOINT)
+                settle_drain(d, now)
+
         def schedule(now: float):
+            service_drains(now)
             if not ready:
                 return
             sync_running(now)
@@ -302,24 +520,36 @@ class ClusterSimulator:
                     return
                 free = self.cluster.free(now)
                 if free:
-                    d = self.cluster.choose(cand, free)
+                    d = self.cluster.choose(cand, free, now)
                     ready.remove(cand)
                     start(d, cand, now)
                     if len(free) > 1 and ready:
                         continue  # fill remaining free devices this wake
                     return
-                blocked = [d for d in devices if d.running is None]
-                if blocked:
-                    # inside switch-overhead windows: retry when one frees
-                    push(min(d.busy_until for d in blocked), "quantum")
+                blocked = [d for d in devices
+                           if d.alive and not d.draining and d.running is None]
+                switching = [d for d in blocked if now >= d.alive_since]
+                provisioning = [d for d in blocked if now < d.alive_since]
+                if provisioning:
+                    # wake when the joining device comes online — but a
+                    # not-yet-alive device must not suppress preemption
+                    # below: the scale-up fired *because* of overload
+                    push_retry(min(d.alive_since for d in provisioning))
+                if switching:
+                    # inside a switch-overhead window: wait for the chip
+                    # rather than displacing another (historical behavior)
+                    push_retry(min(d.busy_until for d in switching))
                     return
                 if not arbiter.policy.preemptive:
                     return
-                # every device is running: consider displacing the victim
-                # with the longest predicted remaining work first
+                # every placeable device is running: consider displacing the
+                # victim with the longest device-relative remaining work
                 victims = sorted(
-                    (d for d in devices if now >= d.busy_until),
-                    key=lambda d: (-d.running.predicted_remaining, d.dev))
+                    (d for d in devices
+                     if d.schedulable(now) and d.running is not None
+                     and now >= d.busy_until),
+                    key=lambda d: (-remaining_cost(d.running, d.speed),
+                                   d.dev))
                 for d in victims:
                     dec = arbiter.arbitrate(d.running, cand)
                     if dec.action is Action.PREEMPT:
@@ -331,10 +561,43 @@ class ClusterSimulator:
                         log(now, "drain", d.running.tid, d.dev)
                 return
 
+        # ---- elastic hooks (live only inside run) --------------------
+        clock = 0.0              # last event time: "now" for hook calls
+
+        def add_dev(new_hw: Optional[HardwareModel]) -> int:
+            d = self.cluster.add_device(clock, hw=new_hw,
+                                        provision_latency=cfg.provision_latency)
+            log(clock, "device_up", -1, d.dev)
+            bus.device_up(clock, d.dev)
+            push_retry(d.alive_since)        # wake when it comes online
+            return d.dev
+
+        def drain_dev(dev: int, remove: bool) -> None:
+            d = devices[dev]
+            if not d.alive or (d.draining and not remove):
+                return
+            if not d.draining:
+                d.draining = True
+                log(clock, "device_drain", -1, d.dev)
+                bus.device_drain(clock, d.dev)
+                if d.running is not None and cfg.drain == "migrate":
+                    if clock >= d.busy_until:
+                        sync_running(clock)
+                        preempt(d, clock, Mechanism.CHECKPOINT)
+                        push_retry(d.busy_until)    # re-place the evictee
+                    else:
+                        # resident is inside a restore/switch window: the
+                        # retry drives migrate_drains once it ends
+                        push_retry(d.busy_until)
+            d.remove_pending = d.remove_pending or remove
+            settle_drain(d, clock)
+        self._elastic = (add_dev, drain_dev)
+
         # ---------------- main loop ----------------
         try:
             while events:
                 now, _, kind, tid, gen, dev = heapq.heappop(events)
+                clock = now
                 if kind == "arrival":
                     task = by_id[tid]
                     if not event_hooks.offer(bus, admission, task, now,
@@ -361,19 +624,28 @@ class ClusterSimulator:
                     d.running = None
                     log(now, "complete", tid, dev)
                     bus.complete(now, task, dev)
+                    settle_drain(d, now)
                     schedule(now)
                     if ready:
                         ensure_quantum(now)
-                elif kind == "quantum":
-                    next_quantum = None
+                elif kind in ("quantum", "retry"):
+                    if kind == "quantum":
+                        next_quantum = None
+                    else:
+                        retry_pending.discard(now)
                     if ready or any(d.running is not None for d in devices):
                         schedule(now)
                         if ready:
                             ensure_quantum(now)
+                    else:
+                        # no work left, but a pending removal may still be
+                        # waiting out its eviction spill
+                        service_drains(now)
                 if n_settled == len(by_id) and not events:
                     break
         finally:
             self._inject = None   # dead runs must not accept submissions
+            self._elastic = None
         settled = (TaskState.DONE, TaskState.DROPPED)
         assert all(t.state in settled for t in by_id.values()), (
             f"unfinished tasks: "
@@ -387,7 +659,10 @@ class ClusterSimulator:
             raise RuntimeError("summary() requires a completed run()")
         done = [t.completion for t in self._tasks if t.completion is not None]
         makespan = max(done) if done else 0.0
-        out = metrics.cluster_summary(self._tasks, self.cluster.busy_times(),
-                                      makespan)
+        out = metrics.cluster_summary(
+            self._tasks, self.cluster.busy_times(), makespan,
+            capacity_seconds=self.cluster.capacity_seconds(makespan))
         out["migrations"] = float(self.cluster.n_migrations)
+        out["n_scale_ups"] = float(self.cluster.n_scale_ups)
+        out["n_scale_downs"] = float(self.cluster.n_scale_downs)
         return out

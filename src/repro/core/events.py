@@ -17,6 +17,16 @@ the shared :class:`~repro.core.arbiter.Arbiter`:
               (``device == -1``); dropped tasks never dispatch.
 ==========  ===============================================================
 
+Elastic clusters add three *device lifecycle* events (``tid == -1``):
+
+================  =========================================================
+``device_up``     a device joined the cluster (it becomes schedulable at
+                  its ``alive_since`` instant, after any provision delay).
+``device_drain``  a device stopped accepting placements; residents either
+                  finish or are checkpoint-migrated away.
+``device_down``   a drained device left the cluster for good.
+================  =========================================================
+
 The bus is the one observation point for reactive subsystems: closed-loop
 clients resample their think time on ``complete``/``drop``
 (:class:`repro.workloads.arrivals.ClosedLoopDriver`), executed-trace
@@ -36,7 +46,17 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional
 
-EVENT_KINDS = ("submit", "dispatch", "preempt", "complete", "drop")
+EVENT_KINDS = (
+    "submit",
+    "dispatch",
+    "preempt",
+    "complete",
+    "drop",
+    "device_up",
+    "device_drain",
+    "device_down",
+)
+DEVICE_EVENT_KINDS = ("device_up", "device_drain", "device_down")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,6 +157,16 @@ class EventBus:
 
     def drop(self, t: float, task) -> None:
         self._task_event(t, "drop", task, -1)
+
+    # -- device lifecycle (elastic clusters; tid == -1) ----------------
+    def device_up(self, t: float, device: int) -> None:
+        self.emit(Event(t=float(t), kind="device_up", tid=-1, device=device))
+
+    def device_drain(self, t: float, device: int) -> None:
+        self.emit(Event(t=float(t), kind="device_drain", tid=-1, device=device))
+
+    def device_down(self, t: float, device: int) -> None:
+        self.emit(Event(t=float(t), kind="device_down", tid=-1, device=device))
 
 
 def offer(bus: EventBus, admission, task, now: float,

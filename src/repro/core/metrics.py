@@ -192,23 +192,41 @@ def per_device_summary(tasks: Sequence[Task]) -> Dict[int, Dict[str, float]]:
     return out
 
 
-def device_utilization(busy_times: Sequence[float],
-                       makespan: float) -> List[float]:
-    """Per-device fraction of the makespan spent executing tasks."""
-    span = max(makespan, 1e-12)
-    return [min(1.0, b / span) for b in busy_times]
+def device_utilization(busy_times: Sequence[float], makespan: float,
+                       capacity_seconds: Optional[Sequence[float]] = None
+                       ) -> List[float]:
+    """Per-device fraction of its *alive* time spent executing tasks.
+
+    ``capacity_seconds[i]`` is device *i*'s alive window inside the run
+    (elastic clusters: devices join and leave mid-run, so dividing every
+    device's busy time by the global makespan understates late joiners
+    and early leavers).  Omitted, every device is assumed alive for the
+    whole makespan — the historical fixed-fleet behavior."""
+    if capacity_seconds is None:
+        capacity_seconds = [makespan] * len(busy_times)
+    return [min(1.0, b / max(cap, 1e-12))
+            for b, cap in zip(busy_times, capacity_seconds)]
 
 
 def cluster_health(tasks: Sequence[Task], busy_times: Sequence[float],
-                   makespan: float) -> Dict[str, float]:
+                   makespan: float,
+                   capacity_seconds: Optional[Sequence[float]] = None
+                   ) -> Dict[str, float]:
     """Cluster-level utilization, throughput, and cross-device balance
     only — no per-task latency aggregates (compose with ``summarize``
-    via :func:`cluster_summary` when both cover the same task set)."""
+    via :func:`cluster_summary` when both cover the same task set).
+    ``capacity_seconds`` carries per-device alive windows for elastic
+    clusters; ``capacity_seconds`` in the output is the total
+    device-seconds the configuration consumed (the denominator of any
+    cost-normalized comparison across fleet sizes)."""
     out: Dict[str, float] = {}
-    utils = device_utilization(busy_times, makespan)
+    utils = device_utilization(busy_times, makespan, capacity_seconds)
     per_dev = per_device_summary(tasks)
+    caps = (list(capacity_seconds) if capacity_seconds is not None
+            else [makespan] * len(busy_times))
     out["n_devices"] = float(len(busy_times))
     out["makespan"] = float(makespan)
+    out["capacity_seconds"] = float(np.sum(caps))
     out["throughput"] = float(len(completed(tasks))) / max(makespan, 1e-12)
     out["util_mean"] = float(np.mean(utils))
     out["util_min"] = float(np.min(utils))
@@ -225,10 +243,14 @@ def cluster_health(tasks: Sequence[Task], busy_times: Sequence[float],
 
 
 def cluster_summary(tasks: Sequence[Task], busy_times: Sequence[float],
-                    makespan: float) -> Dict[str, float]:
+                    makespan: float,
+                    capacity_seconds: Optional[Sequence[float]] = None
+                    ) -> Dict[str, float]:
     """Global ``summarize`` (incl. tail percentiles) plus cluster-level
     utilization, throughput and cross-device balance (STP/ANTT across
-    devices)."""
+    devices).  Pass ``capacity_seconds`` (per-device alive windows) for
+    elastic clusters so utilization divides by alive time, not the
+    global makespan."""
     out = summarize(tasks)
-    out.update(cluster_health(tasks, busy_times, makespan))
+    out.update(cluster_health(tasks, busy_times, makespan, capacity_seconds))
     return out

@@ -96,6 +96,36 @@ def network_flops(ops: Sequence[NodeOp]) -> int:
 
 
 # ==========================================================================
+# Device-relative speed (heterogeneous clusters)
+# ==========================================================================
+# A small basket of GEMM shapes spanning the suite's regimes (compute-bound
+# large GEMMs, a skinny memory-bound one, and an underutilizing tall-thin
+# one), so the ratio reflects Algorithm 1 rather than raw peak FLOPs.
+_SPEED_PROBE: Tuple[GemmOp, ...] = (
+    GemmOp(m=1024, k=1024, n=512),
+    GemmOp(m=256, k=4096, n=64),
+    GemmOp(m=64, k=64, n=2048, repeat=8),
+)
+
+
+def relative_speed(hw: HardwareModel, base: HardwareModel,
+                   probe: Optional[Sequence[GemmOp]] = None) -> float:
+    """How much faster ``hw`` runs the probe basket than ``base``.
+
+    ``speed > 1`` means a faster device: a task whose reference (``base``)
+    service time is ``T`` takes ``T / speed`` wall seconds on ``hw``.  The
+    ratio is measured through the same Algorithm-1 latency model the
+    scheduler's predictor trusts, so heterogeneous cost estimates stay
+    consistent with single-device predictions.  Identical hardware maps to
+    exactly 1.0 (elastic homogeneous clusters keep bit-identical math).
+    """
+    if hw is base or hw == base:
+        return 1.0
+    ops = tuple(probe) if probe is not None else _SPEED_PROBE
+    return network_time(ops, base) / network_time(ops, hw)
+
+
+# ==========================================================================
 # Output-length regression (profile-driven characterization graph, Fig 9)
 # ==========================================================================
 class LengthRegressor:

@@ -81,14 +81,20 @@ class ServingEngine:
                  execute: bool = True,
                  n_devices: int = 1,
                  placement: str = "least_loaded",
-                 admission=None):
+                 admission=None,
+                 device_hw: Optional[List[HardwareModel]] = None,
+                 provision_latency: float = 0.0):
         """``models``: name → (Model, params).  ``policy`` is a name or a
         :class:`Policy` instance; ``preemptive`` overrides the policy's
         flag when given (string policies default to preemptive).
         ``execute=False`` runs the engine in pure virtual-time mode (no
         tensor computation) for large-scale scheduling studies.
         ``n_devices``/``placement`` scale the engine to a multi-NPU
-        cluster (see module docstring).  ``admission`` is an optional
+        cluster (see module docstring); ``device_hw`` gives each device
+        its own :class:`HardwareModel` (heterogeneous clusters — step
+        times dilate by the device's Algorithm-1 relative speed; it
+        overrides ``n_devices``).  ``provision_latency`` delays mid-run
+        ``add_device`` joins.  ``admission`` is an optional
         :class:`repro.workloads.admission.AdmissionPolicy`: rejected
         requests are DROPPED at ingest (a ``drop`` event fires, no tensors
         run) and appear in per-tenant accounting as ``n_rejected``."""
@@ -103,9 +109,12 @@ class ServingEngine:
         self.mechanism = mechanism
         self.arbiter = Arbiter(self.policy, ArbiterConfig(mechanism=mechanism))
         self.admission = admission
-        self.n_devices = int(n_devices)
         self.placement = placement
-        self.cluster = Cluster(self.n_devices, placement)
+        self.device_hw = list(device_hw) if device_hw else None
+        self.provision_latency = float(provision_latency)
+        self.cluster = Cluster(int(n_devices), placement, base_hw=hw,
+                               device_hw=self.device_hw)
+        self.n_devices = self.cluster.n_devices
         self.execute = execute
         self.straggler_factor = straggler_factor
         self._executors: Dict[str, PreemptibleExecutor] = {}
@@ -113,13 +122,15 @@ class ServingEngine:
         for name, (model, params) in models.items():
             self._executors[name] = PreemptibleExecutor(model, params)
         self.predictor = Predictor(hw)
-        cap = kv_capacity_bytes or hw.hbm_bytes
-        self.kvs = [KVCacheManager(cap) for _ in range(self.n_devices)]
+        self._kv_capacity = kv_capacity_bytes or hw.hbm_bytes
+        self.kvs = [KVCacheManager(self._kv_capacity)
+                    for _ in range(self.n_devices)]
         self.kv = self.kvs[0]        # back-compat alias (device 0)
         self._length_reg: Dict[str, LengthRegressor] = {}
         self.completed: List[RequestResult] = []
         self.tasks: List[Task] = []
         self._inject = None          # live only inside run()
+        self._elastic = None         # (add, drain) hooks inside run()
 
     @property
     def events(self):
@@ -133,6 +144,31 @@ class ServingEngine:
             raise RuntimeError("submit() is only valid during run() — "
                                "call it from an event-bus hook")
         self._inject(req, at)
+
+    # ---- elastic capacity (valid during run(), from event hooks) -----
+    def _elastic_hooks(self):
+        if self._elastic is None:
+            raise RuntimeError("elastic capacity changes are only valid "
+                               "during run() — call from an event-bus hook")
+        return self._elastic
+
+    def add_device(self, hw: Optional[HardwareModel] = None) -> int:
+        """Scale up: join a device (schedulable after
+        ``provision_latency``); returns its index."""
+        return self._elastic_hooks()[0](hw)
+
+    def drain_device(self, dev: int) -> None:
+        """Stop placing on ``dev``; residents are checkpoint-migrated
+        away at their next step boundary."""
+        self._elastic_hooks()[1](dev, False)
+
+    def remove_device(self, dev: int) -> None:
+        """Scale down: drain ``dev`` and retire it once idle."""
+        self._elastic_hooks()[1](dev, True)
+
+    @property
+    def n_alive_devices(self) -> int:
+        return self.cluster.n_alive
 
     # ------------------------------------------------------------------
     def fit_length_regressor(self, arch: str,
@@ -203,25 +239,58 @@ class ServingEngine:
         jobs = {r.rid: self._make_job(r) for r in requests}
         arrivals = [(r.arrival, r.rid) for r in requests]
         heapq.heapify(arrivals)
-        n_dev = self.n_devices
         bus, admission = self.arbiter.events, self.admission
         self.arbiter.reset()
         bus.clear()
         if admission is not None:
             admission.reset()
-        self.cluster = Cluster(n_dev, self.placement)
+        self.cluster = Cluster(self.n_devices, self.placement,
+                               base_hw=self.hw, device_hw=self.device_hw)
         self._run_tasks: List[Task] = []   # this run only (cluster metrics)
-        devices = self.cluster.devices
-        dev_clock = [0.0] * n_dev
-        running: List[Optional[_Job]] = [None] * n_dev
+        devices = self.cluster.devices     # grown in place by add_device
+        dev_clock = [0.0] * len(devices)
+        running: List[Optional[_Job]] = [None] * len(devices)
+        del self.kvs[len(devices):]
+        while len(self.kvs) < len(devices):
+            self.kvs.append(KVCacheManager(self._kv_capacity))
         ready: List[_Job] = []
         n_dropped = 0
+        clock = 0.0                        # last observed sim time (hooks)
 
         def inject(req: InferenceRequest, at: float):
             req.arrival = float(at)
             jobs[req.rid] = self._make_job(req)
             heapq.heappush(arrivals, (req.arrival, req.rid))
         self._inject = inject
+
+        def settle_drain(dev: int, at: float):
+            nonlocal clock
+            d = devices[dev]
+            if d.remove_pending and d.alive and d.running is None:
+                clock = max(clock, at)
+                self.cluster.remove_device(dev, at)
+                bus.device_down(at, dev)
+
+        def add_dev(hw_: Optional[HardwareModel]) -> int:
+            d = self.cluster.add_device(
+                clock, hw=hw_, provision_latency=self.provision_latency)
+            dev_clock.append(d.alive_since)
+            running.append(None)
+            while len(self.kvs) < len(devices):
+                self.kvs.append(KVCacheManager(self._kv_capacity))
+            bus.device_up(clock, d.dev)
+            return d.dev
+
+        def drain_dev(dev: int, remove: bool) -> None:
+            d = devices[dev]
+            if not d.alive or (d.draining and not remove):
+                return
+            if not d.draining:
+                d.draining = True
+                bus.device_drain(clock, dev)
+            d.remove_pending = d.remove_pending or remove
+            settle_drain(dev, clock)
+        self._elastic = (add_dev, drain_dev)
 
         def ready_tasks():
             return [j.task for j in ready]
@@ -251,15 +320,20 @@ class ServingEngine:
                 return None
             return next(j for j in ready if j.task is sel)
 
+        def dev_hw(d: int) -> HardwareModel:
+            return devices[d].hw if devices[d].hw is not None else self.hw
+
         def begin(d: int, j: _Job):
+            nonlocal clock
             t = j.task
             now = dev_clock[d]
+            clock = max(clock, now)
             bus.dispatch(now, t, d)
             if t.restore_pending:
-                lat = preemption.restore_latency(t, self.hw)
+                lat = preemption.restore_latency(t, dev_hw(d))
                 if t.device is not None and t.device != d:
                     # checkpoint + KV residency live on another chip
-                    lat += preemption.migration_latency(t, self.hw)
+                    lat += preemption.migration_latency(t, dev_hw(d))
                     self.cluster.n_migrations += 1
                     self.kvs[t.device].release(j.req.rid)
                     nbytes = (j.state.cache_bytes()
@@ -285,7 +359,7 @@ class ServingEngine:
 
         def do_checkpoint(d: int, j: _Job):
             t = j.task
-            lat = preemption.checkpoint_latency(t, self.hw)
+            lat = preemption.checkpoint_latency(t, dev_hw(d))
             if self.execute and j.state is not None:
                 j.state = PreemptibleExecutor.checkpoint(j.state)
                 lat += self.kvs[d].resize(j.req.rid, j.state.cache_bytes(),
@@ -304,10 +378,14 @@ class ServingEngine:
             j.task.state = TaskState.WAITING
 
         def complete(d: int, j: _Job):
+            nonlocal clock
             t = j.task
-            clock = dev_clock[d]
+            # the step that finished advanced this device's clock past the
+            # iteration-start time; elastic hooks fired off the complete
+            # event must see the post-step instant, not a stale one
+            clock = t_done = dev_clock[d]
             t.executed = t.isolated_time
-            t.completion = clock
+            t.completion = t_done
             t.state = TaskState.DONE
             self.kvs[d].release(j.req.rid)
             toks = (np.stack(j.state.tokens_out, axis=1)
@@ -317,8 +395,8 @@ class ServingEngine:
                 rid=j.req.rid, arch=j.req.arch, tokens=toks,
                 arrival=j.req.arrival,
                 first_token_time=(j.first_token_time
-                                  if j.first_token_time is not None else clock),
-                completion=clock, isolated_time=t.isolated_time,
+                                  if j.first_token_time is not None else t_done),
+                completion=t_done, isolated_time=t.isolated_time,
                 n_preemptions=t.n_preemptions, n_kills=t.n_kills,
                 ckpt_overhead=t.checkpoint_overhead, priority=j.req.priority,
                 sla_target=j.req.sla_scale * t.isolated_time,
@@ -328,26 +406,28 @@ class ServingEngine:
             self._run_tasks.append(t)
             running[d] = None
             devices[d].running = None
-            bus.complete(clock, t, d)
+            bus.complete(t_done, t, d)
 
         def exec_one_step(d: int, j: _Job):
             """Run one boundary-to-boundary step (real tensors + virtual
-            clock)."""
+            clock).  Step times are predicted on the reference hardware;
+            the device's wall clock advances at 1/speed of them."""
             t = j.task
             node = t.current_node()
             dt = float(t.node_times[min(node, t.total_nodes - 1)])
             if self.straggler_factor is not None:
                 dt *= float(self.straggler_factor(j.req.rid, node))
+            dt_wall = dt / devices[d].speed
             if self.execute:
                 j.state = j.executor.step(j.state)
                 if (j.first_token_time is None
                         and j.state.phase in ("decode", "done")):
-                    j.first_token_time = dev_clock[d] + dt
+                    j.first_token_time = dev_clock[d] + dt_wall
             else:
                 if j.first_token_time is None and node + 1 >= j.executor.n_periods:
-                    j.first_token_time = dev_clock[d] + dt
-            dev_clock[d] += dt
-            devices[d].busy_time += dt
+                    j.first_token_time = dev_clock[d] + dt_wall
+            dev_clock[d] += dt_wall
+            devices[d].busy_time += dt_wall
             t.executed = min(t.isolated_time, t.executed + dt)
 
         def step_done(j: _Job) -> bool:
@@ -369,16 +449,24 @@ class ServingEngine:
         # ---------------- main loop ----------------
         # Per-device virtual clocks; each iteration advances the device
         # with the smallest clock (running devices win ties so an idle
-        # device waiting for work cannot starve progress).
+        # device waiting for work cannot starve progress).  Dead devices
+        # drop out of the race; idle draining devices are parked.
         done_before = len(self.completed)
+
+        def selectable(i: int) -> bool:
+            d = devices[i]
+            return d.alive and (running[i] is not None or not d.draining)
+
         # closed-loop hooks can grow ``jobs`` mid-run; dropped requests
         # settle without completing, so count both against the total
         try:
             while len(self.completed) - done_before + n_dropped < len(jobs):
-                d = min(range(n_dev),
+                cands = [i for i in range(len(devices)) if selectable(i)]
+                assert cands, "engine has no schedulable devices left"
+                d = min(cands,
                         key=lambda i: (dev_clock[i],
                                        0 if running[i] is not None else 1, i))
-                now = dev_clock[d]
+                now = clock = dev_clock[d]
                 ingest(now)
                 j = running[d]
                 if j is None:
@@ -388,7 +476,7 @@ class ServingEngine:
                         else:
                             # nothing to do on this device until another one
                             # finishes or preempts; follow the busy clocks
-                            busy = [dev_clock[i] for i in range(n_dev)
+                            busy = [dev_clock[i] for i in cands
                                     if running[i] is not None]
                             assert busy, "engine stalled with work outstanding"
                             dev_clock[d] = max(now, min(busy))
@@ -405,13 +493,25 @@ class ServingEngine:
                         continue
                     # among the devices free *now*, placement chooses which one
                     # takes the candidate (affinity avoids a cross-chip resume)
-                    free = [devices[i] for i in range(n_dev)
-                            if running[i] is None and dev_clock[i] <= now + 1e-15]
-                    target = (self.cluster.choose(cand.task, free).dev
+                    free = [devices[i] for i in range(len(devices))
+                            if running[i] is None and devices[i].schedulable(now)
+                            and dev_clock[i] <= now + 1e-15]
+                    target = (self.cluster.choose(cand.task, free, now).dev
                               if len(free) > 1 else d)
                     ready.remove(cand)
                     dev_clock[target] = max(dev_clock[target], now)
                     begin(target, cand)
+                    continue
+                # a draining device gives up its resident at the step
+                # boundary: checkpoint out, resume elsewhere (migration)
+                if devices[d].draining:
+                    bus.preempt(now, j.task, d, Mechanism.CHECKPOINT.value)
+                    do_checkpoint(d, j)
+                    devices[d].running = None
+                    running[d] = None
+                    ready.append(j)
+                    j.task.last_wake = dev_clock[d]
+                    settle_drain(d, dev_clock[d])
                     continue
                 # at a step boundary: consider preemption, then run one step
                 if ready and self.policy.preemptive:
@@ -435,8 +535,10 @@ class ServingEngine:
                 exec_one_step(d, j)
                 if step_done(j):
                     complete(d, j)
+                    settle_drain(d, dev_clock[d])
         finally:
             self._inject = None   # dead runs must not accept submissions
+            self._elastic = None
         return self.completed
 
     # ------------------------------------------------------------------
@@ -455,7 +557,7 @@ class ServingEngine:
             for k, v in kv.stats.items():
                 kv_stats[k] = kv_stats.get(k, 0.0) + float(v)
         out.update({f"kv_{k}": v for k, v in kv_stats.items()})
-        if self.n_devices > 1:
+        if self.cluster.n_devices > 1:
             # cluster accounting (busy times, migrations, clocks) is per
             # run, so the health section covers the *latest* run only —
             # cluster_health (not cluster_summary) keeps the per-task
@@ -464,6 +566,9 @@ class ServingEngine:
             if run_tasks:
                 makespan = max(t.completion for t in run_tasks)
                 out.update(metrics.cluster_health(
-                    run_tasks, self.cluster.busy_times(), makespan))
+                    run_tasks, self.cluster.busy_times(), makespan,
+                    capacity_seconds=self.cluster.capacity_seconds(makespan)))
             out["migrations"] = float(self.cluster.n_migrations)
+            out["n_scale_ups"] = float(self.cluster.n_scale_ups)
+            out["n_scale_downs"] = float(self.cluster.n_scale_downs)
         return out

@@ -141,10 +141,14 @@ class MMPP(ArrivalProcess):
 @dataclasses.dataclass
 class Diurnal(ArrivalProcess):
     """Non-homogeneous Poisson with rate
-    ``base_rate * (1 + amplitude * sin(2*pi*t / period))`` via thinning."""
+    ``base_rate * (1 + amplitude * sin(2*pi*(t/period + phase)))`` via
+    thinning.  ``phase`` (cycle fractions) shifts where in the day the
+    trace starts: 0 starts on the rising edge, 0.75 at the trough — the
+    autoscale benchmarks start there so scale-up is observable."""
     base_rate: float
     amplitude: float = 0.5
     period: float = 1.0
+    phase: float = 0.0
     name = "diurnal"
 
     def __post_init__(self):
@@ -152,8 +156,8 @@ class Diurnal(ArrivalProcess):
             raise ValueError("amplitude must be in [0, 1)")
 
     def rate_at(self, t: float) -> float:
-        return self.base_rate * (
-            1.0 + self.amplitude * math.sin(2.0 * math.pi * t / self.period))
+        return self.base_rate * (1.0 + self.amplitude * math.sin(
+            2.0 * math.pi * (t / self.period + self.phase)))
 
     def sample(self, rng, service_times):
         n = len(service_times)

@@ -183,6 +183,8 @@ class ExecutedTrace:
         completion times, preemption count, drop flag, device set."""
         out: Dict[int, Dict] = {}
         for ev in self.events:
+            if ev.tid < 0:
+                continue    # device lifecycle events are not task-scoped
             row = out.setdefault(ev.tid, {
                 "submit": None, "dispatch": None, "complete": None,
                 "dropped": False, "n_preemptions": 0, "devices": []})

@@ -1,0 +1,187 @@
+"""Event-driven autoscaler: scaling decisions off the shared event bus.
+
+Pins the PR-5 contracts of core/autoscaler.py:
+
+* bursty load scales the cluster up, quiet periods scale it back down,
+  always inside [min_devices, max_devices];
+* decisions are driven purely by bus events, so same seed + same
+  workload => bit-identical event logs including device lifecycle events;
+* cooldown rate-limits actions; the optional SLA-attainment signal can
+  force a scale-up without queue depth.
+"""
+import numpy as np
+import pytest
+
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.scheduler import make_policy
+from repro.core.task import Task, TaskState
+from repro.hw import PAPER_NPU
+
+
+def mk_task(tid, total, priority=3, arrival=0.0):
+    n = 8
+    return Task(
+        tid=tid,
+        model=f"m{tid % 3}",
+        priority=priority,
+        arrival=arrival,
+        batch=1,
+        node_times=np.full(n, total / n),
+        node_out_bytes=np.full(n, 1 << 18, dtype=np.int64),
+        predicted_total=total,
+    )
+
+
+def burst_gap_burst(n_burst=16, total=4e-3, gap=0.25):
+    """Two dense bursts separated by a long idle gap: up, down, up again."""
+    tasks = [mk_task(i, total, arrival=i * 1e-4) for i in range(n_burst)]
+    tasks += [
+        mk_task(n_burst + i, total, arrival=gap + i * 1e-4) for i in range(n_burst)
+    ]
+    return tasks
+
+
+def make_sim(**cfg_kwargs):
+    cfg_kwargs.setdefault("mechanism", "dynamic")
+    cfg_kwargs.setdefault("n_devices", 1)
+    sim = ClusterSimulator(
+        PAPER_NPU, make_policy("prema", True), ClusterConfig(**cfg_kwargs)
+    )
+    return sim
+
+
+def make_scaler(sim, **kwargs):
+    kwargs.setdefault("min_devices", 1)
+    kwargs.setdefault("max_devices", 4)
+    kwargs.setdefault("target_queue_per_device", 2.0)
+    kwargs.setdefault("window", 4e-3)
+    kwargs.setdefault("cooldown", 2e-3)
+    return Autoscaler(AutoscalerConfig(**kwargs)).attach(sim)
+
+
+def test_scales_up_under_burst_and_down_in_the_gap():
+    sim = make_sim()
+    scaler = make_scaler(sim)
+    done = sim.run(burst_gap_burst())
+    assert all(t.state == TaskState.DONE for t in done)
+    ups = [d for d in scaler.decisions if d[1] == "up"]
+    downs = [d for d in scaler.decisions if d[1] == "down"]
+    assert ups, "burst did not trigger a scale-up"
+    assert downs, "idle gap did not trigger a scale-down"
+    # some scale-down happened before the second burst's first arrival
+    assert min(t for t, kind, _ in scaler.decisions if kind == "down") < 0.25
+    assert sim.cluster.n_scale_ups == len(ups)
+    assert sim.cluster.n_scale_downs == len(downs)
+
+
+def test_bounds_are_respected():
+    sim = make_sim()
+    scaler = make_scaler(sim, max_devices=2)
+    sim.run(burst_gap_burst())
+    alive_high_water = 0
+    alive = 1
+    for t, kind, _ in scaler.decisions:
+        alive += 1 if kind == "up" else -1
+        alive_high_water = max(alive_high_water, alive)
+        assert 1 <= alive <= 2
+    assert alive_high_water == 2
+
+
+def test_same_seed_bit_identical_logs_including_device_events():
+    logs = []
+    for _ in range(2):
+        sim = make_sim(provision_latency=1e-3)
+        make_scaler(sim)
+        sim.run(burst_gap_burst())
+        logs.append(list(sim.events.log))
+    assert logs[0] == logs[1]
+    assert any(ev.kind == "device_up" for ev in logs[0])
+    assert any(ev.kind == "device_down" for ev in logs[0])
+
+
+def test_cooldown_rate_limits_actions():
+    sim = make_sim()
+    scaler = make_scaler(sim, cooldown=1e9)  # one action per run, at most
+    sim.run(burst_gap_burst())
+    assert len(scaler.decisions) <= 1
+
+
+def test_sla_signal_forces_scale_up_without_queue_depth():
+    """A trickle of requests that each miss the latency budget must still
+    scale up when the SLA trigger is armed (queue depth stays ~0)."""
+    tasks = [mk_task(i, 8e-3, arrival=i * 9e-3) for i in range(12)]
+    sim = make_sim()
+    scaler = make_scaler(
+        sim,
+        target_queue_per_device=100.0,  # queue signal effectively off
+        sla_latency=1e-3,  # everyone misses this budget
+        sla_target=0.9,
+    )
+    sim.run(tasks)
+    assert any(kind == "up" for _, kind, _ in scaler.decisions)
+
+
+def test_detach_stops_scaling():
+    sim = make_sim()
+    scaler = make_scaler(sim)
+    scaler.detach()
+    sim.run(burst_gap_burst())
+    assert scaler.decisions == []
+    assert sim.cluster.n_devices == 1
+
+
+def test_reused_scaler_resets_between_runs():
+    sim = make_sim()
+    scaler = make_scaler(sim)
+    tasks = burst_gap_burst()
+    first = sim.run([mk_task(t.tid, t.isolated_time, arrival=t.arrival) for t in tasks])
+    n_first = len(scaler.decisions)
+    assert all(t.state == TaskState.DONE for t in first)
+    # second run: the rewind detector clears state, decisions start fresh
+    sim.run([mk_task(t.tid, t.isolated_time, arrival=t.arrival) for t in tasks])
+    assert len(scaler.decisions) == n_first
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="min_devices"):
+        AutoscalerConfig(min_devices=0)
+    with pytest.raises(ValueError, match="max_devices"):
+        AutoscalerConfig(min_devices=4, max_devices=2)
+    with pytest.raises(ValueError, match="low_watermark"):
+        AutoscalerConfig(low_watermark=1.5)
+
+
+def test_autoscaler_on_serving_engine():
+    jax = pytest.importorskip("jax")
+    from repro.models import get_model
+    from repro.serving import InferenceRequest, ServingEngine
+
+    m = get_model("olmo-1b", tiny=True)
+    eng = ServingEngine(
+        {"olmo-1b": (m, m.init_params(jax.random.PRNGKey(0)))},
+        policy="prema",
+        execute=False,
+        n_devices=1,
+    )
+    scaler = Autoscaler(
+        AutoscalerConfig(
+            min_devices=1, max_devices=3, target_queue_per_device=1.0, window=1.0, cooldown=0.1
+        )
+    ).attach(eng)
+    reqs = [
+        InferenceRequest(
+            rid=i,
+            arch="olmo-1b",
+            prompt=np.ones((1, 6), np.int32),
+            max_new_tokens=4,
+            arrival=0.0,
+        )
+        for i in range(12)
+    ]
+    out = eng.run(reqs)
+    assert len(out) == 12
+    assert any(kind == "up" for _, kind, _ in scaler.decisions)
+    assert eng.cluster.n_devices > 1
+    kinds = {ev.kind for ev in eng.events.log}
+    assert "device_up" in kinds

@@ -143,3 +143,249 @@ def test_cluster_summary_contains_balance_keys():
     for k in ("load_imbalance", "device_fairness", "util_min", "util_max",
               "makespan", "migrations"):
         assert k in s
+
+
+# ---------------------------------------------------------------------------
+# Elastic + heterogeneous clusters
+# ---------------------------------------------------------------------------
+import dataclasses
+
+from repro.core.predictor import relative_speed
+
+SLOW_NPU = dataclasses.replace(PAPER_NPU, name="slow-npu",
+                               freq_hz=PAPER_NPU.freq_hz / 2)
+
+
+def test_relative_speed_identity_and_ordering():
+    assert relative_speed(PAPER_NPU, PAPER_NPU) == 1.0
+    s = relative_speed(SLOW_NPU, PAPER_NPU)
+    assert 0.0 < s < 1.0                      # slower device, speed < 1
+    assert relative_speed(PAPER_NPU, SLOW_NPU) > 1.0
+
+
+def test_heterogeneous_cluster_slow_device_dilates_service():
+    """One task per device, no contention: the slow device's completion
+    stretches by exactly 1/speed of its isolated time."""
+    speed = relative_speed(SLOW_NPU, PAPER_NPU)
+    tasks = [mk_task(0, 3, 0.0, 10e-3), mk_task(1, 3, 0.0, 10e-3)]
+    sim = ClusterSimulator(
+        PAPER_NPU, make_policy("fcfs", False),
+        ClusterConfig(mechanism="dynamic", device_hw=[PAPER_NPU, SLOW_NPU]))
+    done = sim.run(tasks)
+    by_dev = {t.device: t for t in done}
+    assert by_dev[0].completion == pytest.approx(10e-3)
+    assert by_dev[1].completion == pytest.approx(10e-3 / speed)
+
+
+def test_speed_aware_placement_prefers_fast_for_interactive():
+    hi, lo = mk_task(0, 9, 0.0, 5e-3), mk_task(1, 1, 1e-6, 5e-3)
+    sim = ClusterSimulator(
+        PAPER_NPU, make_policy("fcfs", False),
+        ClusterConfig(mechanism="dynamic", placement="speed_aware",
+                      device_hw=[SLOW_NPU, PAPER_NPU]))
+    done = sim.run([hi, lo])
+    hi_done = next(t for t in done if t.tid == 0)
+    assert hi_done.device == 1        # the fast device
+
+
+def _first_dispatch_hook(sim, fn):
+    """Run ``fn(ev)`` on the first dispatch event only."""
+    fired = []
+
+    def hook(ev):
+        if not fired:
+            fired.append(ev)
+            fn(ev)
+    sim.events.on_dispatch(hook)
+    return hook
+
+
+def test_n1_parity_under_scale_up_then_immediate_drain():
+    """A cluster that scales up and immediately drains back to one device
+    must produce the same completion order as the single-NPU simulator
+    (the extra device never takes work)."""
+    tasks = _workload(29, n=12)
+    ref = NPUSimulator(PAPER_NPU, make_policy("prema", True),
+                       SimConfig(mechanism="dynamic")).run(
+                           trace.clone_tasks(tasks))
+    sim = ClusterSimulator(PAPER_NPU, make_policy("prema", True),
+                           ClusterConfig(mechanism="dynamic", n_devices=1))
+
+    def scale_bounce(ev):
+        dev = sim.add_device()
+        sim.remove_device(dev)
+    _first_dispatch_hook(sim, scale_bounce)
+    got = sim.run(trace.clone_tasks(tasks))
+
+    order_ref = [t.tid for t in sorted(ref, key=lambda t: (t.completion, t.tid))]
+    order_got = [t.tid for t in sorted(got, key=lambda t: (t.completion, t.tid))]
+    assert order_got == order_ref
+    assert all(t.device == 0 for t in got)    # the bounced device never ran
+    kinds = [ev.kind for ev in sim.events.log if ev.kind.startswith("device")]
+    assert kinds == ["device_up", "device_drain", "device_down"]
+
+
+def test_device_events_bit_identical_across_same_seed_runs():
+    tasks = _workload(31, n=14)
+    logs = []
+    for _ in range(2):
+        sim = ClusterSimulator(PAPER_NPU, make_policy("prema", True),
+                               ClusterConfig(mechanism="dynamic", n_devices=1,
+                                             provision_latency=1e-3))
+
+        def scale(ev, sim=sim):
+            dev = sim.add_device()
+            sim.remove_device(dev)
+        _first_dispatch_hook(sim, scale)
+        sim.run(trace.clone_tasks(tasks))
+        logs.append([ev for ev in sim.events.log
+                     if ev.kind.startswith("device")])
+    assert logs[0] and logs[0] == logs[1]
+
+
+def test_add_device_mid_run_reduces_makespan():
+    tasks = _workload(37, n=16)
+    _, static = run_cluster(trace.clone_tasks(tasks), n_devices=1)
+    span_static = max(t.completion for t in static)
+
+    sim = ClusterSimulator(PAPER_NPU, make_policy("prema", True),
+                           ClusterConfig(mechanism="dynamic", n_devices=1))
+    _first_dispatch_hook(sim, lambda ev: sim.add_device())
+    elastic = sim.run(trace.clone_tasks(tasks))
+    span_elastic = max(t.completion for t in elastic)
+    assert span_elastic < span_static
+    assert any(t.device == 1 for t in elastic)   # the new device took work
+    assert sim.summary()["n_scale_ups"] == 1.0
+
+
+def test_drain_migrates_resident_and_stops_placement():
+    """Draining a device with a resident must checkpoint-migrate it away
+    (migrate mode) and never place new work there afterwards."""
+    tasks = [mk_task(i, 3, i * 1e-4, 8e-3) for i in range(8)]
+    sim = ClusterSimulator(PAPER_NPU, make_policy("prema", True),
+                           ClusterConfig(mechanism="dynamic", n_devices=2))
+    state = {"drained": False, "t": None}
+
+    def drain_once(ev):
+        if not state["drained"] and ev.kind == "dispatch" and ev.device == 1:
+            state["drained"] = True
+            state["t"] = ev.t
+            sim.drain_device(1)
+    sim.events.subscribe("*", drain_once)
+    done = sim.run(tasks)
+    assert all(t.state == TaskState.DONE for t in done)
+    assert state["drained"]
+    # no dispatch on device 1 after the drain instant
+    later = [ev for ev in sim.events.log
+             if ev.kind == "dispatch" and ev.device == 1
+             and ev.t > state["t"]]
+    assert later == []
+    # the resident left via the checkpoint/migration path
+    assert sim.cluster.n_migrations >= 1
+    assert sim.cluster.devices[1].draining
+
+
+def test_remove_device_waits_for_resident_in_finish_mode():
+    tasks = [mk_task(i, 3, 0.0, 6e-3) for i in range(4)]
+    sim = ClusterSimulator(PAPER_NPU, make_policy("fcfs", False),
+                           ClusterConfig(mechanism="dynamic", n_devices=2,
+                                         drain="finish"))
+    seen = []
+
+    def on_dispatch(ev):
+        if ev.device == 1 and not seen:
+            seen.append(ev)
+            sim.remove_device(1)
+    sim.events.on_dispatch(on_dispatch)
+    done = sim.run(tasks)
+    assert all(t.state == TaskState.DONE for t in done)
+    down = [ev for ev in sim.events.log if ev.kind == "device_down"]
+    assert len(down) == 1
+    # finish mode: the resident completed on device 1 before it went down
+    res = next(t for t in done if t.device == 1)
+    assert down[0].t >= res.completion - 1e-12
+
+
+def test_elastic_capacity_seconds_less_than_fleet_makespan():
+    tasks = _workload(41, n=16)
+    sim = ClusterSimulator(PAPER_NPU, make_policy("prema", True),
+                           ClusterConfig(mechanism="dynamic", n_devices=1))
+
+    def scale(ev):
+        dev = sim.add_device()
+        sim.add_device()
+        sim.remove_device(dev)
+    _first_dispatch_hook(sim, scale)
+    sim.run(trace.clone_tasks(tasks))
+    s = sim.summary()
+    # three devices existed, but not all for the whole run
+    assert s["n_devices"] == 3.0
+    assert s["capacity_seconds"] < 3.0 * s["makespan"]
+    assert 0.0 < s["util_mean"] <= 1.0
+
+
+def test_elastic_api_outside_run_raises():
+    sim = ClusterSimulator(PAPER_NPU, make_policy("prema", True),
+                           ClusterConfig(mechanism="dynamic", n_devices=1))
+    with pytest.raises(RuntimeError, match="during run"):
+        sim.add_device()
+    with pytest.raises(RuntimeError, match="during run"):
+        sim.drain_device(0)
+
+
+def test_device_hw_overrides_n_devices():
+    sim = ClusterSimulator(
+        PAPER_NPU, make_policy("fcfs", False),
+        ClusterConfig(mechanism="dynamic", n_devices=1,
+                      device_hw=[PAPER_NPU, SLOW_NPU, PAPER_NPU]))
+    assert sim.cluster.n_devices == 3
+    speeds = [d.speed for d in sim.cluster.devices]
+    assert speeds[0] == 1.0 and speeds[2] == 1.0 and speeds[1] < 1.0
+
+
+def test_drain_during_restore_window_still_migrates_resident():
+    """Regression: a drain that lands while the resident is inside its
+    restore window (busy_until > now) must still checkpoint-migrate it
+    once the window ends — not silently fall back to finish-mode."""
+    tasks = _workload(43, n=12)
+    sim = ClusterSimulator(PAPER_NPU, make_policy("prema", True),
+                           ClusterConfig(mechanism="dynamic", n_devices=2))
+    state = {"dev": None, "t": None}
+
+    def drain_inside_window(ev):
+        if state["dev"] is not None or ev.kind != "dispatch":
+            return
+        d = sim.cluster.devices[ev.device]
+        if d.busy_until > ev.t:          # restore latency in flight
+            state["dev"], state["t"] = ev.device, ev.t
+            sim.drain_device(ev.device)
+    sim.events.subscribe("*", drain_inside_window)
+    done = sim.run(tasks)
+    assert all(t.state == TaskState.DONE for t in done)
+    assert state["dev"] is not None, "no restore-window dispatch observed"
+    # the resident left: nothing ever completed on the drained device
+    # after the drain instant
+    later = [ev for ev in sim.events.log
+             if ev.kind == "complete" and ev.device == state["dev"]
+             and ev.t > state["t"]]
+    assert later == []
+    assert sim.cluster.n_migrations >= 1
+
+
+def test_provisioning_device_does_not_suppress_preemption():
+    """Regression: while a scale-up is still provisioning, a high-priority
+    arrival must preempt the running batch task exactly as it would on a
+    static cluster — a not-yet-alive device is not a reason to wait."""
+    def run(with_scale_up):
+        sim = ClusterSimulator(
+            PAPER_NPU, make_policy("prema", True),
+            ClusterConfig(mechanism="dynamic", n_devices=1,
+                          provision_latency=0.5))
+        if with_scale_up:
+            _first_dispatch_hook(sim, lambda ev: sim.add_device())
+        done = sim.run([mk_task(0, 1, 0.0, 100e-3), mk_task(1, 9, 1e-3, 2e-3)])
+        return next(t for t in done if t.tid == 1)
+
+    ref, elastic = run(False), run(True)
+    assert elastic.first_service == pytest.approx(ref.first_service)
+    assert elastic.first_service < 10e-3      # preempted in, not queued out

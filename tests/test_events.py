@@ -244,3 +244,53 @@ def test_event_bus_subscribe_unsubscribe():
     bus.emit(Event(t=1.0, kind="complete", tid=9))
     assert seen == [7]
     assert [ev.tid for ev in bus.log] == [7, 8, 9]
+
+
+# ---------------------------------------------------------------------------
+# device lifecycle events (elastic clusters)
+# ---------------------------------------------------------------------------
+
+
+def test_device_event_kinds_and_helpers():
+    bus = EventBus()
+    seen = []
+    bus.subscribe("device_up", lambda ev: seen.append(ev.kind))
+    bus.subscribe("device_down", lambda ev: seen.append(ev.kind))
+    bus.device_up(0.0, 1)
+    bus.device_drain(1.0, 1)
+    bus.device_down(2.0, 1)
+    assert seen == ["device_up", "device_down"]
+    assert [ev.kind for ev in bus.log] == ["device_up", "device_drain", "device_down"]
+    assert all(ev.tid == -1 and ev.device == 1 for ev in bus.log)
+
+
+def test_device_events_round_trip_through_executed_trace(trace):
+    """Capture -> save -> load -> replay must preserve device lifecycle
+    events bit-exactly alongside the task stream."""
+    sim = ClusterSimulator(
+        PAPER_NPU,
+        make_policy("prema", True),
+        ClusterConfig(mechanism="dynamic", n_devices=1),
+    )
+
+    fired = []
+
+    def scale_once(ev):
+        if not fired:
+            fired.append(ev)
+            dev = sim.add_device()
+            sim.remove_device(dev)
+
+    sim.events.on_dispatch(scale_once)
+    sim.run(trace)
+    ref = list(sim.events.log)
+    assert sum(1 for ev in ref if ev.kind == "device_up") == 1
+    assert sum(1 for ev in ref if ev.kind == "device_down") == 1
+
+    buf = io.StringIO()
+    ExecutedTrace.capture(sim).save(buf)
+    buf.seek(0)
+    replayed = ExecutedTrace.load(buf).replay()
+    assert replayed.log == ref
+    # per-task folding ignores the non-task device rows
+    assert all(tid >= 0 for tid in ExecutedTrace.capture(sim).per_task())

@@ -132,3 +132,31 @@ def test_cluster_summary_carries_percentiles():
     a.device = 0
     s = metrics.cluster_summary([a], busy_times=[1.0], makespan=2.0)
     assert "p99_ntt" in s and "util_mean" in s
+
+
+def test_utilization_divides_by_per_device_alive_time():
+    """Regression (elastic clusters): a device alive for only half the
+    makespan and busy the whole time is 100% utilized, not 50%.  The old
+    code divided every device's busy time by the global makespan."""
+    busy = [2.0, 1.0]
+    # device 1 joined at t=1 of a 2s run: alive for 1s, busy for 1s
+    utils = metrics.device_utilization(busy, makespan=2.0,
+                                       capacity_seconds=[2.0, 1.0])
+    assert utils == pytest.approx([1.0, 1.0])
+    # legacy call (no capacity): both divided by the makespan
+    assert metrics.device_utilization(busy, makespan=2.0) == \
+        pytest.approx([1.0, 0.5])
+
+
+def test_cluster_summary_capacity_seconds():
+    a = done_task(0, 3, 1.0, 2.0)
+    a.device = 0
+    s = metrics.cluster_summary([a], busy_times=[1.0, 0.5], makespan=2.0,
+                                capacity_seconds=[2.0, 0.5])
+    assert s["capacity_seconds"] == pytest.approx(2.5)
+    assert s["util_max"] == pytest.approx(1.0)   # late device fully busy
+    assert s["util_min"] == pytest.approx(0.5)
+    # without capacity info the total defaults to n_devices * makespan
+    s2 = metrics.cluster_summary([a], busy_times=[1.0, 0.5], makespan=2.0)
+    assert s2["capacity_seconds"] == pytest.approx(4.0)
+    assert s2["util_min"] == pytest.approx(0.25)
