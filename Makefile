@@ -8,6 +8,9 @@
 #   make fmt              - ruff-format the FORMAT_PATHS file set in place
 #   make bench-smoke      - CI-sized benchmarks -> $(BENCH_OUT)/*.json,
 #                           validated by benchmarks/check_smoke.py
+#   make bench-simperf    - full event-core throughput matrix (simulated
+#                           tasks/sec + peak RSS, fast vs frozen legacy;
+#                           the smoke subset rides in bench-smoke)
 #   make bench-regression - bench-smoke + compare against the committed
 #                           baselines (fails on >10% SLA/latency drift)
 #   make bench-baseline   - refresh benchmarks/baselines/*.json (commit the
@@ -31,7 +34,7 @@ FORMAT_PATHS = src/repro/core/events.py src/repro/core/autoscaler.py \
     tests/test_events.py tests/test_admission.py tests/test_autoscaler.py
 
 .PHONY: test test-fast lint fmt bench-smoke bench-regression \
-    bench-baseline bench bench-full
+    bench-baseline bench bench-full bench-simperf
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -57,25 +60,32 @@ define run_smoke_sweeps
 	    --out $(1)/overload_sweep.json
 	$(PYTHON) benchmarks/autoscale_sweep.py --smoke \
 	    --out $(1)/autoscale_sweep.json
+	$(PYTHON) benchmarks/simperf.py --smoke \
+	    --out $(1)/simperf.json
 endef
 
 bench-smoke:
 	$(call run_smoke_sweeps,$(BENCH_OUT))
 	$(PYTHON) benchmarks/check_smoke.py $(BENCH_OUT)/cluster_scaling.json \
 	    $(BENCH_OUT)/load_sweep.json $(BENCH_OUT)/overload_sweep.json \
-	    $(BENCH_OUT)/autoscale_sweep.json
+	    $(BENCH_OUT)/autoscale_sweep.json $(BENCH_OUT)/simperf.json
 
 bench-regression:
 	$(call run_smoke_sweeps,$(BENCH_OUT))
 	$(PYTHON) benchmarks/check_smoke.py $(BENCH_OUT)/cluster_scaling.json \
 	    $(BENCH_OUT)/load_sweep.json $(BENCH_OUT)/overload_sweep.json \
-	    $(BENCH_OUT)/autoscale_sweep.json --baseline $(BASELINE_DIR)
+	    $(BENCH_OUT)/autoscale_sweep.json $(BENCH_OUT)/simperf.json \
+	    --baseline $(BASELINE_DIR)
 
 bench-baseline:
 	$(call run_smoke_sweeps,$(BASELINE_DIR))
 	$(PYTHON) benchmarks/check_smoke.py $(BASELINE_DIR)/cluster_scaling.json \
 	    $(BASELINE_DIR)/load_sweep.json $(BASELINE_DIR)/overload_sweep.json \
-	    $(BASELINE_DIR)/autoscale_sweep.json
+	    $(BASELINE_DIR)/autoscale_sweep.json $(BASELINE_DIR)/simperf.json
+
+bench-simperf:
+	mkdir -p $(BENCH_OUT)
+	$(PYTHON) benchmarks/simperf.py --out $(BENCH_OUT)/simperf_full.json
 
 bench:
 	$(PYTHON) benchmarks/run.py
@@ -88,3 +98,4 @@ bench-full:
 	$(PYTHON) benchmarks/load_sweep.py --out $(BENCH_OUT)/load_sweep.json
 	$(PYTHON) benchmarks/overload_sweep.py --out $(BENCH_OUT)/overload_sweep.json
 	$(PYTHON) benchmarks/autoscale_sweep.py --out $(BENCH_OUT)/autoscale_sweep.json
+	$(PYTHON) benchmarks/simperf.py --out $(BENCH_OUT)/simperf_full.json

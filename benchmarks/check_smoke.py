@@ -16,7 +16,14 @@ claim*:
   satisfaction >= 90 % at every swept load;
 * ``autoscale_sweep``: on diurnal traffic, autoscaled PREMA holds the
   interactive tenant's SLA >= 90 % while consuming <= 60 % of the
-  static-max fleet's device-seconds.
+  static-max fleet's device-seconds;
+* ``simperf``: the fast/legacy parity cell is bit-exact, and against a
+  baseline the machine-independent fast-over-legacy speedup ratio may
+  not regress by more than 35 % (sub-second smoke cells are timer-noisy;
+  an absolute floor separately requires fast >= legacy) nor any fast
+  cell's peak RSS grow by
+  more than 10 % (absolute tasks/sec is machine-dependent and is never
+  compared).
 
 With ``--baseline DIR`` the script additionally compares every metric it
 can parse out of the rows against the committed baseline JSON of the
@@ -45,6 +52,9 @@ TAIL_BLOWUP_MIN = 2.0       # open-loop FCFS p99 NTT growth past the knee
 SLA_HI_MIN = 0.9
 AUTOSCALE_CAPACITY_MAX = 0.6   # autoscaled device-seconds vs static-max
 REGRESSION_TOL = 0.10          # --baseline: relative drift allowed
+SIMPERF_SPEEDUP_TOL = 0.35     # simperf: allowed speedup-ratio regression
+SIMPERF_SPEEDUP_FLOOR = 1.0    # simperf: fast must never lose to legacy
+SIMPERF_RSS_TOL = 0.10         # simperf: allowed peak-RSS growth
 
 
 class GateError(AssertionError):
@@ -168,11 +178,78 @@ def check_autoscale_sweep(payload: Dict) -> None:
                "single-device interactive SLA")
 
 
+def check_simperf(payload: Dict) -> None:
+    parity = [r for r in payload["rows"] if ".parity." in r["name"]]
+    _check(bool(parity), "simperf: fast-vs-legacy parity row missing")
+    _check(all(r["derived"] == "exact" for r in parity),
+           f"simperf: fast path diverged from the frozen core: {parity}")
+    cells = payload.get("extra", {}).get("cells", [])
+    _check(bool(cells), "simperf: structured cells missing")
+    for c in cells:
+        _check(c.get("tasks_per_sec", 0) > 0 and c.get("peak_rss_mb", 0) > 0,
+               f"simperf: degenerate cell {c!r}")
+    speedups = payload.get("extra", {}).get("speedups", [])
+    _check(bool(speedups), "simperf: no fast/legacy speedup pairs measured")
+    for p in speedups:
+        _check(p["speedup"] >= SIMPERF_SPEEDUP_FLOOR,
+               f"simperf: fast path lost to the frozen core: {p!r}")
+
+
+def _simperf_cells(payload: Dict) -> Dict[tuple, Dict]:
+    return {(c["impl"], c["n"], c["devices"], c["policy"]): c
+            for c in payload.get("extra", {}).get("cells", [])}
+
+
+def compare_simperf_baseline(payload: Dict, base: Dict) -> List[str]:
+    """The simperf regression gate.  Absolute tasks/sec depends on the CI
+    machine, so the gate compares the fast/legacy speedup *ratio* (both
+    implementations measured in the same run on the same machine) and the
+    fast cells' peak RSS."""
+    failures: List[str] = []
+    base_sp = {(p["n"], p["devices"], p["policy"]): p["speedup"]
+               for p in base.get("extra", {}).get("speedups", [])}
+    cur_sp = {(p["n"], p["devices"], p["policy"]): p["speedup"]
+              for p in payload.get("extra", {}).get("speedups", [])}
+    for key in sorted(base_sp):
+        if key not in cur_sp:
+            failures.append(f"simperf: speedup pair disappeared: {key}")
+            continue
+        floor = base_sp[key] * (1.0 - SIMPERF_SPEEDUP_TOL)
+        if cur_sp[key] < floor:
+            failures.append(
+                f"simperf: speedup at n={key[0]} d={key[1]} {key[2]} "
+                f"regressed beyond {SIMPERF_SPEEDUP_TOL:.0%}: "
+                f"{base_sp[key]:.2f}x -> {cur_sp[key]:.2f}x")
+    cur_cells, base_cells = _simperf_cells(payload), _simperf_cells(base)
+    for key in sorted(base_cells):
+        if key[0] != "fast":
+            continue
+        if key not in cur_cells:
+            failures.append(f"simperf: cell disappeared: {key}")
+            continue
+        ceil = base_cells[key]["peak_rss_mb"] * (1.0 + SIMPERF_RSS_TOL)
+        if cur_cells[key]["peak_rss_mb"] > ceil:
+            failures.append(
+                f"simperf: peak RSS at n={key[1]} d={key[2]} {key[3]} "
+                f"grew beyond {SIMPERF_RSS_TOL:.0%}: "
+                f"{base_cells[key]['peak_rss_mb']:.1f} MB -> "
+                f"{cur_cells[key]['peak_rss_mb']:.1f} MB")
+    return failures
+
+
 CHECKS = {
     "cluster_scaling": check_cluster_scaling,
     "load_sweep": check_load_sweep,
     "overload_sweep": check_overload_sweep,
     "autoscale_sweep": check_autoscale_sweep,
+    "simperf": check_simperf,
+}
+
+# Benchmarks whose baseline comparison replaces the generic directional
+# metric drift check (their rows carry machine-dependent wall-clock
+# readings the generic gate must not compare).
+BASELINE_CHECKS = {
+    "simperf": compare_simperf_baseline,
 }
 
 
@@ -292,7 +369,11 @@ def main() -> None:
                         f"no committed baseline {bpath}; run "
                         "`make bench-baseline` and commit the result"
                     ) from None
-                regressions = compare_to_baseline(payload, base)
+                baseline_check = BASELINE_CHECKS.get(name)
+                if baseline_check is not None:
+                    regressions = baseline_check(payload, base)
+                else:
+                    regressions = compare_to_baseline(payload, base)
                 if regressions:
                     raise GateError("regression vs baseline:\n  " +
                                     "\n  ".join(regressions))

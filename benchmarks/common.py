@@ -7,8 +7,11 @@ averaged over ``N_RUNS`` workloads per configuration.
 """
 from __future__ import annotations
 
+import contextlib
+import cProfile
 import json
 import os
+import sys
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -79,6 +82,28 @@ def sweep(configs: List[Tuple[str, str, bool, str]],
         agg["us_per_call"] = wall
         out[label] = agg
     return out
+
+
+@contextlib.contextmanager
+def maybe_profile(enabled: bool, out: Optional[str], benchmark: str):
+    """The ``--profile`` contract shared by run.py and every standalone
+    entry point: when enabled, the wrapped block runs under cProfile and
+    the stats land next to ``--out`` (``<out-stem>.pstats``), or as
+    ``<benchmark>.pstats`` in the working directory when no ``--out`` was
+    given.  Inspect with ``python -m pstats`` or snakeviz."""
+    if not enabled:
+        yield
+        return
+    prof = cProfile.Profile()
+    prof.enable()
+    try:
+        yield
+    finally:
+        prof.disable()
+        path = (os.path.splitext(os.path.abspath(out))[0] + ".pstats"
+                if out else f"{benchmark}.pstats")
+        prof.dump_stats(path)
+        print(f"profile written: {path}", file=sys.stderr)
 
 
 def emit(rows: List[Tuple[str, float, str]]):

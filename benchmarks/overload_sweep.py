@@ -225,11 +225,14 @@ def main() -> None:
                     help="re-base every benchmark RNG stream")
     ap.add_argument("--out", default=None, metavar="PATH",
                     help="also write machine-readable JSON results")
+    ap.add_argument("--profile", action="store_true",
+                    help="run under cProfile; stats land next to --out")
     args = ap.parse_args()
     common.set_seed(args.seed)
     print("name,us_per_call,derived")
     extra: Dict = {}
-    rows = run(smoke=args.smoke, collect=extra)
+    with common.maybe_profile(args.profile, args.out, "overload_sweep"):
+        rows = run(smoke=args.smoke, collect=extra)
     common.emit(rows)
     if args.out:
         common.write_json(args.out, "overload_sweep", rows, extra=extra)

@@ -52,6 +52,9 @@ def main() -> None:
                     help="run only modules whose name contains this")
     ap.add_argument("--seed", type=int, default=0,
                     help="re-base every benchmark RNG stream")
+    ap.add_argument("--profile", action="store_true",
+                    help="run under cProfile; stats land in "
+                         "benchmarks-<module>.pstats per module")
     args = ap.parse_args()
     common.set_seed(args.seed)
     print("name,us_per_call,derived")
@@ -59,7 +62,8 @@ def main() -> None:
         if args.only and args.only not in name:
             continue
         t0 = time.perf_counter()
-        rows = mod.run()
+        with common.maybe_profile(args.profile, None, f"benchmarks-{name}"):
+            rows = mod.run()
         wall = (time.perf_counter() - t0) * 1e6
         common.emit(rows)
         print(f"{name}.total,{wall:.0f},ok")

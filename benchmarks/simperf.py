@@ -1,0 +1,252 @@
+"""Event-core throughput benchmark: simulated-tasks/sec and peak RSS.
+
+This is the performance gate for the million-task event core: it measures
+the cluster simulator's *simulation throughput* (completed simulated
+tasks per wall-clock second) and peak RSS over a matrix of trace sizes,
+device counts, and policies, on a **diurnal** workload — piecewise-
+constant arrival rate cycling trough → overload peak → trough, the shape
+that builds real backlog.  Sustained backlog is exactly where the
+historical list-scanning core went quadratic (every wake-up rescanned the
+whole ready queue), so each cell also runs the frozen pre-rewrite
+implementation (``repro.core._legacy_cluster``) where that is affordable
+and reports the machine-independent **speedup ratio** fast/legacy that
+``benchmarks/check_smoke.py`` gates on (absolute tasks/sec varies with CI
+hardware; the ratio does not).
+
+Every cell runs in its own subprocess so ``ru_maxrss`` is a true per-cell
+peak; timing cells run with ``EventBus.keep_log=False`` (the streaming
+configuration: peak RSS stays flat in event count).  A parity cell runs
+both implementations on one trace in a single process and asserts the
+event logs and per-task metrics are **bit-identical** — the same contract
+tests/test_fastpath_parity.py fuzzes.
+
+Workload note: tasks are synthetic 8-template DNNs (shared per-template
+node arrays).  The event core never looks inside layers — scheduling cost
+depends only on queue depth and event count — so templates keep task
+construction out of the measurement without changing what is measured.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/simperf.py --smoke --out simperf.json
+    PYTHONPATH=src python benchmarks/simperf.py            # full matrix
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import subprocess
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import numpy as np  # noqa: E402
+
+from benchmarks import common  # noqa: E402
+
+# Diurnal profile: load multiplier per segment of each cycle (mean ~1.0,
+# overload peak 1.6x capacity).  Each segment gets an equal share of the
+# trace's tasks at its own Poisson rate.
+DIURNAL_PROFILE = (0.4, 0.6, 1.0, 1.4, 1.6, 1.4, 1.0, 0.6)
+N_CYCLES = 4
+
+N_TEMPLATES = 8
+NODES_PER_TASK = 6
+
+# (n_tasks, n_devices) cells per implementation.  The legacy core is
+# quadratic under backlog, so it only runs where that stays affordable:
+# the 1e5x16 cell is the headline speedup measurement; 1e6 would take
+# hours and adds nothing the ratio has not already shown.
+FULL_FAST_CELLS = ((10_000, 1), (10_000, 16), (10_000, 100),
+                   (100_000, 16), (100_000, 100), (1_000_000, 100))
+FULL_LEGACY_CELLS = ((10_000, 16), (10_000, 100), (100_000, 16))
+SMOKE_FAST_CELLS = ((10_000, 16),)
+SMOKE_LEGACY_CELLS = ((10_000, 16),)
+POLICIES = ("fcfs", "prema")
+PARITY_CELL = (2_000, 4, "prema")
+
+
+def make_diurnal_tasks(n: int, n_dev: int, seed: int) -> List:
+    """n tasks over N_CYCLES diurnal cycles; per-template node arrays
+    (and the derived cumulative-progress array) are shared across all
+    tasks of a template, so a million-task trace costs per-task Python
+    objects only, not per-task numpy arrays."""
+    from repro.core.task import Task
+
+    rng = np.random.default_rng(seed)
+    node_times = [np.full(NODES_PER_TASK, (1.0 + i) * 1e-3 / NODES_PER_TASK)
+                  for i in range(N_TEMPLATES)]
+    out_bytes = np.full(NODES_PER_TASK, 1 << 18, dtype=np.int64)
+    cums = [np.concatenate([[0.0], np.cumsum(nt)]) for nt in node_times]
+    totals = [float(nt.sum()) for nt in node_times]
+    mean_svc = float(np.mean(totals))
+
+    loads = np.tile(np.asarray(DIURNAL_PROFILE), N_CYCLES)
+    per_seg = max(1, n // len(loads))
+    arr_segs, t = [], 0.0
+    for ld in loads:
+        rate = n_dev / mean_svc * ld
+        seg = t + np.cumsum(rng.exponential(1.0 / rate, per_seg))
+        arr_segs.append(seg)
+        t = seg[-1]
+    arrivals = np.concatenate(arr_segs)[:n]
+    tidx = rng.integers(0, N_TEMPLATES, len(arrivals))
+    prio = rng.choice([1, 3, 9], len(arrivals))
+    tasks = []
+    for i in range(len(arrivals)):
+        k = int(tidx[i])
+        task = Task(tid=i, model=f"m{k}", batch=1,
+                    arrival=float(arrivals[i]), priority=int(prio[i]),
+                    node_times=node_times[k], node_out_bytes=out_bytes,
+                    predicted_total=totals[k] * 1.05)
+        task._cum = cums[k]      # drop the per-task copy __post_init__ built
+        tasks.append(task)
+    return tasks
+
+
+def _build(impl: str, policy: str, n_dev: int):
+    from repro.core.cluster import ClusterConfig, ClusterSimulator
+    from repro.core.scheduler import make_policy
+    from repro.core._legacy_cluster import LegacyClusterSimulator
+    from repro.hw import PAPER_NPU
+
+    cfg = ClusterConfig(n_devices=n_dev)
+    if impl == "fast":
+        return ClusterSimulator(PAPER_NPU, make_policy(policy, True), cfg)
+    if impl == "legacy":
+        return LegacyClusterSimulator(PAPER_NPU, policy, cfg,
+                                      preemptive=True)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def run_cell(impl: str, n: int, n_dev: int, policy: str, seed: int) -> Dict:
+    """One timing measurement (meant to run in a fresh subprocess so
+    ru_maxrss is this cell's own peak).  Streaming configuration: the
+    event log is off, as a million-task caller would run it."""
+    tasks = make_diurnal_tasks(n, n_dev, seed)
+    sim = _build(impl, policy, n_dev)
+    sim.events.keep_log = False
+    t0 = time.perf_counter()
+    done = sim.run(tasks)
+    wall = time.perf_counter() - t0
+    rss_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return {"impl": impl, "n": n, "devices": n_dev, "policy": policy,
+            "wall_s": wall, "tasks_per_sec": len(done) / wall,
+            "peak_rss_mb": rss_kb / 1024.0, "n_tasks": len(done)}
+
+
+def run_parity(n: int, n_dev: int, policy: str, seed: int) -> Dict:
+    """Fast vs frozen-legacy on one trace: event logs and per-task
+    metrics must match bit-for-bit."""
+    def fingerprint(tasks):
+        return [(t.tid, t.state.name, t.completion, t.executed, t.tokens,
+                 t.n_preemptions, t.n_kills, t.checkpoint_overhead)
+                for t in tasks]
+
+    runs = {}
+    for impl in ("fast", "legacy"):
+        sim = _build(impl, policy, n_dev)
+        done = sim.run(make_diurnal_tasks(n, n_dev, seed))
+        runs[impl] = (fingerprint(done), list(sim.events.log))
+    exact = runs["fast"] == runs["legacy"]
+    return {"kind": "parity", "n": n, "devices": n_dev, "policy": policy,
+            "exact": exact, "n_events": len(runs["fast"][1])}
+
+
+# ---------------------------------------------------------------------------
+# Orchestration: one subprocess per cell
+# ---------------------------------------------------------------------------
+
+def _spawn(spec_args: List[str], seed: int) -> Dict:
+    cmd = [sys.executable, os.path.abspath(__file__),
+           "--seed", str(seed)] + spec_args
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    if proc.returncode != 0:
+        raise RuntimeError(f"simperf cell {spec_args} failed:\n{proc.stderr}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def run(smoke: bool = False, seed: int = 0,
+        collect: Optional[Dict] = None) -> List[Tuple[str, float, str]]:
+    fast_cells = SMOKE_FAST_CELLS if smoke else FULL_FAST_CELLS
+    legacy_cells = SMOKE_LEGACY_CELLS if smoke else FULL_LEGACY_CELLS
+    cells: List[Dict] = []
+    rows: List[Tuple[str, float, str]] = []
+    for policy in POLICIES:
+        for n, dev in fast_cells:
+            cells.append(_spawn(
+                ["--cell", f"fast:{n}:{dev}:{policy}"], seed))
+        for n, dev in legacy_cells:
+            cells.append(_spawn(
+                ["--cell", f"legacy:{n}:{dev}:{policy}"], seed))
+    by_key = {(c["impl"], c["n"], c["devices"], c["policy"]): c
+              for c in cells}
+    for c in cells:
+        rows.append((
+            f"simperf.{c['policy']}.n{c['n']}.d{c['devices']}.{c['impl']}",
+            c["wall_s"] * 1e6,
+            f"tps={c['tasks_per_sec']:.0f};rss_mb={c['peak_rss_mb']:.1f}"))
+    # machine-independent speedups for every (n, dev, policy) with both
+    # implementations measured in this same run
+    pairs = []
+    for (impl, n, dev, pol), c in sorted(by_key.items()):
+        if impl != "fast" or ("legacy", n, dev, pol) not in by_key:
+            continue
+        leg = by_key[("legacy", n, dev, pol)]
+        ratio = c["tasks_per_sec"] / leg["tasks_per_sec"]
+        pairs.append({"n": n, "devices": dev, "policy": pol,
+                      "speedup": ratio})
+        rows.append((f"simperf.{pol}.n{n}.d{dev}.speedup", 0.0,
+                     f"speedup={ratio:.2f}"))
+    pn, pdev, ppol = PARITY_CELL
+    par = _spawn(["--parity-cell", f"{pn}:{pdev}:{ppol}"], seed)
+    rows.append((f"simperf.parity.n{pn}.d{pdev}.{ppol}", 0.0,
+                 "exact" if par["exact"] else "MISMATCH"))
+    if collect is not None:
+        collect["cells"] = cells
+        collect["speedups"] = pairs
+        collect["parity"] = par
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized subset (1e4 tasks x 16 devices)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="re-base the workload RNG stream")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also write machine-readable JSON results")
+    ap.add_argument("--profile", action="store_true",
+                    help="run under cProfile; stats land next to --out")
+    ap.add_argument("--cell", default=None, metavar="IMPL:N:DEV:POLICY",
+                    help=argparse.SUPPRESS)     # subprocess entry
+    ap.add_argument("--parity-cell", default=None, metavar="N:DEV:POLICY",
+                    help=argparse.SUPPRESS)     # subprocess entry
+    args = ap.parse_args()
+    common.set_seed(args.seed)
+    if args.cell:
+        impl, n, dev, policy = args.cell.split(":")
+        print(json.dumps(run_cell(impl, int(n), int(dev), policy,
+                                  args.seed)))
+        return
+    if args.parity_cell:
+        n, dev, policy = args.parity_cell.split(":")
+        print(json.dumps(run_parity(int(n), int(dev), policy, args.seed)))
+        return
+    print("name,us_per_call,derived")
+    extra: Dict = {}
+    with common.maybe_profile(args.profile, args.out, "simperf"):
+        rows = run(smoke=args.smoke, seed=args.seed, collect=extra)
+    common.emit(rows)
+    if args.out:
+        common.write_json(args.out, "simperf", rows, extra=extra)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,738 @@
+"""FROZEN pre-fast-path copy of the cluster scheduling core (PR-6 state).
+
+Reference implementation for the event-core performance rewrite: the
+restructured ``ClusterSimulator`` (slotted ready queue, incremental device
+tracking, vectorized token accounting — see ``core/cluster.py`` /
+``core/ready_queue.py``) must produce bit-identical event logs and
+per-task metrics to this frozen loop for every policy × mechanism ×
+placement × elasticity scenario.  ``tests/test_fastpath_parity.py``
+enforces that with hypothesis-generated traces, and
+``benchmarks/simperf.py --impl legacy`` measures the speedup against it.
+
+Like ``tests/_legacy_simulator.py`` (the PR-1 single-NPU freeze), this
+module must NOT be modified when changing the live scheduler — that is
+the point of it.  Decision logic (policy selection, token accrual,
+may_preempt, Algorithm-3 mechanism choice, KILL progress guarantee, the
+victim scan) is copied here verbatim; shared *data carriers* (Task,
+EventBus, HardwareModel, SimConfig) and input derivations
+(``predictor.relative_speed``) are reused live, because both paths must
+consume identical inputs for the comparison to mean anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import events as event_hooks
+from repro.core.events import EventBus
+from repro.core.predictor import relative_speed
+from repro.core.preemption import Mechanism
+from repro.core.simulator import SimConfig
+from repro.core.task import PRIORITY_LEVELS, Task, TaskState
+from repro.hw import HardwareModel
+
+SCHED_QUANTUM = 0.25e-3
+TOKEN_LEVELS = PRIORITY_LEVELS
+INTERACTIVE_PRIORITY = 9
+
+
+# ---------------------------------------------------------------------------
+# Frozen preemption-cost model + Algorithm 3 (pre-PR core/preemption.py)
+# ---------------------------------------------------------------------------
+
+def _checkpoint_latency(task: Task, hw: HardwareModel) -> float:
+    return task.checkpoint_bytes(hw.vmem_bytes) / hw.hbm_bw
+
+
+def _restore_latency(task: Task, hw: HardwareModel) -> float:
+    return task.checkpoint_bytes(hw.vmem_bytes) / hw.hbm_bw
+
+
+def _migration_latency(task: Task, hw: HardwareModel) -> float:
+    bw = hw.ici_bw * max(hw.ici_links, 1) if hw.ici_bw > 0 else hw.hbm_bw
+    return task.checkpoint_bytes(hw.vmem_bytes) / bw
+
+
+def _select_mechanism(running: Task, candidate: Task) -> Mechanism:
+    deg_current = candidate.predicted_remaining / max(running.predicted_total,
+                                                      1e-12)
+    deg_candidate = running.predicted_remaining / max(candidate.predicted_total,
+                                                      1e-12)
+    if deg_current > deg_candidate:
+        return Mechanism.DRAIN
+    return Mechanism.CHECKPOINT
+
+
+def _tile_roundup(task: Task, elapsed: float) -> float:
+    tt = getattr(task, "node_tile_times", None)
+    if tt is None:
+        return 0.0
+    node = task.current_node()
+    if node >= task.total_nodes:
+        return 0.0
+    q = float(tt[node])
+    if q <= 0:
+        return 0.0
+    offset = (task.executed + elapsed) - float(task._cum[node])
+    rem = offset % q
+    return 0.0 if rem < 1e-12 else (q - rem)
+
+
+# ---------------------------------------------------------------------------
+# Frozen list-based policies (pre-PR core/scheduler.py)
+# ---------------------------------------------------------------------------
+
+def _accrue_tokens(ready: Sequence[Task], now: float) -> None:
+    for t in ready:
+        idle = max(0.0, now - t.last_wake)
+        slowdown_norm = idle / max(t.predicted_total, 1e-9)
+        t.tokens += t.priority * slowdown_norm
+        t.last_wake = now
+
+
+def _token_threshold(ready: Sequence[Task]) -> float:
+    mx = max(t.tokens for t in ready)
+    thr = TOKEN_LEVELS[0]
+    for lvl in TOKEN_LEVELS:
+        if mx >= lvl:
+            thr = lvl
+    return float(thr)
+
+
+class _LegacyPolicy:
+    name = "base"
+    preemptive = False
+
+    def __init__(self, preemptive: bool = False):
+        self.preemptive = preemptive
+
+    def select(self, ready, now, running):
+        raise NotImplementedError
+
+    def on_wake(self, ready, now):
+        pass
+
+    def may_preempt(self, running, cand, dynamic_mech):
+        return False
+
+    def reset(self):
+        pass
+
+
+class _FCFS(_LegacyPolicy):
+    name = "fcfs"
+
+    def select(self, ready, now, running):
+        return min(ready, key=lambda t: (t.arrival, t.tid)) if ready else None
+
+    def may_preempt(self, running, cand, dynamic_mech):
+        return cand.arrival < running.arrival
+
+
+class _RoundRobin(_LegacyPolicy):
+    name = "rrb"
+
+    def __init__(self, preemptive: bool = False):
+        super().__init__(preemptive)
+        self._last_tid = -1
+
+    def select(self, ready, now, running):
+        if not ready:
+            return None
+        order = sorted(ready, key=lambda t: t.tid)
+        for t in order:
+            if t.tid > self._last_tid:
+                self._last_tid = t.tid
+                return t
+        self._last_tid = order[0].tid
+        return order[0]
+
+    def may_preempt(self, running, cand, dynamic_mech):
+        return True
+
+    def reset(self):
+        self._last_tid = -1
+
+
+class _HPF(_LegacyPolicy):
+    name = "hpf"
+
+    def select(self, ready, now, running):
+        if not ready:
+            return None
+        return min(ready, key=lambda t: (-t.priority, t.arrival, t.tid))
+
+    def may_preempt(self, running, cand, dynamic_mech):
+        return cand.priority > running.priority
+
+
+class _SJF(_LegacyPolicy):
+    name = "sjf"
+
+    def select(self, ready, now, running):
+        if not ready:
+            return None
+        return min(ready, key=lambda t: (t.predicted_remaining, t.tid))
+
+    def may_preempt(self, running, cand, dynamic_mech):
+        return cand.predicted_remaining < running.predicted_remaining
+
+
+class _TokenFCFS(_LegacyPolicy):
+    name = "token"
+
+    def on_wake(self, ready, now):
+        _accrue_tokens(ready, now)
+
+    def select(self, ready, now, running):
+        if not ready:
+            return None
+        thr = _token_threshold(ready)
+        cands = [t for t in ready if t.tokens >= thr]
+        return min(cands, key=lambda t: (t.arrival, t.tid))
+
+    def may_preempt(self, running, cand, dynamic_mech):
+        return cand.tokens > running.tokens
+
+
+class _PREMA(_LegacyPolicy):
+    name = "prema"
+
+    def on_wake(self, ready, now):
+        _accrue_tokens(ready, now)
+
+    def select(self, ready, now, running):
+        if not ready:
+            return None
+        thr = _token_threshold(ready)
+        cands = [t for t in ready if t.tokens >= thr]
+        return min(cands, key=lambda t: (t.predicted_remaining, t.tid))
+
+    def may_preempt(self, running, cand, dynamic_mech):
+        if dynamic_mech:
+            return True
+        return cand.predicted_remaining < running.predicted_remaining
+
+
+_POLICIES = {"fcfs": _FCFS, "rrb": _RoundRobin, "hpf": _HPF, "sjf": _SJF,
+             "token": _TokenFCFS, "prema": _PREMA}
+
+
+def make_legacy_policy(name: str, preemptive: bool = False) -> _LegacyPolicy:
+    return _POLICIES[name.lower()](preemptive)
+
+
+# ---------------------------------------------------------------------------
+# Frozen arbiter (pre-PR core/arbiter.py decision sequence)
+# ---------------------------------------------------------------------------
+
+class _Action:
+    IDLE = "idle"
+    START = "start"
+    BUSY = "busy"
+    KEEP = "keep"
+    DRAIN = "drain"
+    DEFER = "defer"
+    PREEMPT = "preempt"
+
+
+@dataclasses.dataclass(frozen=True)
+class _Decision:
+    action: str
+    cand: Optional[Task] = None
+    mechanism: Optional[Mechanism] = None
+
+
+class _LegacyArbiter:
+    def __init__(self, policy: _LegacyPolicy, cfg: SimConfig,
+                 bus: Optional[EventBus] = None):
+        self.policy = policy
+        self.cfg = cfg
+        self.events = bus if bus is not None else EventBus()
+
+    def reset(self):
+        self.policy.reset()
+
+    def wake(self, ready, now):
+        self.policy.on_wake(ready, now)
+
+    def pick(self, ready, now, running):
+        return self.policy.select(ready, now, running)
+
+    def kill_allowed(self, running: Task) -> bool:
+        early = running.executed <= self.cfg.kill_early_frac * max(
+            running.predicted_total, 1e-12)
+        return early and running.n_kills < self.cfg.max_kills
+
+    def arbitrate(self, running: Task, cand: Task) -> _Decision:
+        dynamic = self.cfg.mechanism == "dynamic"
+        if not self.policy.may_preempt(running, cand, dynamic):
+            return _Decision(_Action.KEEP, cand)
+        if dynamic:
+            mech = _select_mechanism(running, cand)
+        else:
+            mech = Mechanism(self.cfg.mechanism)
+        if mech is Mechanism.DRAIN:
+            return _Decision(_Action.DRAIN, cand)
+        if mech is Mechanism.KILL and not self.kill_allowed(running):
+            return _Decision(_Action.DEFER, cand)
+        return _Decision(_Action.PREEMPT, cand, mech)
+
+
+def _legacy_remaining_cost(task: Task, speed: float = 1.0) -> float:
+    return task.predicted_remaining / max(speed, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Frozen device/cluster state + placements (pre-PR core/cluster.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _DeviceState:
+    dev: int
+    hw: Optional[HardwareModel] = None
+    speed: float = 1.0
+    running: Optional[Task] = None
+    run_start: float = 0.0
+    run_gen: int = 0
+    busy_until: float = 0.0
+    busy_time: float = 0.0
+    last_model: Optional[str] = None
+    added_at: float = 0.0
+    alive_since: float = 0.0
+    alive_until: Optional[float] = None
+    draining: bool = False
+    remove_pending: bool = False
+
+    @property
+    def alive(self) -> bool:
+        return self.alive_until is None
+
+    def schedulable(self, now: float) -> bool:
+        return (self.alive and not self.draining
+                and now + 1e-15 >= self.alive_since)
+
+
+def _alive_seconds(d: _DeviceState, now: float) -> float:
+    return max(now - d.alive_since, 1e-12)
+
+
+def _least_loaded(free: List[_DeviceState], now: float) -> _DeviceState:
+    return min(free, key=lambda d: (d.busy_time / _alive_seconds(d, now),
+                                    d.dev))
+
+
+def _place(name: str, task: Task, free: List[_DeviceState],
+           rng: np.random.Generator, now: float) -> _DeviceState:
+    if name == "least_loaded":
+        return _least_loaded(free, now)
+    if name == "affinity":
+        if task.restore_pending and task.device is not None:
+            home = [d for d in free if d.dev == task.device]
+            if home:
+                return home[0]
+        warm = [d for d in free if d.last_model == task.model]
+        if warm:
+            return _least_loaded(warm, now)
+        return _least_loaded(free, now)
+    if name == "speed_aware":
+        if task.priority >= INTERACTIVE_PRIORITY:
+            top = max(d.speed for d in free)
+            return _least_loaded([d for d in free if d.speed == top], now)
+        return _least_loaded(free, now)
+    if name == "random":
+        return free[int(rng.integers(len(free)))]
+    raise KeyError(f"unknown placement {name!r}")
+
+
+class _LegacyCluster:
+    def __init__(self, n_devices: int, placement: str = "least_loaded",
+                 seed: int = 0, base_hw: Optional[HardwareModel] = None,
+                 device_hw: Optional[Sequence[HardwareModel]] = None):
+        if device_hw is not None and len(device_hw) > 0:
+            n_devices = len(device_hw)
+        if n_devices < 1:
+            raise ValueError("n_devices must be >= 1")
+        self.base_hw = base_hw
+        self.devices: List[_DeviceState] = []
+        for d in range(n_devices):
+            hw = device_hw[d] if device_hw else None
+            self.devices.append(self._make_device(d, hw))
+        self.placement_name = placement
+        self.rng = np.random.default_rng(seed)
+        self.n_migrations = 0
+        self.n_scale_ups = 0
+        self.n_scale_downs = 0
+
+    def _make_device(self, dev: int, hw: Optional[HardwareModel],
+                     added_at: float = 0.0,
+                     alive_since: float = 0.0) -> _DeviceState:
+        speed = 1.0
+        if hw is not None and self.base_hw is not None:
+            speed = relative_speed(hw, self.base_hw)
+        return _DeviceState(dev, hw=hw, speed=speed, added_at=added_at,
+                            alive_since=alive_since, busy_until=alive_since)
+
+    @property
+    def n_alive(self) -> int:
+        return sum(1 for d in self.devices if d.alive and not d.draining)
+
+    def free(self, now: float) -> List[_DeviceState]:
+        return [d for d in self.devices
+                if d.schedulable(now) and d.running is None
+                and now >= d.busy_until]
+
+    def choose(self, task: Task, free: List[_DeviceState],
+               now: float = 0.0) -> _DeviceState:
+        return _place(self.placement_name, task, free, self.rng, now)
+
+    def add_device(self, now: float, hw: Optional[HardwareModel] = None,
+                   provision_latency: float = 0.0) -> _DeviceState:
+        d = self._make_device(len(self.devices), hw, added_at=now,
+                              alive_since=now + provision_latency)
+        self.devices.append(d)
+        self.n_scale_ups += 1
+        return d
+
+    def remove_device(self, dev: int, now: float) -> _DeviceState:
+        d = self.devices[dev]
+        if d.running is not None:
+            raise RuntimeError(f"device {dev} still has a resident task; "
+                               "drain it first")
+        d.draining = True
+        d.remove_pending = False
+        d.alive_until = now
+        self.n_scale_downs += 1
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Frozen event loop (pre-PR ClusterSimulator.run, verbatim semantics)
+# ---------------------------------------------------------------------------
+
+class LegacyClusterSimulator:
+    """Frozen N-device event loop.  Constructor mirrors
+    ``ClusterSimulator(hw, policy_name_or_obj, ClusterConfig(...))`` but
+    builds its own frozen policy from a *name* so live policy edits cannot
+    leak in."""
+
+    def __init__(self, hw: HardwareModel, policy: str, cfg,
+                 preemptive: bool = False):
+        self.hw = hw
+        self.policy = make_legacy_policy(policy, preemptive)
+        self.cfg = cfg
+        self.arbiter = _LegacyArbiter(self.policy, cfg)
+        self.cluster = self._make_cluster()
+        self.log: List[Tuple[float, str, int, int]] = []
+        self._tasks: List[Task] = []
+        self._inject = None
+        self._elastic = None
+
+    def _make_cluster(self) -> _LegacyCluster:
+        return _LegacyCluster(getattr(self.cfg, "n_devices", 1),
+                              getattr(self.cfg, "placement", "least_loaded"),
+                              getattr(self.cfg, "placement_seed", 0),
+                              base_hw=self.hw,
+                              device_hw=getattr(self.cfg, "device_hw", None))
+
+    @property
+    def events(self):
+        return self.arbiter.events
+
+    def submit(self, task: Task, at: float) -> None:
+        if self._inject is None:
+            raise RuntimeError("submit() is only valid during run() — "
+                               "call it from an event-bus hook")
+        self._inject(task, at)
+
+    def _elastic_hooks(self):
+        if self._elastic is None:
+            raise RuntimeError("elastic capacity changes are only valid "
+                               "during run() — call from an event-bus hook")
+        return self._elastic
+
+    def add_device(self, hw: Optional[HardwareModel] = None) -> int:
+        return self._elastic_hooks()[0](hw)
+
+    def drain_device(self, dev: int) -> None:
+        self._elastic_hooks()[1](dev, False)
+
+    def remove_device(self, dev: int) -> None:
+        self._elastic_hooks()[1](dev, True)
+
+    # ------------------------------------------------------------------
+    def run(self, tasks: Sequence[Task]) -> List[Task]:
+        from repro.workloads.trace_io import as_task_list
+        tasks = as_task_list(tasks)
+        hw, cfg, arbiter = self.hw, self.cfg, self.arbiter
+        bus, admission = arbiter.events, cfg.admission
+        arbiter.reset()
+        bus.clear()
+        if admission is not None:
+            admission.reset()
+        self.log = []
+        self.cluster = self._make_cluster()
+        devices = self.cluster.devices
+        counter = itertools.count()
+        events: List[Tuple[float, int, str, int, int, int]] = []
+
+        def push(t, kind, tid=-1, gen=0, dev=-1):
+            heapq.heappush(events, (t, next(counter), kind, tid, gen, dev))
+
+        by_id: Dict[int, Task] = {t.tid: t for t in tasks}
+        for t in tasks:
+            t.state = TaskState.WAITING
+            t.device = None
+            push(t.arrival, "arrival", t.tid)
+
+        def inject(task: Task, at: float):
+            at = float(at)
+            task.state = TaskState.WAITING
+            task.device = None
+            task.arrival = at
+            task.last_wake = at
+            by_id[task.tid] = task
+            push(at, "arrival", task.tid)
+        self._inject = inject
+
+        ready: List[Task] = []
+        next_quantum = None
+        n_settled = 0
+        retry_pending: set = set()
+
+        def push_retry(t):
+            if t not in retry_pending:
+                retry_pending.add(t)
+                push(t, "retry")
+
+        def log(t, kind, tid, dev=-1):
+            if cfg.log_events:
+                self.log.append((t, kind, tid, dev))
+
+        def ensure_quantum(now):
+            nonlocal next_quantum
+            if next_quantum is None or next_quantum <= now:
+                next_quantum = now + cfg.quantum
+                push(next_quantum, "quantum")
+
+        def dev_hw(d: _DeviceState) -> HardwareModel:
+            return d.hw if d.hw is not None else hw
+
+        def start(d: _DeviceState, task: Task, now: float) -> float:
+            t0 = now
+            if task.restore_pending:
+                lat = _restore_latency(task, dev_hw(d))
+                if task.device is not None and task.device != d.dev:
+                    lat += _migration_latency(task, dev_hw(d))
+                    self.cluster.n_migrations += 1
+                task.checkpoint_overhead += lat
+                task.restore_pending = False
+                t0 += lat
+            d.running = task
+            task.state = TaskState.RUNNING
+            task.device = d.dev
+            d.last_model = task.model
+            if task.first_service is None:
+                task.first_service = t0
+            d.run_start = t0
+            d.run_gen += 1
+            d.busy_until = t0
+            push(t0 + task.remaining / d.speed, "complete", task.tid,
+                 d.run_gen, d.dev)
+            log(now, "start", task.tid, d.dev)
+            bus.dispatch(now, task, d.dev)
+            return t0
+
+        def preempt(d: _DeviceState, now: float, mech: Mechanism) -> float:
+            task = d.running
+            assert task is not None
+            elapsed = max(0.0, now - d.run_start) * d.speed
+            free_at = now
+            if mech is Mechanism.KILL:
+                task.executed = 0.0
+                task.reset_progress()
+                task.n_kills += 1
+                task.state = TaskState.WAITING
+            else:  # CHECKPOINT
+                extra = _tile_roundup(task, elapsed)
+                task.executed += elapsed + extra
+                d.busy_time += (elapsed + extra) / d.speed
+                lat = _checkpoint_latency(task, dev_hw(d))
+                task.checkpoint_overhead += lat
+                task.restore_pending = True
+                task.n_preemptions += 1
+                task.state = TaskState.PREEMPTED
+                free_at = now + extra / d.speed + lat
+            ready.append(task)
+            task.last_wake = now
+            d.running = None
+            d.run_gen += 1
+            d.busy_until = free_at
+            log(now, f"preempt-{mech.value}", task.tid, d.dev)
+            bus.preempt(now, task, d.dev, mech.value)
+            return free_at
+
+        def sync_running(now: float):
+            for d in devices:
+                if d.running is not None and now > d.run_start:
+                    dt = now - d.run_start
+                    d.running.executed += dt * d.speed
+                    d.busy_time += dt
+                    d.run_start = now
+
+        def settle_drain(d: _DeviceState, now: float):
+            if not (d.remove_pending and d.alive and d.running is None):
+                return
+            if now < d.busy_until:
+                push_retry(d.busy_until)
+                return
+            self.cluster.remove_device(d.dev, now)
+            log(now, "device_down", -1, d.dev)
+            bus.device_down(now, d.dev)
+
+        def service_drains(now: float):
+            for d in devices:
+                if not (d.draining and d.alive):
+                    continue
+                if (d.running is not None and cfg.drain == "migrate"
+                        and now >= d.busy_until):
+                    sync_running(now)
+                    preempt(d, now, Mechanism.CHECKPOINT)
+                settle_drain(d, now)
+
+        def schedule(now: float):
+            service_drains(now)
+            if not ready:
+                return
+            sync_running(now)
+            arbiter.wake(ready, now)
+            while ready:
+                cand = arbiter.pick(ready, now, None)
+                if cand is None:
+                    return
+                free = self.cluster.free(now)
+                if free:
+                    d = self.cluster.choose(cand, free, now)
+                    ready.remove(cand)
+                    start(d, cand, now)
+                    if len(free) > 1 and ready:
+                        continue
+                    return
+                blocked = [d for d in devices
+                           if d.alive and not d.draining and d.running is None]
+                switching = [d for d in blocked if now >= d.alive_since]
+                provisioning = [d for d in blocked if now < d.alive_since]
+                if provisioning:
+                    push_retry(min(d.alive_since for d in provisioning))
+                if switching:
+                    push_retry(min(d.busy_until for d in switching))
+                    return
+                if not arbiter.policy.preemptive:
+                    return
+                victims = sorted(
+                    (d for d in devices
+                     if d.schedulable(now) and d.running is not None
+                     and now >= d.busy_until),
+                    key=lambda d: (-_legacy_remaining_cost(d.running, d.speed),
+                                   d.dev))
+                for d in victims:
+                    dec = arbiter.arbitrate(d.running, cand)
+                    if dec.action == _Action.PREEMPT:
+                        free_at = preempt(d, now, dec.mechanism)
+                        ready.remove(cand)
+                        start(d, cand, free_at)
+                        return
+                    if dec.action == _Action.DRAIN:
+                        log(now, "drain", d.running.tid, d.dev)
+                return
+
+        clock = 0.0
+
+        def add_dev(new_hw: Optional[HardwareModel]) -> int:
+            d = self.cluster.add_device(
+                clock, hw=new_hw,
+                provision_latency=getattr(cfg, "provision_latency", 0.0))
+            log(clock, "device_up", -1, d.dev)
+            bus.device_up(clock, d.dev)
+            push_retry(d.alive_since)
+            return d.dev
+
+        def drain_dev(dev: int, remove: bool) -> None:
+            d = devices[dev]
+            if not d.alive or (d.draining and not remove):
+                return
+            if not d.draining:
+                d.draining = True
+                log(clock, "device_drain", -1, d.dev)
+                bus.device_drain(clock, d.dev)
+                if d.running is not None and cfg.drain == "migrate":
+                    if clock >= d.busy_until:
+                        sync_running(clock)
+                        preempt(d, clock, Mechanism.CHECKPOINT)
+                        push_retry(d.busy_until)
+                    else:
+                        push_retry(d.busy_until)
+            d.remove_pending = d.remove_pending or remove
+            settle_drain(d, clock)
+        self._elastic = (add_dev, drain_dev)
+
+        try:
+            while events:
+                now, _, kind, tid, gen, dev = heapq.heappop(events)
+                clock = now
+                if kind == "arrival":
+                    task = by_id[tid]
+                    if not event_hooks.offer(bus, admission, task, now,
+                                             len(ready)):
+                        task.state = TaskState.DROPPED
+                        n_settled += 1
+                    else:
+                        ready.append(task)
+                        task.last_wake = now
+                        log(now, "arrival", tid)
+                        schedule(now)
+                        ensure_quantum(now)
+                elif kind == "complete":
+                    d = devices[dev]
+                    if (d.running is None or d.running.tid != tid
+                            or gen != d.run_gen):
+                        continue  # stale
+                    task = d.running
+                    d.busy_time += max(0.0, now - d.run_start)
+                    task.executed = task.isolated_time
+                    task.completion = now
+                    task.state = TaskState.DONE
+                    n_settled += 1
+                    d.running = None
+                    log(now, "complete", tid, dev)
+                    bus.complete(now, task, dev)
+                    settle_drain(d, now)
+                    schedule(now)
+                    if ready:
+                        ensure_quantum(now)
+                elif kind in ("quantum", "retry"):
+                    if kind == "quantum":
+                        next_quantum = None
+                    else:
+                        retry_pending.discard(now)
+                    if ready or any(d.running is not None for d in devices):
+                        schedule(now)
+                        if ready:
+                            ensure_quantum(now)
+                    else:
+                        service_drains(now)
+                if n_settled == len(by_id) and not events:
+                    break
+        finally:
+            self._inject = None
+            self._elastic = None
+        settled = (TaskState.DONE, TaskState.DROPPED)
+        assert all(t.state in settled for t in by_id.values()), (
+            f"unfinished tasks: "
+            f"{[t.tid for t in by_id.values() if t.state not in settled]}")
+        self._tasks = list(by_id.values())
+        return self._tasks

@@ -136,7 +136,7 @@ class Autoscaler:
                     and ev.t < self._samples[0][0]):
                 self.reset()
             else:
-                ev = dataclasses.replace(ev, t=self._last_t)
+                ev = ev._replace(t=self._last_t)
         self._last_t = ev.t
         if ev.kind == "submit":
             self._backlog += 1

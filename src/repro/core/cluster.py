@@ -68,15 +68,26 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+import operator
+
 from repro.core import events as event_hooks
 from repro.core import metrics, preemption
+from repro.core import scheduler as _sched
 from repro.core.arbiter import Action, Arbiter, remaining_cost
 from repro.core.predictor import relative_speed
 from repro.core.preemption import Mechanism
+from repro.core.ready_queue import make_ready
 from repro.core.scheduler import Policy
 from repro.core.simulator import SimConfig, tile_roundup
 from repro.core.task import Task, TaskState
 from repro.hw import HardwareModel
+
+# Policies whose arbitration logic the hot loop may inline.  Exact types
+# only: a subclass overriding may_preempt must flow through the generic
+# Arbiter.arbitrate path.
+_EXACT_POLICIES = (_sched.FCFS, _sched.RoundRobin, _sched.HPF, _sched.SJF,
+                   _sched.TokenFCFS, _sched.PREMA)
+_dev_order = operator.attrgetter("dev")
 
 PLACEMENT_NAMES = ("least_loaded", "affinity", "speed_aware", "random")
 
@@ -389,10 +400,23 @@ class ClusterSimulator:
             push(at, "arrival", task.tid)
         self._inject = inject
 
-        ready: List[Task] = []
+        # Indexed ready set (core/ready_queue.py): heap-backed selection
+        # for built-in policies, list-compatible iteration otherwise.
+        ready = make_ready(self.policy.name)
         next_quantum = None
         n_settled = 0            # DONE + DROPPED
         retry_pending: set = set()
+
+        # ---- incremental device indexes (hot-path state) -------------
+        # idle: placement-eligible membership (alive, not draining,
+        # nothing resident) keyed by device index — the time conditions
+        # (busy_until switch windows, alive_since provisioning) are
+        # checked at use.  busy: devices with a resident task.  drainish:
+        # draining-but-alive devices, kept in device order so drain
+        # servicing walks them exactly like the historical full scan.
+        idle: Dict[int, DeviceState] = {d.dev: d for d in devices}
+        busy: Dict[int, DeviceState] = {}
+        drainish: List[DeviceState] = []
 
         def push_retry(t):
             # deduped wake-up at a known future instant (end of a switch
@@ -429,6 +453,8 @@ class ClusterSimulator:
                 task.restore_pending = False
                 t0 += lat
             d.running = task
+            idle.pop(d.dev, None)
+            busy[d.dev] = d
             task.state = TaskState.RUNNING
             task.device = d.dev
             d.last_model = task.model
@@ -465,9 +491,12 @@ class ClusterSimulator:
                 task.n_preemptions += 1
                 task.state = TaskState.PREEMPTED
                 free_at = now + extra / d.speed + lat
+            task.last_wake = now     # before insert: the queue snapshots it
             ready.append(task)
-            task.last_wake = now
             d.running = None
+            busy.pop(d.dev, None)
+            if d.alive and not d.draining:
+                idle[d.dev] = d
             d.run_gen += 1
             d.busy_until = free_at
             log(now, f"preempt-{mech.value}", task.tid, d.dev)
@@ -475,8 +504,11 @@ class ClusterSimulator:
             return free_at
 
         def sync_running(now: float):
-            for d in devices:
-                if d.running is not None and now > d.run_start:
+            # per-device accounting is independent, so walking the busy
+            # index (insertion order) matches the historical device-order
+            # scan bit-for-bit
+            for d in busy.values():
+                if now > d.run_start:
                     dt = now - d.run_start
                     d.running.executed += dt * d.speed
                     d.busy_time += dt
@@ -491,6 +523,7 @@ class ClusterSimulator:
                 push_retry(d.busy_until)
                 return
             self.cluster.remove_device(d.dev, now)
+            drainish.remove(d)
             log(now, "device_down", -1, d.dev)
             bus.device_down(now, d.dev)
 
@@ -499,14 +532,32 @@ class ClusterSimulator:
             # restore/switch window deferred the eviction; carry it out
             # as soon as the window ends, and settle removals whose
             # eviction spill has finished (both paths schedule retries)
-            for d in devices:
-                if not (d.draining and d.alive):
+            if not drainish:
+                return
+            for d in tuple(drainish):
+                if not d.alive:
                     continue
                 if (d.running is not None and cfg.drain == "migrate"
                         and now >= d.busy_until):
                     sync_running(now)
                     preempt(d, now, Mechanism.CHECKPOINT)
                 settle_drain(d, now)
+
+        # Arbitration constants hoisted out of the hot loop; the inlined
+        # branch below reproduces Arbiter.arbitrate (may_preempt gate →
+        # Algorithm-3 / static mechanism → KILL progress guarantee) with
+        # identical float expressions, and is taken only for the exact
+        # built-in policy classes — subclasses keep the generic path.
+        pol = arbiter.policy
+        pname = pol.name
+        inline_arb = type(pol) in _EXACT_POLICIES
+        dynamic = cfg.mechanism == "dynamic"
+        static_mech = None if dynamic else Mechanism(cfg.mechanism)
+        kef, mk = cfg.kill_early_frac, cfg.max_kills
+        # only random placement observes the free list's order (and the
+        # historical order is by device index); the others reduce with
+        # order-independent total-order keys
+        order_free = self.cluster.placement_name == "random"
 
         def schedule(now: float):
             service_drains(now)
@@ -518,47 +569,120 @@ class ClusterSimulator:
                 cand = arbiter.pick(ready, now, None)
                 if cand is None:
                     return
-                free = self.cluster.free(now)
+                free = [d for d in idle.values()
+                        if now >= d.busy_until
+                        and now + 1e-15 >= d.alive_since]
                 if free:
+                    if order_free and len(free) > 1:
+                        free.sort(key=_dev_order)
                     d = self.cluster.choose(cand, free, now)
                     ready.remove(cand)
                     start(d, cand, now)
                     if len(free) > 1 and ready:
                         continue  # fill remaining free devices this wake
                     return
-                blocked = [d for d in devices
-                           if d.alive and not d.draining and d.running is None]
-                switching = [d for d in blocked if now >= d.alive_since]
-                provisioning = [d for d in blocked if now < d.alive_since]
-                if provisioning:
-                    # wake when the joining device comes online — but a
-                    # not-yet-alive device must not suppress preemption
-                    # below: the scale-up fired *because* of overload
-                    push_retry(min(d.alive_since for d in provisioning))
-                if switching:
-                    # inside a switch-overhead window: wait for the chip
-                    # rather than displacing another (historical behavior)
-                    push_retry(min(d.busy_until for d in switching))
-                    return
-                if not arbiter.policy.preemptive:
+                if idle:
+                    # idle-but-not-free: inside switch-overhead windows
+                    # (wait for the chip rather than displacing another —
+                    # historical behavior) or still provisioning (wake at
+                    # alive_since, but a not-yet-alive device must not
+                    # suppress preemption: the scale-up fired *because*
+                    # of overload)
+                    switching = provisioning = None
+                    for d in idle.values():
+                        if now >= d.alive_since:
+                            if switching is None or d.busy_until < switching:
+                                switching = d.busy_until
+                        elif (provisioning is None
+                                or d.alive_since < provisioning):
+                            provisioning = d.alive_since
+                    if provisioning is not None:
+                        push_retry(provisioning)
+                    if switching is not None:
+                        push_retry(switching)
+                        return
+                if not pol.preemptive:
                     return
                 # every placeable device is running: consider displacing the
                 # victim with the longest device-relative remaining work
-                victims = sorted(
-                    (d for d in devices
-                     if d.schedulable(now) and d.running is not None
-                     and now >= d.busy_until),
-                    key=lambda d: (-remaining_cost(d.running, d.speed),
-                                   d.dev))
-                for d in victims:
-                    dec = arbiter.arbitrate(d.running, cand)
-                    if dec.action is Action.PREEMPT:
-                        free_at = preempt(d, now, dec.mechanism)
-                        ready.remove(cand)
-                        start(d, cand, free_at)
-                        return
-                    if dec.action is Action.DRAIN:
-                        log(now, "drain", d.running.tid, d.dev)
+                victims = []
+                for d in busy.values():
+                    if (d.draining or d.alive_until is not None
+                            or now + 1e-15 < d.alive_since
+                            or now < d.busy_until):
+                        continue
+                    t = d.running
+                    rem = t.predicted_total - t.executed
+                    if rem < 0.0:
+                        rem = 0.0
+                    spd = d.speed
+                    victims.append(
+                        (-(rem / (spd if spd > 1e-12 else 1e-12)), d.dev, d))
+                victims.sort()
+                if not inline_arb:
+                    for _, _, d in victims:
+                        dec = arbiter.arbitrate(d.running, cand)
+                        if dec.action is Action.PREEMPT:
+                            free_at = preempt(d, now, dec.mechanism)
+                            ready.remove(cand)
+                            start(d, cand, free_at)
+                            return
+                        if dec.action is Action.DRAIN:
+                            log(now, "drain", d.running.tid, d.dev)
+                    return
+                c_rem = cand.predicted_total - cand.executed
+                if c_rem < 0.0:
+                    c_rem = 0.0
+                c_dn = (cand.predicted_total
+                        if cand.predicted_total > 1e-12 else 1e-12)
+                for _, _, d in victims:
+                    r = d.running
+                    # ---- Policy.may_preempt, inlined per builtin ----
+                    if pname == "prema":
+                        if dynamic:
+                            may = True
+                        else:
+                            r_rem = r.predicted_total - r.executed
+                            may = c_rem < (r_rem if r_rem > 0.0 else 0.0)
+                    elif pname == "fcfs":
+                        may = cand.arrival < r.arrival
+                    elif pname == "hpf":
+                        may = cand.priority > r.priority
+                    elif pname == "sjf":
+                        r_rem = r.predicted_total - r.executed
+                        may = c_rem < (r_rem if r_rem > 0.0 else 0.0)
+                    elif pname == "token":
+                        may = cand.tokens > r.tokens
+                    else:            # rrb
+                        may = True
+                    if not may:
+                        continue     # KEEP: try the next victim
+                    if dynamic:
+                        # Algorithm 3 (preemption.select_mechanism)
+                        r_dn = (r.predicted_total
+                                if r.predicted_total > 1e-12 else 1e-12)
+                        r_rem = r.predicted_total - r.executed
+                        if r_rem < 0.0:
+                            r_rem = 0.0
+                        if c_rem / r_dn > r_rem / c_dn:
+                            log(now, "drain", r.tid, d.dev)
+                            continue
+                        mech = Mechanism.CHECKPOINT
+                    else:
+                        mech = static_mech
+                        if mech is Mechanism.DRAIN:
+                            log(now, "drain", r.tid, d.dev)
+                            continue
+                        if mech is Mechanism.KILL:
+                            lim = (r.predicted_total
+                                   if r.predicted_total > 1e-12 else 1e-12)
+                            if not (r.executed <= kef * lim
+                                    and r.n_kills < mk):
+                                continue   # DEFER: progress guarantee
+                    free_at = preempt(d, now, mech)
+                    ready.remove(cand)
+                    start(d, cand, free_at)
+                    return
                 return
 
         # ---- elastic hooks (live only inside run) --------------------
@@ -569,6 +693,7 @@ class ClusterSimulator:
                                         provision_latency=cfg.provision_latency)
             log(clock, "device_up", -1, d.dev)
             bus.device_up(clock, d.dev)
+            idle[d.dev] = d
             push_retry(d.alive_since)        # wake when it comes online
             return d.dev
 
@@ -578,6 +703,9 @@ class ClusterSimulator:
                 return
             if not d.draining:
                 d.draining = True
+                idle.pop(d.dev, None)
+                drainish.append(d)
+                drainish.sort(key=_dev_order)
                 log(clock, "device_drain", -1, d.dev)
                 bus.device_drain(clock, d.dev)
                 if d.running is not None and cfg.drain == "migrate":
@@ -605,8 +733,8 @@ class ClusterSimulator:
                         task.state = TaskState.DROPPED
                         n_settled += 1
                     else:
-                        ready.append(task)
                         task.last_wake = now
+                        ready.append(task)
                         log(now, "arrival", tid)
                         schedule(now)
                         ensure_quantum(now)
@@ -622,6 +750,9 @@ class ClusterSimulator:
                     task.state = TaskState.DONE
                     n_settled += 1
                     d.running = None
+                    busy.pop(dev, None)
+                    if d.alive and not d.draining:
+                        idle[dev] = d
                     log(now, "complete", tid, dev)
                     bus.complete(now, task, dev)
                     settle_drain(d, now)
@@ -633,7 +764,7 @@ class ClusterSimulator:
                         next_quantum = None
                     else:
                         retry_pending.discard(now)
-                    if ready or any(d.running is not None for d in devices):
+                    if ready or busy:
                         schedule(now)
                         if ready:
                             ensure_quantum(now)

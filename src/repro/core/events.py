@@ -43,8 +43,8 @@ via the layer's ``submit()``.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional
+import json
+from typing import Callable, Dict, IO, List, NamedTuple, Optional, Union
 
 EVENT_KINDS = (
     "submit",
@@ -59,9 +59,14 @@ EVENT_KINDS = (
 DEVICE_EVENT_KINDS = ("device_up", "device_drain", "device_down")
 
 
-@dataclasses.dataclass(frozen=True)
-class Event:
-    """One scheduling-visible state change, stamped with sim time."""
+class Event(NamedTuple):
+    """One scheduling-visible state change, stamped with sim time.
+
+    A NamedTuple rather than a dataclass: execution layers emit millions
+    of these on large traces, and tuple construction is the cheapest
+    immutable record Python has.  Field access, value equality, and
+    ``_replace`` match the former frozen-dataclass surface.
+    """
     t: float
     kind: str                       # one of EVENT_KINDS
     tid: int
@@ -71,12 +76,13 @@ class Event:
     priority: int = 0
 
     def to_json(self) -> dict:
-        return dataclasses.asdict(self)
+        return {"t": self.t, "kind": self.kind, "tid": self.tid,
+                "device": self.device, "mechanism": self.mechanism,
+                "tenant": self.tenant, "priority": self.priority}
 
     @classmethod
     def from_json(cls, d: dict) -> "Event":
-        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)
-                      if f.name in d})
+        return cls(**{name: d[name] for name in cls._fields if name in d})
 
 
 Subscriber = Callable[[Event], None]
@@ -91,11 +97,17 @@ class EventBus:
     five kinds.  ``emit`` appends to ``log`` *before* notifying
     subscribers, so a hook that injects new work observes a log that
     already contains the triggering event.
+
+    ``keep_log=False`` turns the in-memory log off for streaming runs
+    where events go to a sink (e.g. :class:`JsonlSpool`) instead — peak
+    RSS then stays flat in trace length.  Capture/replay and the
+    determinism tests rely on the log, so it defaults to on.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, keep_log: bool = True) -> None:
         self._subs: Dict[str, List[Subscriber]] = {k: [] for k in EVENT_KINDS}
         self._subs["*"] = []
+        self.keep_log = keep_log
         self.log: List[Event] = []
 
     # -- subscription --------------------------------------------------
@@ -130,18 +142,25 @@ class EventBus:
         self.log = []
 
     def emit(self, ev: Event) -> None:
-        self.log.append(ev)
-        for fn in list(self._subs[ev.kind]):
-            fn(ev)
-        for fn in list(self._subs["*"]):
-            fn(ev)
+        if self.keep_log:
+            self.log.append(ev)
+        # snapshot subscriber lists only when non-empty: a hook may
+        # (un)subscribe from inside a callback, but the common case is
+        # no subscribers at all and must stay allocation-free
+        subs = self._subs[ev.kind]
+        if subs:
+            for fn in tuple(subs):
+                fn(ev)
+        subs = self._subs["*"]
+        if subs:
+            for fn in tuple(subs):
+                fn(ev)
 
     def _task_event(self, t: float, kind: str, task, device: int,
                     mechanism: Optional[str] = None) -> None:
-        self.emit(Event(t=float(t), kind=kind, tid=task.tid, device=device,
-                        mechanism=mechanism,
-                        tenant=getattr(task, "tenant", None),
-                        priority=int(getattr(task, "priority", 0))))
+        self.emit(Event(float(t), kind, task.tid, device, mechanism,
+                        getattr(task, "tenant", None),
+                        int(getattr(task, "priority", 0))))
 
     def submit(self, t: float, task) -> None:
         self._task_event(t, "submit", task, -1)
@@ -167,6 +186,55 @@ class EventBus:
 
     def device_down(self, t: float, device: int) -> None:
         self.emit(Event(t=float(t), kind="device_down", tid=-1, device=device))
+
+
+class JsonlSpool:
+    """Streaming event sink: one JSON line per event, written as emitted.
+
+    Subscribe it to a bus (``spool = JsonlSpool(path); spool.attach(bus)``)
+    and run with ``bus.keep_log = False`` to keep peak RSS flat on
+    million-event traces; the spool file round-trips through
+    :meth:`repro.workloads.trace_io.ExecutedTrace.load` when written with
+    ``header=True`` (the default).
+    """
+
+    def __init__(self, path_or_fp: Union[str, IO[str]],
+                 header: bool = True, meta: Optional[Dict] = None):
+        if hasattr(path_or_fp, "write"):
+            self._fp, self._owns = path_or_fp, False
+        else:
+            self._fp, self._owns = open(path_or_fp, "w"), True
+        self.n_events = 0
+        self._bus: Optional[EventBus] = None
+        if header:
+            # n_records omitted: unknowable while streaming (loaders
+            # tolerate its absence)
+            self._fp.write(json.dumps(
+                {"version": 1, "kind": "executed", "meta": dict(meta or {})},
+                sort_keys=True) + "\n")
+
+    def __call__(self, ev: Event) -> None:
+        self._fp.write(json.dumps(ev.to_json(), sort_keys=True) + "\n")
+        self.n_events += 1
+
+    def attach(self, bus: EventBus) -> "JsonlSpool":
+        bus.subscribe("*", self)
+        self._bus = bus
+        return self
+
+    def close(self) -> None:
+        if self._bus is not None:
+            self._bus.unsubscribe("*", self)
+            self._bus = None
+        self._fp.flush()
+        if self._owns:
+            self._fp.close()
+
+    def __enter__(self) -> "JsonlSpool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def offer(bus: EventBus, admission, task, now: float,

@@ -84,50 +84,84 @@ def tail_latency_ratio(tasks: Sequence[Task], priority: int = 9,
     return float(np.percentile(sel, pct))
 
 
+def _percentile_rows(series: Dict[str, Sequence[float]],
+                     pcts: Sequence[int]) -> Dict[str, float]:
+    """One ``np.percentile`` call (one sort) per series for the whole
+    percentile list; keys emitted in the historical p-major order."""
+    qs = list(pcts)
+    res = {name: (np.percentile(vals, qs) if len(vals) else None)
+           for name, vals in series.items()}
+    out: Dict[str, float] = {}
+    for i, p in enumerate(qs):
+        for name in series:
+            r = res[name]
+            out[f"p{p}_{name}"] = (float(r[i]) if r is not None
+                                   else float("nan"))
+    return out
+
+
 def percentile_summary(tasks: Sequence[Task],
                        pcts: Sequence[int] = PERCENTILES) -> Dict[str, float]:
     """p50/p95/p99 of turnaround, NTT, and TTFT (time to first service —
     the queueing delay the mean hides)."""
     tasks = completed(tasks)
-    tat = [t.turnaround for t in tasks]
-    ntts = [t.ntt for t in tasks]
-    ttft = [t.first_service - t.arrival for t in tasks
-            if t.first_service is not None]
-    out: Dict[str, float] = {}
-    for p in pcts:
-        out[f"p{p}_turnaround"] = (float(np.percentile(tat, p)) if tat
-                                   else float("nan"))
-        out[f"p{p}_ntt"] = (float(np.percentile(ntts, p)) if ntts
-                            else float("nan"))
-        out[f"p{p}_ttft"] = (float(np.percentile(ttft, p)) if ttft
-                             else float("nan"))
-    return out
+    return _percentile_rows(
+        {"turnaround": [t.turnaround for t in tasks],
+         "ntt": [t.ntt for t in tasks],
+         "ttft": [t.first_service - t.arrival for t in tasks
+                  if t.first_service is not None]}, pcts)
 
 
 def summarize(tasks: Sequence[Task]) -> Dict[str, float]:
     """Aggregate over one run's task set.  Latency/SLA keys cover the
     completed subset; ``n_offered``/``n_rejected``/``shed_rate`` account
     for admission-control drops (all zero-drop workloads are unchanged:
-    ``n_tasks == n_offered``)."""
+    ``n_tasks == n_offered``).
+
+    Each latency series is materialized exactly once and shared across
+    every aggregate (the helper functions stay as the one-off public
+    API); elementwise float64 array math reproduces the per-task scalar
+    expressions bit-exactly.
+    """
     done = completed(tasks)
+    n_rej = len(rejected(tasks))
+    ntts = np.asarray([t.ntt for t in done])
+    tat = np.asarray([t.turnaround for t in done])
+    iso = np.asarray([t.isolated_time for t in done])
+    prio = np.asarray([float(t.priority) for t in done])
+    met = np.asarray([t.sla_met(DEFAULT_SLA_SCALE) for t in done])
+    if done:
+        pp = (1.0 / ntts) / (prio / prio.sum())
+        fair = float(pp.min() / pp.max())
+        makespan = max(t.completion for t in done)
+        good = float(np.sum(met)) / max(makespan, 1e-12)
+        sat = float(np.mean(met))
+    else:
+        fair, good, sat = float("nan"), 0.0, float("nan")
+    hi = ntts[prio == 9.0]
     out = {
-        "antt": antt(done),
-        "stp": stp(done),
-        "fairness": fairness(done),
-        "tail95_high": tail_latency_ratio(done),
+        "antt": float(np.mean(ntts)) if done else float("nan"),
+        "stp": float(np.sum(1.0 / ntts)) if done else 0.0,
+        "fairness": fair,
+        "tail95_high": (float(np.percentile(hi, 95.0)) if hi.size
+                        else float("nan")),
         "n_tasks": float(len(done)),
         "n_offered": float(len(tasks)),
-        "n_rejected": float(len(rejected(tasks))),
-        "shed_rate": float(len(rejected(tasks))) / max(len(tasks), 1),
+        "n_rejected": float(n_rej),
+        "shed_rate": float(n_rej) / max(len(tasks), 1),
         "preemptions": float(np.sum([t.n_preemptions for t in done])),
         "kills": float(np.sum([t.n_kills for t in done])),
         "ckpt_overhead": float(np.sum([t.checkpoint_overhead for t in done])),
-        "sla_satisfaction": sla_satisfaction(done),
-        "goodput": goodput(done),
+        "sla_satisfaction": sat,
+        "goodput": good,
     }
-    out.update(percentile_summary(done))
+    out.update(_percentile_rows(
+        {"turnaround": tat, "ntt": ntts,
+         "ttft": [t.first_service - t.arrival for t in done
+                  if t.first_service is not None]}, PERCENTILES))
     for n in (2, 4, 8, 12, 16, 20):
-        out[f"sla_viol@{n}"] = sla_violation_rate(done, n)
+        out[f"sla_viol@{n}"] = float(np.mean(tat > n * iso)) if done \
+            else float("nan")
     return out
 
 
@@ -158,17 +192,25 @@ def per_tenant_summary(tasks: Sequence[Task],
     out: Dict[str, Dict[str, float]] = {}
     for tenant, ts in sorted(groups.items()):
         done, shed = completed(ts), rejected(ts)
+        met = np.asarray([t.sla_met(default_scale) for t in done])
         row = {"n_tasks": float(len(done)),
                "n_offered": float(len(ts)),
                "n_admitted": float(len(ts) - len(shed)),
                "n_rejected": float(len(shed)),
                "shed_rate": float(len(shed)) / max(len(ts), 1),
-               "sla_satisfaction": sla_satisfaction(done, default_scale),
-               "goodput": goodput(done, makespan, default_scale)}
+               "sla_satisfaction": (float(np.mean(met)) if done
+                                    else float("nan")),
+               "goodput": (float(np.sum(met)) / max(makespan, 1e-12)
+                           if done else 0.0)}
         if done:
-            row["antt"] = antt(done)
-            row["stp"] = stp(done)
-            row.update(percentile_summary(done))
+            ntts = np.asarray([t.ntt for t in done])
+            row["antt"] = float(np.mean(ntts))
+            row["stp"] = float(np.sum(1.0 / ntts))
+            row.update(_percentile_rows(
+                {"turnaround": [t.turnaround for t in done],
+                 "ntt": ntts,
+                 "ttft": [t.first_service - t.arrival for t in done
+                          if t.first_service is not None]}, PERCENTILES))
         out[tenant] = row
     return out
 

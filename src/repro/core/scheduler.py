@@ -32,14 +32,28 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence
 
+from repro.core.ready_queue import ReadyQueue
 from repro.core.task import PRIORITY_LEVELS, Task
 
 SCHED_QUANTUM = 0.25e-3      # scheduling period time-quota (Table II)
 TOKEN_LEVELS = PRIORITY_LEVELS
 
 
+def _fast(ready, name: str) -> bool:
+    """True when ``ready`` is a ReadyQueue indexed for this policy; the
+    selectors then run on its heaps instead of rescanning the set."""
+    return isinstance(ready, ReadyQueue) and ready.policy == name
+
+
 def accrue_tokens(ready: Sequence[Task], now: float) -> None:
-    """Algorithm 2 line 7, applied at every scheduler wake-up."""
+    """Algorithm 2 line 7, applied at every scheduler wake-up.
+
+    A :class:`~repro.core.ready_queue.ReadyQueue` accrues vectorized
+    (bit-identical float64 math); plain sequences take the scalar loop.
+    """
+    if isinstance(ready, ReadyQueue):
+        ready.accrue(now)
+        return
     for t in ready:
         idle = max(0.0, now - t.last_wake)
         slowdown_norm = idle / max(t.predicted_total, 1e-9)
@@ -50,6 +64,8 @@ def accrue_tokens(ready: Sequence[Task], now: float) -> None:
 def token_threshold(ready: Sequence[Task]) -> float:
     """Max token count rounded *down* to the closest priority level
     (paper example: max=8 → threshold 3)."""
+    if isinstance(ready, ReadyQueue):
+        return ready.threshold()
     mx = max(t.tokens for t in ready)
     thr = TOKEN_LEVELS[0]
     for lvl in TOKEN_LEVELS:
@@ -90,6 +106,8 @@ class FCFS(Policy):
         super().__init__(name="fcfs", preemptive=preemptive)
 
     def select(self, ready, now, running):
+        if _fast(ready, "fcfs"):
+            return ready.select()
         return min(ready, key=lambda t: (t.arrival, t.tid)) if ready else None
 
     def may_preempt(self, running, cand, dynamic_mech):
@@ -128,6 +146,8 @@ class HPF(Policy):
         super().__init__(name="hpf", preemptive=preemptive)
 
     def select(self, ready, now, running):
+        if _fast(ready, "hpf"):
+            return ready.select()
         if not ready:
             return None
         return min(ready, key=lambda t: (-t.priority, t.arrival, t.tid))
@@ -145,6 +165,8 @@ class SJF(Policy):
                          uses_predictor=True)
 
     def select(self, ready, now, running):
+        if _fast(ready, "sjf"):
+            return ready.select()
         if not ready:
             return None
         return min(ready, key=lambda t: (t.predicted_remaining, t.tid))
@@ -165,6 +187,8 @@ class TokenFCFS(Policy):
         accrue_tokens(ready, now)
 
     def select(self, ready, now, running):
+        if _fast(ready, "token"):
+            return ready.select()
         if not ready:
             return None
         thr = token_threshold(ready)
@@ -186,6 +210,8 @@ class PREMA(Policy):
         accrue_tokens(ready, now)
 
     def select(self, ready, now, running):
+        if _fast(ready, "prema"):
+            return ready.select()
         if not ready:
             return None
         thr = token_threshold(ready)

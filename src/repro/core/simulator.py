@@ -33,6 +33,7 @@ from repro.core import preemption
 from repro.core.arbiter import (Action, Arbiter, ArbiterConfig,
                                 should_preempt)  # noqa: F401  (compat)
 from repro.core.preemption import Mechanism
+from repro.core.ready_queue import make_ready
 from repro.core.scheduler import SCHED_QUANTUM, Policy
 from repro.core.task import Task, TaskState
 from repro.hw import HardwareModel
@@ -129,7 +130,9 @@ class NPUSimulator:
             push(at, "arrival", task.tid)
         self._inject = inject
 
-        ready: List[Task] = []
+        # Indexed ready set (core/ready_queue.py): heap-backed selection
+        # for built-in policies, list-compatible iteration for the rest.
+        ready = make_ready(self.policy.name)
         running: Optional[Task] = None
         run_start = 0.0          # when current execution segment began
         run_gen = 0              # invalidates stale completion events
@@ -191,8 +194,8 @@ class NPUSimulator:
                 task.n_preemptions += 1
                 task.state = TaskState.PREEMPTED
                 free_at = now + extra + lat
+            task.last_wake = now     # before insert: the queue snapshots it
             ready.append(task)
-            task.last_wake = now
             running = None
             run_gen += 1
             busy_until = free_at
@@ -240,8 +243,8 @@ class NPUSimulator:
                         task.state = TaskState.DROPPED
                         n_settled += 1
                     else:
-                        ready.append(task)
                         task.last_wake = now
+                        ready.append(task)
                         log(now, "arrival", tid)
                         schedule(now)
                         ensure_quantum(now)

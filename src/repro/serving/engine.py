@@ -69,6 +69,35 @@ class _Job:
     result: Optional[RequestResult] = None
 
 
+class _ReadyJobs:
+    """Global ready queue keeping the policy-visible Task list in sync
+    with the job list, so every pick() stops rebuilding an O(n) list and
+    the selected Task maps back to its job in O(1)."""
+    __slots__ = ("jobs", "tasks", "_by_task")
+
+    def __init__(self):
+        self.jobs: List[_Job] = []
+        self.tasks: List[Task] = []
+        self._by_task: Dict[int, _Job] = {}
+
+    def __len__(self) -> int:
+        return len(self.jobs)
+
+    def append(self, j: _Job) -> None:
+        self.jobs.append(j)
+        self.tasks.append(j.task)
+        self._by_task[id(j.task)] = j
+
+    def remove(self, j: _Job) -> None:
+        i = self.jobs.index(j)
+        del self.jobs[i]
+        del self.tasks[i]
+        del self._by_task[id(j.task)]
+
+    def job_for(self, task: Task) -> _Job:
+        return self._by_task[id(task)]
+
+
 class ServingEngine:
     def __init__(self,
                  models: Dict[str, Tuple[Model, dict]],
@@ -253,7 +282,7 @@ class ServingEngine:
         del self.kvs[len(devices):]
         while len(self.kvs) < len(devices):
             self.kvs.append(KVCacheManager(self._kv_capacity))
-        ready: List[_Job] = []
+        ready = _ReadyJobs()
         n_dropped = 0
         clock = 0.0                        # last observed sim time (hooks)
 
@@ -292,9 +321,6 @@ class ServingEngine:
             settle_drain(dev, clock)
         self._elastic = (add_dev, drain_dev)
 
-        def ready_tasks():
-            return [j.task for j in ready]
-
         def ingest(now):
             nonlocal n_dropped
             while arrivals and arrivals[0][0] <= now + 1e-15:
@@ -311,14 +337,14 @@ class ServingEngine:
                 ready.append(j)
 
         def pick(d: int) -> Optional[_Job]:
-            ts = ready_tasks()
+            ts = ready.tasks
             now = dev_clock[d]
             self.arbiter.wake(ts, now)
             run_t = running[d].task if running[d] else None
             sel = self.arbiter.pick(ts, now, run_t)
             if sel is None:
                 return None
-            return next(j for j in ready if j.task is sel)
+            return ready.job_for(sel)
 
         def dev_hw(d: int) -> HardwareModel:
             return devices[d].hw if devices[d].hw is not None else self.hw

@@ -124,9 +124,18 @@ class ExecutedTrace:
                 ) -> "ExecutedTrace":
         """Snapshot the event log of an execution layer (anything with an
         ``events`` bus: NPUSimulator, ClusterSimulator, ServingEngine) or
-        of a bare :class:`EventBus`."""
+        of a bare :class:`EventBus`.
+
+        The capture *aliases* ``bus.log`` rather than copying it — on a
+        million-event run a copy would briefly double peak RSS for no
+        benefit.  The alias is safe: ``bus.clear()`` (start of the next
+        run) rebinds ``bus.log`` to a fresh list, so the captured timeline
+        is never mutated behind the trace's back.  For runs too large to
+        hold in memory at all, stream instead
+        (:class:`repro.core.events.JsonlSpool` with ``keep_log=False``).
+        """
         bus = getattr(layer_or_bus, "events", layer_or_bus)
-        return cls(events=list(bus.log), meta=dict(meta or {}))
+        return cls(events=bus.log, meta=dict(meta or {}))
 
     # ------------------------------------------------------------------
     def save(self, path_or_fp: Union[str, IO[str]]) -> None:

@@ -1,0 +1,177 @@
+"""Fast event core vs the frozen legacy implementation: bit-identical.
+
+``repro.core._legacy_cluster`` is a do-not-modify snapshot of the cluster
+simulator from before the indexed-ready-queue / incremental-device-index
+rewrite.  These tests drive both implementations over random small traces
+across every policy, preemption mechanism, placement, admission control,
+and mid-run elasticity, and require the event logs and per-task metrics
+to match **bit-for-bit** — the contract that lets the fast path claim it
+is a pure restructuring, not a behavioral change.  The same check runs at
+benchmark scale as ``benchmarks/simperf.py``'s parity cell.
+
+A seeded grid always runs; when hypothesis is installed a property-based
+fuzz widens the input space.
+"""
+import numpy as np
+import pytest
+
+from repro.core._legacy_cluster import LegacyClusterSimulator
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.ready_queue import make_ready
+from repro.core.scheduler import accrue_tokens, make_policy, token_threshold
+from repro.core.task import Task
+from repro.hw import PAPER_NPU
+from repro.workloads.admission import QueueShed
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+POLICIES = ("fcfs", "rrb", "hpf", "sjf", "token", "prema")
+MECHANISMS = ("checkpoint", "kill", "drain", "dynamic")
+PLACEMENTS = ("least_loaded", "affinity", "random")
+
+
+def mk_task(tid, priority, arrival, total, err):
+    n = 5
+    return Task(tid=tid, model=f"m{tid}", priority=priority, arrival=arrival,
+                batch=1, node_times=np.full(n, total / n),
+                node_out_bytes=np.full(n, 1 << 17, dtype=np.int64),
+                predicted_total=total * err)
+
+
+def random_workload(seed, n_tasks=30):
+    rng = np.random.default_rng(seed)
+    return [(int(rng.choice([1, 3, 9])), float(rng.uniform(0, 30e-3)),
+             float(rng.uniform(0.3e-3, 20e-3)), float(rng.uniform(0.7, 1.4)))
+            for _ in range(n_tasks)]
+
+
+def fingerprint(tasks):
+    return [(t.tid, t.state.name, t.completion, t.executed, t.tokens,
+             t.n_preemptions, t.n_kills, t.checkpoint_overhead,
+             t.first_service, t.device) for t in tasks]
+
+
+def run_both(w, policy, mech, n_devices, placement, admission=False,
+             elastic=False):
+    results = {}
+    for impl in ("fast", "legacy"):
+        tasks = [mk_task(i, p, a, t, e) for i, (p, a, t, e) in enumerate(w)]
+        cfg = ClusterConfig(
+            n_devices=n_devices, mechanism=mech, placement=placement,
+            placement_seed=3,
+            admission=QueueShed(max_depth=3) if admission else None)
+        if impl == "fast":
+            sim = ClusterSimulator(PAPER_NPU, make_policy(policy, True), cfg)
+        else:
+            sim = LegacyClusterSimulator(PAPER_NPU, policy, cfg,
+                                         preemptive=True)
+        if elastic:
+            # deterministic mid-run capacity script, identical per impl:
+            # grow on the 2nd completion, retire that device on the 4th
+            state = {"n": 0, "added": None}
+
+            def hook(ev, sim=sim, state=state):
+                state["n"] += 1
+                if state["n"] == 2:
+                    state["added"] = sim.add_device()
+                elif state["n"] == 4 and state["added"] is not None:
+                    sim.remove_device(state["added"])
+
+            sim.events.on_complete(hook)
+        done = sim.run(tasks)
+        results[impl] = (fingerprint(done), list(sim.events.log))
+    return results
+
+
+def assert_identical(r):
+    assert r["fast"][1] == r["legacy"][1]       # event logs
+    assert r["fast"][0] == r["legacy"][0]       # per-task metrics
+
+
+# ---------------------------------------------------------------------------
+# Seeded grid (always runs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("mech", MECHANISMS)
+def test_parity_policy_mechanism_grid(policy, mech):
+    w = random_workload(seed=hash((policy, mech)) % 2**31)
+    assert_identical(run_both(w, policy, mech, 2, "least_loaded"))
+
+
+@pytest.mark.parametrize("placement", PLACEMENTS)
+def test_parity_across_placements(placement):
+    w = random_workload(seed=11, n_tasks=40)
+    assert_identical(run_both(w, "prema", "dynamic", 3, placement))
+
+
+def test_parity_with_admission_control():
+    w = random_workload(seed=23, n_tasks=40)
+    assert_identical(run_both(w, "prema", "dynamic", 2, "least_loaded",
+                              admission=True))
+
+
+def test_parity_under_elasticity():
+    w = random_workload(seed=37, n_tasks=40)
+    assert_identical(run_both(w, "prema", "dynamic", 2, "least_loaded",
+                              elastic=True))
+
+
+def test_ready_queue_selection_matches_list_seeded():
+    for policy in ("fcfs", "hpf", "sjf", "token", "prema"):
+        pol = make_policy(policy, True)
+        w = random_workload(seed=5, n_tasks=12)
+        lst = [mk_task(i, p, a, t, e) for i, (p, a, t, e) in enumerate(w)]
+        qtasks = [mk_task(i, p, a, t, e) for i, (p, a, t, e) in enumerate(w)]
+        rq = make_ready(policy)
+        for t in qtasks:
+            rq.append(t)
+        for now in (0.0, 5e-3, 20e-3, 60e-3, 0.5):
+            accrue_tokens(lst, now)
+            rq.accrue(now)
+            sel_list = pol.select(lst, now, None)
+            sel_q = pol.select(rq, now, None)
+            assert sel_list.tid == sel_q.tid
+            if policy in ("token", "prema"):
+                assert token_threshold(lst) == token_threshold(rq)
+            for a, b in zip(lst, sorted(rq, key=lambda t: t.tid)):
+                assert a.tokens == b.tokens and a.last_wake == b.last_wake
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis fuzz (widens the space when hypothesis is installed)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    workload = st.lists(
+        st.tuples(st.sampled_from([1, 3, 9]),          # priority
+                  st.floats(0.0, 30e-3),               # arrival
+                  st.floats(0.3e-3, 20e-3),            # actual total
+                  st.floats(0.7, 1.4)),                # prediction error
+        min_size=1, max_size=12)
+
+    @settings(max_examples=40, deadline=None)
+    @given(w=workload,
+           policy=st.sampled_from(POLICIES),
+           mech=st.sampled_from(MECHANISMS),
+           n_devices=st.integers(1, 3),
+           placement=st.sampled_from(PLACEMENTS),
+           admission=st.booleans())
+    def test_fast_core_bit_identical_to_frozen(w, policy, mech, n_devices,
+                                               placement, admission):
+        assert_identical(run_both(w, policy, mech, n_devices, placement,
+                                  admission=admission))
+
+    @settings(max_examples=20, deadline=None)
+    @given(w=workload,
+           policy=st.sampled_from(("fcfs", "prema")),
+           mech=st.sampled_from(MECHANISMS),
+           n_devices=st.integers(1, 3))
+    def test_fast_core_bit_identical_under_elasticity(w, policy, mech,
+                                                      n_devices):
+        assert_identical(run_both(w, policy, mech, n_devices,
+                                  "least_loaded", elastic=True))
