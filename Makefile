@@ -34,7 +34,7 @@ FORMAT_PATHS = src/repro/core/events.py src/repro/core/autoscaler.py \
     tests/test_events.py tests/test_admission.py tests/test_autoscaler.py
 
 .PHONY: test test-fast lint fmt bench-smoke bench-regression \
-    bench-baseline bench bench-full bench-simperf
+    bench-baseline bench bench-full bench-simperf bench-chaos
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -60,6 +60,8 @@ define run_smoke_sweeps
 	    --out $(1)/overload_sweep.json
 	$(PYTHON) benchmarks/autoscale_sweep.py --smoke \
 	    --out $(1)/autoscale_sweep.json
+	$(PYTHON) benchmarks/chaos_sweep.py --smoke \
+	    --out $(1)/chaos_sweep.json
 	$(PYTHON) benchmarks/simperf.py --smoke \
 	    --out $(1)/simperf.json
 endef
@@ -68,24 +70,31 @@ bench-smoke:
 	$(call run_smoke_sweeps,$(BENCH_OUT))
 	$(PYTHON) benchmarks/check_smoke.py $(BENCH_OUT)/cluster_scaling.json \
 	    $(BENCH_OUT)/load_sweep.json $(BENCH_OUT)/overload_sweep.json \
-	    $(BENCH_OUT)/autoscale_sweep.json $(BENCH_OUT)/simperf.json
+	    $(BENCH_OUT)/autoscale_sweep.json $(BENCH_OUT)/chaos_sweep.json \
+	    $(BENCH_OUT)/simperf.json
 
 bench-regression:
 	$(call run_smoke_sweeps,$(BENCH_OUT))
 	$(PYTHON) benchmarks/check_smoke.py $(BENCH_OUT)/cluster_scaling.json \
 	    $(BENCH_OUT)/load_sweep.json $(BENCH_OUT)/overload_sweep.json \
-	    $(BENCH_OUT)/autoscale_sweep.json $(BENCH_OUT)/simperf.json \
+	    $(BENCH_OUT)/autoscale_sweep.json $(BENCH_OUT)/chaos_sweep.json \
+	    $(BENCH_OUT)/simperf.json \
 	    --baseline $(BASELINE_DIR)
 
 bench-baseline:
 	$(call run_smoke_sweeps,$(BASELINE_DIR))
 	$(PYTHON) benchmarks/check_smoke.py $(BASELINE_DIR)/cluster_scaling.json \
 	    $(BASELINE_DIR)/load_sweep.json $(BASELINE_DIR)/overload_sweep.json \
-	    $(BASELINE_DIR)/autoscale_sweep.json $(BASELINE_DIR)/simperf.json
+	    $(BASELINE_DIR)/autoscale_sweep.json $(BASELINE_DIR)/chaos_sweep.json \
+	    $(BASELINE_DIR)/simperf.json
 
 bench-simperf:
 	mkdir -p $(BENCH_OUT)
 	$(PYTHON) benchmarks/simperf.py --out $(BENCH_OUT)/simperf_full.json
+
+bench-chaos:
+	mkdir -p $(BENCH_OUT)
+	$(PYTHON) benchmarks/chaos_sweep.py --out $(BENCH_OUT)/chaos_sweep.json
 
 bench:
 	$(PYTHON) benchmarks/run.py
@@ -98,4 +107,5 @@ bench-full:
 	$(PYTHON) benchmarks/load_sweep.py --out $(BENCH_OUT)/load_sweep.json
 	$(PYTHON) benchmarks/overload_sweep.py --out $(BENCH_OUT)/overload_sweep.json
 	$(PYTHON) benchmarks/autoscale_sweep.py --out $(BENCH_OUT)/autoscale_sweep.json
+	$(PYTHON) benchmarks/chaos_sweep.py --out $(BENCH_OUT)/chaos_sweep.json
 	$(PYTHON) benchmarks/simperf.py --out $(BENCH_OUT)/simperf_full.json

@@ -1,0 +1,277 @@
+"""Chaos sweep: scheduling under failure injection, the recovery gate.
+
+PREMA's checkpoint machinery is exactly a fault-tolerance primitive — a
+durable snapshot bounds what a crash can destroy — so this sweep turns
+``core/faults.py`` loose on the cluster simulator and measures how much
+work failures cost under each recovery mode:
+
+* **failure level** — device MTBF in multiples of the mean isolated
+  task time (``none`` = failure-free control cells), MTTR fixed at
+  ``MTTR_ISO`` multiples; every cell sees the *same* seeded failure
+  schedule, so recovery modes are compared crash-for-crash;
+* **policy** — fcfs vs prema (the token scheduler must keep protecting
+  the interactive tenant while capacity flaps);
+* **mechanism** — ``checkpoint`` (crashed tasks resume from their last
+  durable snapshot) vs ``kill`` (no snapshots exist: every crash and
+  preemption restarts from zero);
+* **replacement** — ``static`` (ride out the crash on the surviving
+  devices) vs ``replace`` (``AutoscalerConfig(replace_failed=True)``
+  provisions a stand-in on every ``device_fail`` and retires the
+  surplus after repair).
+
+Two extra cells pin the subsystem's bookkeeping at benchmark scale: a
+**parity** cell (an inert ``FaultInjector`` must leave the event log
+bit-identical to ``faults=None``) and a **retry** cell (admission
+shedding + ``RetryDriver`` client re-offers under live failures keep
+``offered == completed + dropped`` exact).
+
+Per point: interactive/overall SLA satisfaction, p99 NTT, lost-work
+seconds, crash/failure counts, availability, goodput.  The headline
+gates (``benchmarks/check_smoke.py``): checkpoint recovery strictly
+beats KILL-restart on lost work, and PREMA with replacement holds the
+interactive SLA >= 90 % at the smoke failure rate.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/chaos_sweep.py            # full
+    PYTHONPATH=src python benchmarks/chaos_sweep.py --smoke    # CI
+    PYTHONPATH=src python benchmarks/chaos_sweep.py --out c.json
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks import common
+from benchmarks.overload_sweep import HI_TENANT, mean_isolated_time, tenant_mix
+from repro.core import metrics
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.faults import FaultInjector
+from repro.core.scheduler import make_policy
+from repro.core.task import TaskState
+from repro.hw import PAPER_NPU
+from repro.workloads import Poisson, QueueShed, RetryDriver, RetryPolicy, generate
+
+# MTBF per device, in multiples of the mean isolated task time (None =
+# no injector).  The smoke grid keeps one failing level; full adds a
+# gentler and a harsher one.
+FAIL_LEVELS: Dict[str, Optional[float]] = {"none": None, "mtbf12": 12.0}
+FAIL_LEVELS_FULL: Dict[str, Optional[float]] = {
+    "none": None, "mtbf24": 24.0, "mtbf12": 12.0, "mtbf6": 6.0}
+POLICIES = ("fcfs", "prema")
+MECHANISMS = ("checkpoint", "kill")
+N_DEVICES = 4
+LOAD = 0.55             # offered load, in fleet capacities, failure-free
+MTTR_ISO = 2.0          # mean repair time, in mean isolated task times
+FAULT_SEED = 4242
+TASKS_PER_RUN = 160
+# The interactive-SLA floor the headline is gated on lives in
+# benchmarks/check_smoke.py (SLA_HI_MIN).
+
+
+def make_faults(mtbf_iso: Optional[float]) -> Optional[FaultInjector]:
+    if mtbf_iso is None:
+        return None
+    iso = mean_isolated_time()
+    return FaultInjector(mtbf=mtbf_iso * iso, mttr=MTTR_ISO * iso,
+                         seed=FAULT_SEED)
+
+
+def make_sim(policy: str, mech: str, mtbf_iso: Optional[float],
+             replace: bool, admission=None
+             ) -> Tuple[ClusterSimulator, Optional[Autoscaler]]:
+    iso = mean_isolated_time()
+    cfg = ClusterConfig(n_devices=N_DEVICES, mechanism=mech,
+                        faults=make_faults(mtbf_iso), admission=admission)
+    sim = ClusterSimulator(PAPER_NPU, make_policy(policy, preemptive=True),
+                           cfg)
+    scaler = None
+    if replace:
+        # replacement-only scaling: the queue threshold is unreachable,
+        # so the only scale-ups are crash replacements; scale-down
+        # retires the surplus once the repaired device rejoins
+        scaler = Autoscaler(AutoscalerConfig(
+            min_devices=N_DEVICES, max_devices=N_DEVICES + 2,
+            replace_failed=True, target_queue_per_device=1e9,
+            low_watermark=0.5, cooldown=2.0 * iso)).attach(sim)
+    return sim, scaler
+
+
+def run_point(policy: str, mech: str, mtbf_iso: Optional[float],
+              replace: bool, n_runs: int, n_tasks: int,
+              seed0: int = 9400) -> Dict[str, float]:
+    iso = mean_isolated_time()
+    rate = LOAD * N_DEVICES / iso
+    runs = []
+    for r in range(n_runs):
+        rng = common.rng(seed0 + 313 * r)
+        tr = generate(tenant_mix(Poisson(rate=rate)), rng, n_tasks,
+                      pred=common.predictor())
+        sim, scaler = make_sim(policy, mech, mtbf_iso, replace)
+        tasks = sim.run(tr)
+        m = sim.summary()
+        hi = metrics.per_tenant_summary(tasks).get(HI_TENANT, {})
+        runs.append({
+            "sla_satisfaction": m["sla_satisfaction"],
+            "sla_hi": float(hi.get("sla_satisfaction", float("nan"))),
+            "p99_ntt": m["p99_ntt"],
+            "lost": m["lost_work"],
+            "crashes": m["n_crashes"],
+            "fails": m["n_failures"],
+            "avail": m["availability"],
+            "goodput": m["goodput"],
+            "makespan": m["makespan"],
+            "replaces": float(sum(1 for d in (scaler.decisions if scaler
+                                              else []) if d[1] == "replace")),
+        })
+        if scaler is not None:
+            scaler.detach()
+    return metrics.aggregate(runs)
+
+
+def parity_cell(n_tasks: int, seed0: int = 9500) -> str:
+    """An inert injector must be invisible: bit-identical event logs."""
+    logs = []
+    for faults in (None, FaultInjector()):
+        tr = generate(tenant_mix(Poisson(rate=LOAD * N_DEVICES
+                                         / mean_isolated_time())),
+                      common.rng(seed0), n_tasks, pred=common.predictor())
+        sim = ClusterSimulator(
+            PAPER_NPU, make_policy("prema", preemptive=True),
+            ClusterConfig(n_devices=N_DEVICES, mechanism="dynamic",
+                          faults=faults))
+        sim.run(tr)
+        logs.append(list(sim.events.log))
+    return "exact" if logs[0] == logs[1] else "diverged"
+
+
+def retry_cell(mtbf_iso: Optional[float], n_tasks: int,
+               seed0: int = 9600) -> Dict[str, float]:
+    """Client retries + admission shedding under live failures: one
+    logical task settles exactly once, attempts are extra events."""
+    iso = mean_isolated_time()
+    tr = generate(tenant_mix(Poisson(rate=LOAD * N_DEVICES / iso)),
+                  common.rng(seed0), n_tasks, pred=common.predictor())
+    sim, _ = make_sim("prema", "checkpoint", mtbf_iso, replace=False,
+                      admission=QueueShed(max_depth=2))
+    driver = RetryDriver(RetryPolicy(max_retries=4, backoff=0.5 * iso,
+                                     deadline_scale=24.0))
+    tasks = driver.drive(sim, tr.tasks())
+    n_done = sum(1 for t in tasks if t.state is TaskState.DONE)
+    n_drop = sum(1 for t in tasks if t.state is TaskState.DROPPED)
+    return {
+        "exact": 1.0 if n_done + n_drop == n_tasks else 0.0,
+        "retries": float(driver.n_retried),
+        "abandoned": float(driver.n_abandoned),
+        "n_done": float(n_done),
+        "n_dropped": float(n_drop),
+    }
+
+
+def sweep(levels: Dict[str, Optional[float]], n_runs: int, n_tasks: int
+          ) -> Tuple[List[Tuple[str, float, str]], List[Dict]]:
+    rows: List[Tuple[str, float, str]] = []
+    points: List[Dict] = []
+    cells: Dict[Tuple[str, str, str, str], Dict[str, float]] = {}
+    for level, mtbf_iso in levels.items():
+        # replacement capacity only matters when devices can fail
+        configs = ("static", "replace") if mtbf_iso is not None else ("static",)
+        for config in configs:
+            for policy in POLICIES:
+                for mech in MECHANISMS:
+                    t0 = time.perf_counter()
+                    m = run_point(policy, mech, mtbf_iso,
+                                  replace=config == "replace",
+                                  n_runs=n_runs, n_tasks=n_tasks)
+                    us = (time.perf_counter() - t0) / n_runs * 1e6
+                    cells[(level, config, policy, mech)] = m
+                    rows.append((
+                        f"chaos.{level}.{config}.{policy}.{mech}",
+                        us,
+                        f"sla_hi={m['sla_hi']:.3f};"
+                        f"sla={m['sla_satisfaction']:.3f};"
+                        f"lost={m['lost']:.4f};"
+                        f"avail={m['avail']:.3f};"
+                        f"fails={m['fails']:.1f};"
+                        f"p99_ntt={m['p99_ntt']:.2f}",
+                    ))
+                    points.append(dict(level=level, config=config,
+                                       policy=policy, mechanism=mech, **m))
+    # headline: how much lost work does KILL-restart cost over
+    # checkpoint recovery, crash-for-crash (same failure schedule)?
+    for (level, mtbf_iso) in levels.items():
+        if mtbf_iso is None:
+            continue
+        for policy in POLICIES:
+            ck = cells.get((level, "static", policy, "checkpoint"))
+            kl = cells.get((level, "static", policy, "kill"))
+            if ck is None or kl is None:
+                continue
+            adv = kl["lost"] / max(ck["lost"], 1e-12)
+            rows.append((
+                f"chaos.{level}.{policy}.kill_over_ckpt_lost_work",
+                0.0,
+                f"adv={adv:.3f};lostck={ck['lost']:.4f};"
+                f"lostkl={kl['lost']:.4f}",
+            ))
+            points.append(dict(level=level, config="kill_vs_checkpoint",
+                               policy=policy, lost_ratio=adv,
+                               lost_checkpoint=ck["lost"],
+                               lost_kill=kl["lost"]))
+    return rows, points
+
+
+def run(smoke: bool = False, collect: Optional[Dict] = None
+        ) -> List[Tuple[str, float, str]]:
+    """Entry point for benchmarks/run.py (full) and --smoke (CI)."""
+    levels = FAIL_LEVELS if smoke else FAIL_LEVELS_FULL
+    n_runs = 1 if smoke else 3
+    n_tasks = TASKS_PER_RUN if smoke else 2 * TASKS_PER_RUN
+    rows, points = sweep(levels, n_runs, n_tasks)
+    rows.append(("chaos.parity.inert_injector", 0.0,
+                 parity_cell(n_tasks // 2)))
+    smoke_level = next(k for k, v in levels.items() if v is not None)
+    rc = retry_cell(levels[smoke_level], n_tasks)
+    rows.append((
+        f"chaos.retry.{smoke_level}.prema.checkpoint", 0.0,
+        f"exact={rc['exact']:.0f};retries={rc['retries']:.0f};"
+        f"abandoned={rc['abandoned']:.0f}",
+    ))
+    points.append(dict(level=smoke_level, config="retry", policy="prema",
+                       mechanism="checkpoint", **rc))
+    if collect is not None:
+        collect["points"] = points
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (1 run per point)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="re-base every benchmark RNG stream")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also write machine-readable JSON results")
+    ap.add_argument("--profile", action="store_true",
+                    help="run under cProfile; stats land next to --out")
+    args = ap.parse_args()
+    common.set_seed(args.seed)
+    print("name,us_per_call,derived")
+    extra: Dict = {}
+    with common.maybe_profile(args.profile, args.out, "chaos_sweep"):
+        rows = run(smoke=args.smoke, collect=extra)
+    common.emit(rows)
+    if args.out:
+        common.write_json(args.out, "chaos_sweep", rows, extra=extra)
+
+
+if __name__ == "__main__":
+    main()

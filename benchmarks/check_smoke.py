@@ -17,6 +17,11 @@ claim*:
 * ``autoscale_sweep``: on diurnal traffic, autoscaled PREMA holds the
   interactive tenant's SLA >= 90 % while consuming <= 60 % of the
   static-max fleet's device-seconds;
+* ``chaos_sweep``: an inert fault injector is bit-identical to no
+  injector, checkpoint recovery strictly beats KILL-restart on lost
+  work at every swept failure rate, PREMA with crash replacement holds
+  the interactive SLA >= 90 % under failures, and client retries keep
+  offered == completed + dropped exact;
 * ``simperf``: the fast/legacy parity cell is bit-exact, and against a
   baseline the machine-independent fast-over-legacy speedup ratio may
   not regress by more than 35 % (sub-second smoke cells are timer-noisy;
@@ -51,6 +56,7 @@ BACKLOG_RATIO_MIN = 1.5     # open peak backlog vs closed, past saturation
 TAIL_BLOWUP_MIN = 2.0       # open-loop FCFS p99 NTT growth past the knee
 SLA_HI_MIN = 0.9
 AUTOSCALE_CAPACITY_MAX = 0.6   # autoscaled device-seconds vs static-max
+CHAOS_LOST_RATIO_MIN = 1.0     # KILL-restart lost work over checkpoint's
 REGRESSION_TOL = 0.10          # --baseline: relative drift allowed
 SIMPERF_SPEEDUP_TOL = 0.35     # simperf: allowed speedup-ratio regression
 SIMPERF_SPEEDUP_FLOOR = 1.0    # simperf: fast must never lose to legacy
@@ -178,6 +184,49 @@ def check_autoscale_sweep(payload: Dict) -> None:
                "single-device interactive SLA")
 
 
+def check_chaos_sweep(payload: Dict) -> None:
+    points = payload.get("extra", {}).get("points", [])
+    _check(bool(points), "chaos_sweep: structured points missing")
+    parity = [r for r in payload["rows"]
+              if r["name"] == "chaos.parity.inert_injector"]
+    _check(bool(parity), "chaos_sweep: inert-injector parity row missing")
+    _check(all(r["derived"] == "exact" for r in parity),
+           f"chaos_sweep: inert injector changed the event log: {parity}")
+    # checkpoint recovery must strictly beat KILL-restart on lost work
+    ratios = [p for p in points if p.get("config") == "kill_vs_checkpoint"]
+    _check(bool(ratios), "chaos_sweep: kill-vs-checkpoint headline missing")
+    for p in ratios:
+        _check(p["lost_ratio"] > CHAOS_LOST_RATIO_MIN,
+               f"chaos[{p['level']},{p['policy']}]: KILL-restart lost only "
+               f"{p['lost_ratio']:.3f}x checkpoint recovery's work "
+               f"(must exceed {CHAOS_LOST_RATIO_MIN})")
+    # PREMA + crash replacement holds the interactive SLA under failures
+    guarded = [p for p in points if p.get("config") == "replace"
+               and p.get("policy") == "prema"
+               and p.get("mechanism") == "checkpoint"]
+    _check(bool(guarded), "chaos_sweep: prema+replace points missing")
+    for p in guarded:
+        _check(p["sla_hi"] >= SLA_HI_MIN,
+               f"chaos[{p['level']}]: prema+replace interactive SLA "
+               f"{p['sla_hi']:.3f} < {SLA_HI_MIN}")
+    # failures really happened, and availability accounting stayed sane
+    failing = [p for p in points if p.get("fails", 0) > 0]
+    _check(bool(failing), "chaos_sweep: no cell saw a failure")
+    for p in failing:
+        _check(0.0 < p["avail"] < 1.0,
+               f"chaos[{p['level']},{p['config']},{p['policy']}]: "
+               f"availability {p['avail']:.3f} outside (0, 1) despite "
+               f"{p['fails']:.0f} failures")
+    # client retries keep logical-task accounting exact
+    retry = [p for p in points if p.get("config") == "retry"]
+    _check(bool(retry), "chaos_sweep: retry cell missing")
+    for p in retry:
+        _check(p["exact"] == 1.0,
+               f"chaos: retry cell lost tasks (done={p['n_done']:.0f} "
+               f"dropped={p['n_dropped']:.0f})")
+        _check(p["retries"] > 0, "chaos: retry cell never retried")
+
+
 def check_simperf(payload: Dict) -> None:
     parity = [r for r in payload["rows"] if ".parity." in r["name"]]
     _check(bool(parity), "simperf: fast-vs-legacy parity row missing")
@@ -242,6 +291,7 @@ CHECKS = {
     "load_sweep": check_load_sweep,
     "overload_sweep": check_overload_sweep,
     "autoscale_sweep": check_autoscale_sweep,
+    "chaos_sweep": check_chaos_sweep,
     "simperf": check_simperf,
 }
 
@@ -264,10 +314,10 @@ BASELINE_CHECKS = {
 # when both match ("sla_viol" carries both "sla" and "viol").
 LOWER_BETTER = frozenset(
     ("viol", "p95", "p99", "antt", "tail95", "devsec", "seconds",
-     "shed", "backlog", "ckpt", "ratio"))
+     "shed", "backlog", "ckpt", "ratio", "lost"))
 HIGHER_BETTER = frozenset(
     ("sla", "stp", "goodput", "tput", "achieved", "util", "throughput",
-     "fairness", "load", "knee"))
+     "fairness", "load", "knee", "avail"))
 
 
 def metric_direction(key: str) -> int:

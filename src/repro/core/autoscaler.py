@@ -19,6 +19,11 @@ Signals
   fraction of window completions whose turnaround beat that budget; a
   window below ``sla_target`` forces a scale-up even if the queue looks
   shallow (latency pain without backlog: slow devices, long residents).
+* **Failures** (optional) — with ``replace_failed`` on, every
+  ``device_fail`` event (``core/faults.py``) provisions one replacement
+  device within ``max_devices``; fault events are otherwise excluded
+  from the load signal, and scale-down retires the surplus after the
+  crashed device recovers.
 
 Decisions respect ``cooldown`` sim-seconds between actions and the
 ``[min_devices, max_devices]`` bounds; scale-down prefers an idle device
@@ -33,7 +38,7 @@ import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
-from repro.core.events import DEVICE_EVENT_KINDS, Event
+from repro.core.events import DEVICE_EVENT_KINDS, FAULT_EVENT_KINDS, Event
 from repro.hw import HardwareModel
 
 
@@ -56,6 +61,10 @@ class AutoscalerConfig:
     sla_target: float = 0.9
     # HardwareModel for scale-up devices (None -> the layer's reference).
     device_hw: Optional[HardwareModel] = None
+    # Provision a replacement on every ``device_fail`` (within
+    # max_devices), restoring capacity while the crashed device repairs;
+    # scale-down retires the surplus once the failure heals.
+    replace_failed: bool = False
 
     def __post_init__(self):
         if self.min_devices < 1:
@@ -123,6 +132,12 @@ class Autoscaler:
 
     # -- signal maintenance --------------------------------------------
     def _on_event(self, ev: Event) -> None:
+        if ev.kind in FAULT_EVENT_KINDS:
+            # capacity churn, not offered load: keep failures out of the
+            # backlog signal, but optionally provision a replacement
+            if ev.kind == "device_fail" and self.cfg.replace_failed:
+                self._replace(ev.t, ev.device)
+            return
         if ev.kind in DEVICE_EVENT_KINDS:
             return  # our own actions are not a load signal
         if self._samples and ev.t < self._last_t:
@@ -201,6 +216,20 @@ class Autoscaler:
         return ok / len(self._completions) < self.cfg.sla_target
 
     # -- decisions ------------------------------------------------------
+    def _replace(self, now: float, failed_dev: int) -> None:
+        """React to a crash: add one device so serving capacity is back
+        before the failed unit repairs.  Repair, not reactive scaling —
+        it bypasses the cooldown, but still counts as the last action so
+        the fresh device is not drained before it finishes provisioning
+        (``n_alive`` already excludes the failed device, so the bound
+        check naturally leaves room for the replacement)."""
+        cluster = self.layer.cluster
+        if cluster.n_alive >= self.cfg.max_devices:
+            return
+        dev = self.layer.add_device(self.cfg.device_hw)
+        self.decisions.append((now, "replace", dev))
+        self._last_action = now
+
     def _decide(self, now: float) -> None:
         cfg, cluster = self.cfg, self.layer.cluster
         if self._last_action is not None and now - self._last_action < cfg.cooldown:

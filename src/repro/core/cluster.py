@@ -37,6 +37,26 @@ good once idle).  Each transition emits a ``device_up`` /
 ``core/autoscaler.py`` subscribes to.  Per-device alive windows feed the
 ``capacity_seconds`` normalization in ``metrics.cluster_summary``.
 
+Failures
+--------
+``ClusterConfig(faults=FaultInjector(...))`` injects device crashes
+(``core/faults.py``): deterministic per-device MTBF/MTTR processes and
+scripted fail-at instants drive ``device_fail`` / ``device_recover``
+events on the shared bus.  A failed device contributes zero capacity
+(not placeable, never a preemption victim) until repaired; its in-flight
+task loses all progress since its last durable checkpoint and is
+re-queued — resuming over the normal restore/migration path when a
+checkpoint exists, restarting from scratch (KILL-style,
+``Task.n_crashes``) when none does.  Lost progress accumulates in
+``Task.lost_work``; per-device downtime feeds the ``availability``
+metric.  ``remove_device(dev, drain=False)`` is the *unplanned* removal
+(an operator yanking a device): the resident takes the same explicit
+loss/re-queue path instead of being silently dropped.  Mid-run
+``fail_device`` / ``recover_device`` hooks let tests and reactive
+subsystems crash a device from any event-bus callback.  A run with no
+injector (or an inert one) is bit-identical to the pre-fault code path
+(tests/test_fastpath_parity.py).
+
 Placement policies
 ------------------
 ``least_loaded``  pick the free device with the least accumulated busy
@@ -74,6 +94,7 @@ from repro.core import events as event_hooks
 from repro.core import metrics, preemption
 from repro.core import scheduler as _sched
 from repro.core.arbiter import Action, Arbiter, remaining_cost
+from repro.core.faults import FaultInjector
 from repro.core.predictor import relative_speed
 from repro.core.preemption import Mechanism
 from repro.core.ready_queue import make_ready
@@ -114,13 +135,17 @@ class DeviceState:
     alive_until: Optional[float] = None   # set on removal (device_down)
     draining: bool = False        # no new placements
     remove_pending: bool = False  # leave the cluster once idle
+    # ---- failure state (core/faults.py) ----
+    failed: bool = False          # crashed: zero capacity until repaired
+    failed_at: Optional[float] = None     # start of the open failure window
+    downtime: float = 0.0         # closed failure windows, seconds
 
     @property
     def alive(self) -> bool:
         return self.alive_until is None
 
     def schedulable(self, now: float) -> bool:
-        return (self.alive and not self.draining
+        return (self.alive and not self.draining and not self.failed
                 and now + 1e-15 >= self.alive_since)
 
     def capacity_seconds(self, until: float) -> float:
@@ -131,6 +156,17 @@ class DeviceState:
         end = until if self.alive_until is None else min(self.alive_until,
                                                          until)
         return max(0.0, end - min(self.added_at, until))
+
+    def downtime_seconds(self, until: float) -> float:
+        """Failed seconds inside ``[0, until]`` (an open failure window is
+        charged up to ``until`` or removal, whichever is first) — feeds
+        the ``availability`` metric in ``metrics.cluster_health``."""
+        down = self.downtime
+        if self.failed and self.failed_at is not None:
+            end = until if self.alive_until is None else min(self.alive_until,
+                                                             until)
+            down += max(0.0, min(end, until) - self.failed_at)
+        return down
 
 
 def _alive_seconds(d: DeviceState, now: float) -> float:
@@ -215,6 +251,7 @@ class Cluster:
         self.n_migrations = 0
         self.n_scale_ups = 0
         self.n_scale_downs = 0
+        self.n_failures = 0
 
     def _make_device(self, dev: int, hw: Optional[HardwareModel],
                      added_at: float = 0.0,
@@ -231,10 +268,11 @@ class Cluster:
 
     @property
     def n_alive(self) -> int:
-        """Devices that can take new placements now or soon: alive and not
-        draining (a still-provisioning device counts, so an autoscaler does
-        not double-order capacity it already paid for)."""
-        return sum(1 for d in self.devices if d.alive and not d.draining)
+        """Devices that can take new placements now or soon: alive, not
+        draining, not failed (a still-provisioning device counts, so an
+        autoscaler does not double-order capacity it already paid for)."""
+        return sum(1 for d in self.devices
+                   if d.alive and not d.draining and not d.failed)
 
     def free(self, now: float) -> List[DeviceState]:
         return [d for d in self.devices
@@ -250,6 +288,9 @@ class Cluster:
 
     def capacity_seconds(self, until: float) -> List[float]:
         return [d.capacity_seconds(until) for d in self.devices]
+
+    def downtime_seconds(self, until: float) -> List[float]:
+        return [d.downtime_seconds(until) for d in self.devices]
 
     # ---- elastic transitions (event emission is the caller's job) ----
     def add_device(self, now: float, hw: Optional[HardwareModel] = None,
@@ -289,6 +330,10 @@ class ClusterConfig(SimConfig):
     # them over the checkpoint/migration path, "finish" lets them run out).
     provision_latency: float = 0.0
     drain: str = "migrate"
+    # Failure injection: a FaultInjector drives device_fail/device_recover
+    # (None or an inert injector keeps the run bit-identical to the
+    # pre-fault code path).
+    faults: Optional[FaultInjector] = None
 
 
 class ClusterSimulator:
@@ -354,10 +399,28 @@ class ClusterSimulator:
         capacity) until removed."""
         self._elastic_hooks()[1](dev, False)
 
-    def remove_device(self, dev: int) -> None:
-        """Scale down: drain ``dev`` and take it out of the cluster as
-        soon as it is idle (immediately when nothing is resident)."""
-        self._elastic_hooks()[1](dev, True)
+    def remove_device(self, dev: int, drain: bool = True) -> None:
+        """Scale down.  ``drain=True`` (planned removal): stop placements
+        and leave once idle; residents migrate or finish per ``cfg.drain``.
+        ``drain=False`` (unplanned): yank the device *now* — the resident
+        loses its un-checkpointed progress and is explicitly re-queued
+        over the crash path (``Task.lost_work``/``n_crashes``), never
+        silently dropped."""
+        if drain:
+            self._elastic_hooks()[1](dev, True)
+        else:
+            self._elastic_hooks()[2](dev)
+
+    # ---- failures (valid during run(), from event hooks) -------------
+    def fail_device(self, dev: int) -> None:
+        """Crash ``dev`` now: the resident loses un-checkpointed progress
+        and is re-queued; the device contributes zero capacity until
+        :meth:`recover_device` (or an injector-scheduled repair)."""
+        self._elastic_hooks()[3](dev)
+
+    def recover_device(self, dev: int) -> None:
+        """Repair a failed device; it becomes placeable again."""
+        self._elastic_hooks()[4](dev)
 
     @property
     def n_alive_devices(self) -> int:
@@ -390,13 +453,23 @@ class ClusterSimulator:
             t.device = None
             push(t.arrival, "arrival", t.tid)
 
+        pending_arrivals: set = set()   # injected tids not yet offered
+
         def inject(task: Task, at: float):
+            nonlocal n_settled
             at = float(at)
+            if (task.tid in by_id and task.tid not in pending_arrivals
+                    and task.state in (TaskState.DONE, TaskState.DROPPED)):
+                # re-offer of a settled logical task (client retry): it is
+                # outstanding again, so un-count it — one task, many
+                # attempts, n_settled stays exact
+                n_settled -= 1
             task.state = TaskState.WAITING
             task.device = None
             task.arrival = at
             task.last_wake = at
             by_id[task.tid] = task
+            pending_arrivals.add(task.tid)
             push(at, "arrival", task.tid)
         self._inject = inject
 
@@ -477,6 +550,8 @@ class ClusterSimulator:
             elapsed = max(0.0, now - d.run_start) * d.speed
             free_at = now
             if mech is Mechanism.KILL:
+                # everything since the last restart-from-zero is redone work
+                task.lost_work += task.executed + elapsed
                 task.executed = 0.0
                 task.reset_progress()
                 task.n_kills += 1
@@ -484,6 +559,7 @@ class ClusterSimulator:
             else:  # CHECKPOINT
                 extra = tile_roundup(task, elapsed)
                 task.executed += elapsed + extra
+                task.ckpt_executed = task.executed   # durable snapshot
                 d.busy_time += (elapsed + extra) / d.speed
                 lat = preemption.checkpoint_latency(task, dev_hw(d))
                 task.checkpoint_overhead += lat
@@ -695,6 +771,7 @@ class ClusterSimulator:
             bus.device_up(clock, d.dev)
             idle[d.dev] = d
             push_retry(d.alive_since)        # wake when it comes online
+            arm_failure(d.dev, clock)        # replacements can fail too
             return d.dev
 
         def drain_dev(dev: int, remove: bool) -> None:
@@ -719,7 +796,131 @@ class ClusterSimulator:
                         push_retry(d.busy_until)
             d.remove_pending = d.remove_pending or remove
             settle_drain(d, clock)
-        self._elastic = (add_dev, drain_dev)
+
+        # ---- failure injection (core/faults.py) ----------------------
+        injector = cfg.faults if (cfg.faults is not None
+                                  and cfg.faults.active) else None
+        # per-device arming generation: a pending stochastic "fail" heap
+        # event is valid only while its generation is current, so a
+        # scripted/manual crash-and-repair cycle cannot leave a stale
+        # second failure in flight for the same stream
+        fail_arm: Dict[int, int] = {}
+
+        def arm_failure(dev: int, at: float):
+            if injector is None:
+                return
+            t = injector.next_failure(dev, at)
+            if t is not None:
+                g = fail_arm.get(dev, 0) + 1
+                fail_arm[dev] = g
+                push(t, "fail", gen=g, dev=dev)
+
+        def work_outstanding() -> bool:
+            # inject() keeps n_settled exact across client retries, so
+            # this is "some logical task is not DONE/DROPPED right now"
+            return n_settled < len(by_id)
+
+        def crash_resident(d: DeviceState, now: float):
+            # the in-flight task loses everything since its last durable
+            # checkpoint (snapshots are spilled off-device, so they
+            # survive the crash) and is re-queued; the device keeps its
+            # busy_time — it did spin, the work is just lost
+            task = d.running
+            if task is None:
+                return
+            sync_running(now)
+            task.lost_work += max(0.0, task.executed - task.ckpt_executed)
+            task.n_crashes += 1
+            if task.ckpt_executed > 0.0:
+                task.executed = task.ckpt_executed
+                task.restore_pending = True
+                task.state = TaskState.PREEMPTED
+            else:
+                task.reset_progress()        # KILL-style restart
+                task.state = TaskState.WAITING
+            task.last_wake = now
+            ready.append(task)
+            d.running = None
+            busy.pop(d.dev, None)
+            d.run_gen += 1                   # invalidate its completion
+            d.busy_until = now
+            log(now, "task_lost", task.tid, d.dev)
+
+        def do_fail(dev: int, now: float, scripted: bool) -> bool:
+            d = devices[dev] if 0 <= dev < len(devices) else None
+            if d is None or not d.alive or d.failed:
+                return False
+            crash_resident(d, now)
+            d.failed = True
+            d.failed_at = now
+            idle.pop(dev, None)
+            self.cluster.n_failures += 1
+            log(now, "device_fail", -1, dev)
+            bus.device_fail(now, dev)
+            # stochastic failures always heal through the MTTR process
+            # (instantly when mttr == 0: a transient blip); a scripted or
+            # manual crash heals only through mttr > 0, a scripted
+            # recover, or recover_device — otherwise it is permanent
+            if injector is not None and (not scripted or injector.mttr > 0):
+                push(injector.repair_at(dev, now), "recover", dev=dev)
+            return True
+
+        def do_recover(dev: int, now: float) -> bool:
+            d = devices[dev] if 0 <= dev < len(devices) else None
+            if d is None or not d.alive or not d.failed:
+                return False
+            if d.failed_at is not None:
+                d.downtime += max(0.0, now - d.failed_at)
+            d.failed = False
+            d.failed_at = None
+            if not d.draining and d.running is None:
+                idle[dev] = d
+            d.busy_until = max(d.busy_until, now)
+            log(now, "device_recover", -1, dev)
+            bus.device_recover(now, dev)
+            if work_outstanding():
+                arm_failure(dev, now)        # the stream continues
+            return True
+
+        def unplug_dev(dev: int) -> None:
+            # unplanned removal: same explicit loss/re-queue path as a
+            # crash, then the device leaves the cluster for good
+            d = devices[dev]
+            if not d.alive:
+                return
+            if d.failed:
+                # close the open failure window before the ledger freezes
+                if d.failed_at is not None:
+                    d.downtime += max(0.0, clock - d.failed_at)
+                d.failed = False
+                d.failed_at = None
+            crash_resident(d, clock)
+            idle.pop(dev, None)
+            if d in drainish:
+                drainish.remove(d)
+            self.cluster.remove_device(dev, clock)
+            log(clock, "device_down", -1, dev)
+            bus.device_down(clock, dev)
+            push_retry(clock)                # re-place the evictee
+
+        def fail_dev_hook(dev: int) -> None:
+            if do_fail(dev, clock, scripted=True):
+                push_retry(clock)            # re-place the evictee
+
+        def recover_dev_hook(dev: int) -> None:
+            if do_recover(dev, clock):
+                push_retry(clock)            # the queue may drain into it
+
+        self._elastic = (add_dev, drain_dev, unplug_dev,
+                         fail_dev_hook, recover_dev_hook)
+
+        if injector is not None:
+            injector.reset()
+            for st, sk, sdev in injector.scripted():
+                push(float(st), "fail" if sk == "fail" else "recover",
+                     gen=-1, dev=int(sdev))
+            for d in devices:                # device order: deterministic
+                arm_failure(d.dev, 0.0)
 
         # ---------------- main loop ----------------
         try:
@@ -728,10 +929,14 @@ class ClusterSimulator:
                 clock = now
                 if kind == "arrival":
                     task = by_id[tid]
+                    pending_arrivals.discard(tid)
                     if not event_hooks.offer(bus, admission, task, now,
                                              len(ready)):
-                        task.state = TaskState.DROPPED
-                        n_settled += 1
+                        if tid in pending_arrivals:
+                            pass   # a drop hook already re-offered it
+                        else:
+                            task.state = TaskState.DROPPED
+                            n_settled += 1
                     else:
                         task.last_wake = now
                         ready.append(task)
@@ -772,6 +977,24 @@ class ClusterSimulator:
                         # no work left, but a pending removal may still be
                         # waiting out its eviction spill
                         service_drains(now)
+                elif kind == "fail":
+                    # gen >= 0: stochastic stream (valid only while its
+                    # arming generation is current); gen == -1: scripted.
+                    # Once all work settled, stop the churn so the heap
+                    # drains and the run terminates.
+                    if gen >= 0 and gen != fail_arm.get(dev):
+                        continue
+                    if not work_outstanding():
+                        continue
+                    if do_fail(dev, now, scripted=gen < 0):
+                        schedule(now)
+                        if ready:
+                            ensure_quantum(now)
+                elif kind == "recover":
+                    if do_recover(dev, now):
+                        schedule(now)
+                        if ready:
+                            ensure_quantum(now)
                 if n_settled == len(by_id) and not events:
                     break
         finally:
@@ -792,8 +1015,10 @@ class ClusterSimulator:
         makespan = max(done) if done else 0.0
         out = metrics.cluster_summary(
             self._tasks, self.cluster.busy_times(), makespan,
-            capacity_seconds=self.cluster.capacity_seconds(makespan))
+            capacity_seconds=self.cluster.capacity_seconds(makespan),
+            downtime_seconds=self.cluster.downtime_seconds(makespan))
         out["migrations"] = float(self.cluster.n_migrations)
         out["n_scale_ups"] = float(self.cluster.n_scale_ups)
         out["n_scale_downs"] = float(self.cluster.n_scale_downs)
+        out["n_failures"] = float(self.cluster.n_failures)
         return out

@@ -27,6 +27,22 @@ Elastic clusters add three *device lifecycle* events (``tid == -1``):
 ``device_down``   a drained device left the cluster for good.
 ================  =========================================================
 
+Fault injection (``core/faults.py``) adds two more device events
+(``tid == -1``) and two client-recovery events:
+
+==================  =======================================================
+``device_fail``     a device crashed: zero capacity until repaired; its
+                    in-flight task lost all un-checkpointed progress and
+                    was re-queued (KILL-style restart when it had no
+                    durable checkpoint).
+``device_recover``  a failed device was repaired and is schedulable again.
+``retry``           a client re-offered a dropped task after a backoff
+                    (``repro.workloads.retry.RetryDriver``); same ``tid``,
+                    new attempt.
+``abandon``         a client gave up on a task for good — retry budget
+                    exhausted or its deadline passed (``device == -1``).
+==================  =======================================================
+
 The bus is the one observation point for reactive subsystems: closed-loop
 clients resample their think time on ``complete``/``drop``
 (:class:`repro.workloads.arrivals.ClosedLoopDriver`), executed-trace
@@ -55,8 +71,13 @@ EVENT_KINDS = (
     "device_up",
     "device_drain",
     "device_down",
+    "device_fail",
+    "device_recover",
+    "retry",
+    "abandon",
 )
 DEVICE_EVENT_KINDS = ("device_up", "device_drain", "device_down")
+FAULT_EVENT_KINDS = ("device_fail", "device_recover")
 
 
 class Event(NamedTuple):
@@ -109,6 +130,8 @@ class EventBus:
         self._subs["*"] = []
         self.keep_log = keep_log
         self.log: List[Event] = []
+        self._emitting = False
+        self._pending: List[Event] = []
 
     # -- subscription --------------------------------------------------
     def subscribe(self, kind: str, fn: Subscriber) -> Subscriber:
@@ -144,6 +167,25 @@ class EventBus:
     def emit(self, ev: Event) -> None:
         if self.keep_log:
             self.log.append(ev)
+        # breadth-first delivery: an event emitted from inside a hook
+        # (e.g. RetryDriver announcing a ``retry`` while handling a
+        # ``drop``) is logged immediately but notified only after the
+        # triggering event's subscribers have all run, so every
+        # subscriber — streaming sinks included — observes events in
+        # exactly the log order
+        if self._emitting:
+            self._pending.append(ev)
+            return
+        self._emitting = True
+        try:
+            self._notify(ev)
+            while self._pending:
+                self._notify(self._pending.pop(0))
+        finally:
+            self._emitting = False
+            del self._pending[:]
+
+    def _notify(self, ev: Event) -> None:
         # snapshot subscriber lists only when non-empty: a hook may
         # (un)subscribe from inside a callback, but the common case is
         # no subscribers at all and must stay allocation-free
@@ -186,6 +228,21 @@ class EventBus:
 
     def device_down(self, t: float, device: int) -> None:
         self.emit(Event(t=float(t), kind="device_down", tid=-1, device=device))
+
+    # -- faults (core/faults.py; tid == -1) ----------------------------
+    def device_fail(self, t: float, device: int) -> None:
+        self.emit(Event(t=float(t), kind="device_fail", tid=-1, device=device))
+
+    def device_recover(self, t: float, device: int) -> None:
+        self.emit(Event(t=float(t), kind="device_recover", tid=-1,
+                        device=device))
+
+    # -- client recovery (repro.workloads.retry) -----------------------
+    def retry(self, t: float, task) -> None:
+        self._task_event(t, "retry", task, -1)
+
+    def abandon(self, t: float, task) -> None:
+        self._task_event(t, "abandon", task, -1)
 
 
 class JsonlSpool:

@@ -154,6 +154,11 @@ def summarize(tasks: Sequence[Task]) -> Dict[str, float]:
         "ckpt_overhead": float(np.sum([t.checkpoint_overhead for t in done])),
         "sla_satisfaction": sat,
         "goodput": good,
+        # fault tolerance (all zero on failure-free runs)
+        "lost_work": float(np.sum([t.lost_work for t in tasks])),
+        "n_crashes": float(np.sum([t.n_crashes for t in tasks])),
+        "retries": float(np.sum([t.n_retries for t in tasks])),
+        "n_abandoned": float(np.sum([t.abandoned for t in tasks])),
     }
     out.update(_percentile_rows(
         {"turnaround": tat, "ntt": ntts,
@@ -201,7 +206,14 @@ def per_tenant_summary(tasks: Sequence[Task],
                "sla_satisfaction": (float(np.mean(met)) if done
                                     else float("nan")),
                "goodput": (float(np.sum(met)) / max(makespan, 1e-12)
-                           if done else 0.0)}
+                           if done else 0.0),
+               # one logical task, many attempts: retries/crashes accrue
+               # on the same Task, so the offered/admitted split above
+               # stays exact under client retry and crash re-queue
+               "retries": float(np.sum([t.n_retries for t in ts])),
+               "n_abandoned": float(np.sum([t.abandoned for t in ts])),
+               "n_crashes": float(np.sum([t.n_crashes for t in ts])),
+               "lost_work": float(np.sum([t.lost_work for t in ts]))}
         if done:
             ntts = np.asarray([t.ntt for t in done])
             row["antt"] = float(np.mean(ntts))
@@ -252,7 +264,8 @@ def device_utilization(busy_times: Sequence[float], makespan: float,
 
 def cluster_health(tasks: Sequence[Task], busy_times: Sequence[float],
                    makespan: float,
-                   capacity_seconds: Optional[Sequence[float]] = None
+                   capacity_seconds: Optional[Sequence[float]] = None,
+                   downtime_seconds: Optional[Sequence[float]] = None
                    ) -> Dict[str, float]:
     """Cluster-level utilization, throughput, and cross-device balance
     only — no per-task latency aggregates (compose with ``summarize``
@@ -260,7 +273,10 @@ def cluster_health(tasks: Sequence[Task], busy_times: Sequence[float],
     ``capacity_seconds`` carries per-device alive windows for elastic
     clusters; ``capacity_seconds`` in the output is the total
     device-seconds the configuration consumed (the denominator of any
-    cost-normalized comparison across fleet sizes)."""
+    cost-normalized comparison across fleet sizes).  ``downtime_seconds``
+    carries per-device failed time (core/faults.py) and adds an
+    ``availability`` key: the fraction of paid-for device-seconds the
+    fleet was actually serviceable."""
     out: Dict[str, float] = {}
     utils = device_utilization(busy_times, makespan, capacity_seconds)
     per_dev = per_device_summary(tasks)
@@ -281,18 +297,25 @@ def cluster_health(tasks: Sequence[Task], busy_times: Sequence[float],
             for dev in range(len(busy_times))]
     out["device_fairness"] = (float(min(stps) / max(max(stps), 1e-12))
                               if len(stps) > 1 else 1.0)
+    if downtime_seconds is not None:
+        down = float(np.sum(downtime_seconds))
+        out["downtime_seconds"] = down
+        out["availability"] = 1.0 - down / max(out["capacity_seconds"], 1e-12)
     return out
 
 
 def cluster_summary(tasks: Sequence[Task], busy_times: Sequence[float],
                     makespan: float,
-                    capacity_seconds: Optional[Sequence[float]] = None
+                    capacity_seconds: Optional[Sequence[float]] = None,
+                    downtime_seconds: Optional[Sequence[float]] = None
                     ) -> Dict[str, float]:
     """Global ``summarize`` (incl. tail percentiles) plus cluster-level
     utilization, throughput and cross-device balance (STP/ANTT across
     devices).  Pass ``capacity_seconds`` (per-device alive windows) for
     elastic clusters so utilization divides by alive time, not the
-    global makespan."""
+    global makespan, and ``downtime_seconds`` (per-device failed time)
+    for an ``availability`` figure."""
     out = summarize(tasks)
-    out.update(cluster_health(tasks, busy_times, makespan, capacity_seconds))
+    out.update(cluster_health(tasks, busy_times, makespan, capacity_seconds,
+                              downtime_seconds))
     return out

@@ -121,12 +121,22 @@ class NPUSimulator:
             t.state = TaskState.WAITING
             push(t.arrival, "arrival", t.tid)
 
+        pending_arrivals: set = set()   # injected tids not yet offered
+
         def inject(task: Task, at: float):
+            nonlocal n_settled
             at = float(at)
+            if (task.tid in by_id and task.tid not in pending_arrivals
+                    and task.state in (TaskState.DONE, TaskState.DROPPED)):
+                # re-offer of a settled logical task (client retry): it is
+                # outstanding again — one task, many attempts, n_settled
+                # stays exact
+                n_settled -= 1
             task.state = TaskState.WAITING
             task.arrival = at
             task.last_wake = at
             by_id[task.tid] = task
+            pending_arrivals.add(task.tid)
             push(at, "arrival", task.tid)
         self._inject = inject
 
@@ -181,6 +191,8 @@ class NPUSimulator:
             elapsed = max(0.0, now - run_start)
             free_at = now
             if mech is Mechanism.KILL:
+                # everything since the last restart-from-zero is redone work
+                task.lost_work += task.executed + elapsed
                 task.executed = 0.0
                 task.reset_progress()
                 task.n_kills += 1
@@ -188,6 +200,7 @@ class NPUSimulator:
             else:  # CHECKPOINT
                 extra = tile_roundup(task, elapsed)
                 task.executed += elapsed + extra
+                task.ckpt_executed = task.executed   # durable snapshot
                 lat = preemption.checkpoint_latency(task, hw)
                 task.checkpoint_overhead += lat
                 task.restore_pending = True
@@ -238,10 +251,14 @@ class NPUSimulator:
                 now, _, kind, tid, gen = heapq.heappop(events)
                 if kind == "arrival":
                     task = by_id[tid]
+                    pending_arrivals.discard(tid)
                     if not event_hooks.offer(bus, admission, task, now,
                                              len(ready)):
-                        task.state = TaskState.DROPPED
-                        n_settled += 1
+                        if tid in pending_arrivals:
+                            pass   # a drop hook already re-offered it
+                        else:
+                            task.state = TaskState.DROPPED
+                            n_settled += 1
                     else:
                         task.last_wake = now
                         ready.append(task)

@@ -53,6 +53,15 @@ class Task:
     n_kills: int = 0
     checkpoint_overhead: float = 0.0   # total ckpt+restore seconds paid
     restore_pending: bool = False      # must pay restore latency on resume
+    # ---- fault-tolerance state (core/faults.py, workloads/retry.py) ----
+    ckpt_executed: float = 0.0         # progress at the last durable ckpt
+    lost_work: float = 0.0             # executed seconds wiped by crashes
+    #                                    and KILL restarts (redone work)
+    n_crashes: int = 0                 # devices that died under this task
+    n_retries: int = 0                 # client re-offers after a drop
+    abandoned: bool = False            # client gave up (budget/deadline)
+    first_offer: Optional[float] = None  # first submission (retries move
+    #                                      ``arrival`` to the last attempt)
 
     def __post_init__(self):
         self.tokens = float(self.priority)
@@ -91,9 +100,11 @@ class Task:
         return int(min(self.node_out_bytes[node], vmem_bytes))
 
     def reset_progress(self):
-        """KILL: all progress is lost (paper §IV-C)."""
+        """KILL: all progress is lost (paper §IV-C), including any durable
+        checkpoint — a killed task restarts from scratch."""
         self.executed = 0.0
         self.restore_pending = False
+        self.ckpt_executed = 0.0
 
     # ---- metrics ----
     @property

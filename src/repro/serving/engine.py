@@ -195,6 +195,18 @@ class ServingEngine:
         """Scale down: drain ``dev`` and retire it once idle."""
         self._elastic_hooks()[1](dev, True)
 
+    # ---- failures (valid during run(), from event hooks) -------------
+    def fail_device(self, dev: int) -> None:
+        """Crash ``dev`` now.  Its resident loses the device-resident
+        tensor state and restarts KILL-style (``execute=False`` restores
+        from the last durable checkpoint instead); the device contributes
+        zero capacity until :meth:`recover_device`."""
+        self._elastic_hooks()[2](dev)
+
+    def recover_device(self, dev: int) -> None:
+        """Repair a device crashed with :meth:`fail_device`."""
+        self._elastic_hooks()[3](dev)
+
     @property
     def n_alive_devices(self) -> int:
         return self.cluster.n_alive
@@ -283,12 +295,34 @@ class ServingEngine:
         while len(self.kvs) < len(devices):
             self.kvs.append(KVCacheManager(self._kv_capacity))
         ready = _ReadyJobs()
-        n_dropped = 0
         clock = 0.0                        # last observed sim time (hooks)
+        # settled logical requests this run (rid-keyed: a request that is
+        # dropped, retried, and later completed settles exactly once)
+        settled_rids: set = set()
+        recorded: set = set()              # rids appended to self.tasks
+
+        def record(j: _Job) -> None:
+            if j.req.rid not in recorded:
+                recorded.add(j.req.rid)
+                self.tasks.append(j.task)
 
         def inject(req: InferenceRequest, at: float):
             req.arrival = float(at)
-            jobs[req.rid] = self._make_job(req)
+            j = jobs.get(req.rid)
+            if j is not None and j.req is req:
+                # re-offer of the same logical request (client retry):
+                # keep its Task — attempt counters and admission
+                # accounting stay exact (one task, many attempts)
+                j.task.arrival = req.arrival
+                j.task.n_retries = int(req.n_retries)
+                if req.first_offer is not None:
+                    j.task.first_offer = float(req.first_offer)
+                settled_rids.discard(req.rid)
+            else:
+                if j is not None:
+                    recorded.discard(req.rid)  # rid reuse: new logical task
+                    settled_rids.discard(req.rid)
+                jobs[req.rid] = self._make_job(req)
             heapq.heappush(arrivals, (req.arrival, req.rid))
         self._inject = inject
 
@@ -319,18 +353,21 @@ class ServingEngine:
                 bus.device_drain(clock, dev)
             d.remove_pending = d.remove_pending or remove
             settle_drain(dev, clock)
-        self._elastic = (add_dev, drain_dev)
 
         def ingest(now):
-            nonlocal n_dropped
             while arrivals and arrivals[0][0] <= now + 1e-15:
                 at, rid = heapq.heappop(arrivals)
                 j = jobs[rid]
+                if at + 1e-15 < j.req.arrival or rid in settled_rids:
+                    continue   # stale entry from a superseded attempt
                 if not events_mod.offer(bus, admission, j.task, at,
                                         len(ready)):
+                    if jobs[rid].req.arrival > at + 1e-15:
+                        continue   # a drop hook already re-offered it
                     j.task.state = TaskState.DROPPED
-                    self.tasks.append(j.task)
-                    n_dropped += 1
+                    j.task.abandoned = bool(j.req.abandoned)
+                    record(j)
+                    settled_rids.add(rid)
                     continue
                 j.task.state = TaskState.WAITING
                 j.task.last_wake = j.req.arrival
@@ -354,7 +391,6 @@ class ServingEngine:
             t = j.task
             now = dev_clock[d]
             clock = max(clock, now)
-            bus.dispatch(now, t, d)
             if t.restore_pending:
                 lat = preemption.restore_latency(t, dev_hw(d))
                 if t.device is not None and t.device != d:
@@ -382,6 +418,10 @@ class ServingEngine:
             if t.first_service is None:
                 t.first_service = dev_clock[d]
             running[d] = j
+            # emitted only after the job is fully installed, so a hook
+            # that crashes this device (fail_device) evicts a consistent
+            # resident instead of racing half-initialized state
+            bus.dispatch(now, t, d)
 
         def do_checkpoint(d: int, j: _Job):
             t = j.task
@@ -391,6 +431,7 @@ class ServingEngine:
                 lat += self.kvs[d].resize(j.req.rid, j.state.cache_bytes(),
                                           dev_clock[d])
             t.checkpoint_overhead += lat
+            t.ckpt_executed = t.executed   # durable snapshot
             t.restore_pending = True
             t.n_preemptions += 1
             t.state = TaskState.PREEMPTED
@@ -399,6 +440,8 @@ class ServingEngine:
         def do_kill(d: int, j: _Job):
             j.state = None
             self.kvs[d].release(j.req.rid)
+            # everything since the last restart-from-zero is redone work
+            j.task.lost_work += j.task.executed
             j.task.reset_progress()
             j.task.n_kills += 1
             j.task.state = TaskState.WAITING
@@ -428,7 +471,8 @@ class ServingEngine:
                 sla_target=j.req.sla_scale * t.isolated_time,
                 tenant=j.req.tenant)
             self.completed.append(j.result)
-            self.tasks.append(t)
+            record(j)
+            settled_rids.add(j.req.rid)
             self._run_tasks.append(t)
             running[d] = None
             devices[d].running = None
@@ -472,21 +516,63 @@ class ServingEngine:
                 return False
             return t.remaining <= 1e-15
 
+        # ---- failures (crash = KILL-style restart: the device's tensor
+        # state is gone; in virtual mode a durable checkpoint restores) --
+        def fail_dev(dev: int) -> None:
+            d = devices[dev]
+            if not d.alive or d.failed:
+                return
+            j = running[dev]
+            if j is not None:
+                t = j.task
+                t.lost_work += max(0.0, t.executed - t.ckpt_executed)
+                t.n_crashes += 1
+                self.kvs[dev].release(j.req.rid)   # HBM content is gone
+                if not self.execute and t.ckpt_executed > 0.0:
+                    # virtual mode models spilled snapshots as durable
+                    t.executed = t.ckpt_executed
+                    t.restore_pending = True
+                    t.state = TaskState.PREEMPTED
+                else:
+                    j.state = None
+                    t.reset_progress()
+                    t.state = TaskState.WAITING
+                running[dev] = None
+                d.running = None
+                ready.append(j)
+                t.last_wake = clock
+            d.failed = True
+            d.failed_at = clock
+            self.cluster.n_failures += 1
+            bus.device_fail(clock, dev)
+
+        def recover_dev(dev: int) -> None:
+            d = devices[dev]
+            if not d.alive or not d.failed:
+                return
+            if d.failed_at is not None:
+                d.downtime += max(0.0, clock - d.failed_at)
+            d.failed = False
+            d.failed_at = None
+            dev_clock[dev] = max(dev_clock[dev], clock)
+            bus.device_recover(clock, dev)
+        self._elastic = (add_dev, drain_dev, fail_dev, recover_dev)
+
         # ---------------- main loop ----------------
         # Per-device virtual clocks; each iteration advances the device
         # with the smallest clock (running devices win ties so an idle
         # device waiting for work cannot starve progress).  Dead devices
         # drop out of the race; idle draining devices are parked.
-        done_before = len(self.completed)
 
         def selectable(i: int) -> bool:
             d = devices[i]
-            return d.alive and (running[i] is not None or not d.draining)
+            return (d.alive and not d.failed
+                    and (running[i] is not None or not d.draining))
 
-        # closed-loop hooks can grow ``jobs`` mid-run; dropped requests
-        # settle without completing, so count both against the total
+        # closed-loop hooks can grow ``jobs`` mid-run; a request settles
+        # exactly once (complete, or a drop with no client retry)
         try:
-            while len(self.completed) - done_before + n_dropped < len(jobs):
+            while len(settled_rids) < len(jobs):
                 cands = [i for i in range(len(devices)) if selectable(i)]
                 assert cands, "engine has no schedulable devices left"
                 d = min(cands,
@@ -593,8 +679,10 @@ class ServingEngine:
                 makespan = max(t.completion for t in run_tasks)
                 out.update(metrics.cluster_health(
                     run_tasks, self.cluster.busy_times(), makespan,
-                    capacity_seconds=self.cluster.capacity_seconds(makespan)))
+                    capacity_seconds=self.cluster.capacity_seconds(makespan),
+                    downtime_seconds=self.cluster.downtime_seconds(makespan)))
             out["migrations"] = float(self.cluster.n_migrations)
             out["n_scale_ups"] = float(self.cluster.n_scale_ups)
             out["n_scale_downs"] = float(self.cluster.n_scale_downs)
+            out["n_failures"] = float(self.cluster.n_failures)
         return out

@@ -23,6 +23,11 @@ class InferenceRequest:
     true_decode_len: Optional[int] = None
     img_embeds: Optional[np.ndarray] = None
     frames: Optional[np.ndarray] = None
+    # ---- client-recovery state (repro.workloads.retry) ----
+    n_retries: int = 0              # re-offers after admission drops
+    abandoned: bool = False         # client gave up (budget/deadline)
+    first_offer: Optional[float] = None   # first submission (retries move
+    #                                       ``arrival`` to the last attempt)
 
     @property
     def batch(self) -> int:

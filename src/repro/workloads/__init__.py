@@ -82,6 +82,7 @@ from repro.workloads.arrivals import (ARRIVAL_NAMES, ArrivalProcess,  # noqa: F4
                                       MMPP, Poisson, UniformWindow,
                                       make_arrival)
 from repro.workloads.generator import generate  # noqa: F401
+from repro.workloads.retry import RetryDriver, RetryPolicy  # noqa: F401
 from repro.workloads.spec import (BATCH_CHOICES, TaskSpec,  # noqa: F401
                                   materialize_task, sample_task_spec)
 from repro.workloads.tenants import (TenantSpec, TrafficMix,  # noqa: F401

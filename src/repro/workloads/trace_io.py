@@ -189,34 +189,53 @@ class ExecutedTrace:
     # ------------------------------------------------------------------
     def per_task(self) -> Dict[int, Dict]:
         """Fold the timeline into per-task facts: submit/first-dispatch/
-        completion times, preemption count, drop flag, device set."""
+        completion times, preemption/retry counts, drop/abandon flags,
+        device set.  One row per *logical* task: a retried tid keeps a
+        single row whose ``n_submits`` counts the attempts, and
+        ``dropped`` reflects the final outcome (an admission drop
+        followed by a successful re-offer is not a dropped task)."""
         out: Dict[int, Dict] = {}
         for ev in self.events:
             if ev.tid < 0:
                 continue    # device lifecycle events are not task-scoped
             row = out.setdefault(ev.tid, {
                 "submit": None, "dispatch": None, "complete": None,
-                "dropped": False, "n_preemptions": 0, "devices": []})
-            if ev.kind == "submit" and row["submit"] is None:
-                row["submit"] = ev.t
+                "dropped": False, "abandoned": False, "n_submits": 0,
+                "n_retries": 0, "n_preemptions": 0, "devices": []})
+            if ev.kind == "submit":
+                if row["submit"] is None:
+                    row["submit"] = ev.t
+                row["n_submits"] += 1
             elif ev.kind == "dispatch":
                 if row["dispatch"] is None:
                     row["dispatch"] = ev.t
                 if ev.device not in row["devices"]:
                     row["devices"].append(ev.device)
+                row["dropped"] = False   # a later attempt was admitted
             elif ev.kind == "preempt":
                 row["n_preemptions"] += 1
             elif ev.kind == "complete":
                 row["complete"] = ev.t
+                row["dropped"] = False
             elif ev.kind == "drop":
                 row["dropped"] = True
+            elif ev.kind == "retry":
+                row["n_retries"] += 1
+            elif ev.kind == "abandon":
+                row["abandoned"] = True
         return out
 
     def diff(self, offered: "Trace") -> Dict:
         """Offered-vs-executed comparison: which offered tasks were shed
         or never ran, which executed tasks were not in the offered trace
         (e.g. closed-loop injections), and how far execution drifted from
-        the offer (queueing delay, arrival skew)."""
+        the offer (queueing delay, arrival skew).
+
+        Counts are per *logical* task (``per_task`` folds retried
+        attempts into one row), so ``n_submitted == n_completed +
+        n_dropped + n_in_flight`` stays exact under client retries:
+        ``n_dropped`` is final-outcome drops, attempts show up in
+        ``n_attempts``/``n_retries`` instead."""
         per = self.per_task()
         offered_at = {rec.tid: rec.arrival for rec in offered.records}
         ran = {tid: row for tid, row in per.items()
@@ -229,10 +248,13 @@ class ExecutedTrace:
         return {
             "n_offered": len(offered_at),
             "n_submitted": len(per),
+            "n_attempts": sum(r["n_submits"] for r in per.values()),
             "n_executed": len(ran),
             "n_completed": sum(1 for r in per.values()
                                if r["complete"] is not None),
             "n_dropped": sum(1 for r in per.values() if r["dropped"]),
+            "n_retries": sum(r["n_retries"] for r in per.values()),
+            "n_abandoned": sum(1 for r in per.values() if r["abandoned"]),
             "n_preemptions": sum(r["n_preemptions"] for r in per.values()),
             "dropped": sorted(t for t, r in per.items() if r["dropped"]),
             "never_ran": sorted(t for t in offered_at

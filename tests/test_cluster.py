@@ -306,6 +306,33 @@ def test_remove_device_waits_for_resident_in_finish_mode():
     assert down[0].t >= res.completion - 1e-12
 
 
+def test_remove_device_without_drain_requeues_resident_explicitly():
+    """Unplanned removal (drain=False) must not silently strand the
+    resident: it takes the crash path — progress since the last durable
+    checkpoint is lost, the task re-queues, and the device goes down
+    immediately with no drain phase."""
+    tasks = [mk_task(i, 3, 0.0, 6e-3) for i in range(4)]
+    sim = ClusterSimulator(PAPER_NPU, make_policy("fcfs", False),
+                           ClusterConfig(mechanism="dynamic", n_devices=2))
+    seen = []
+
+    def on_dispatch(ev):
+        if ev.device == 1 and not seen:
+            seen.append(ev.tid)
+            sim.remove_device(1, drain=False)
+    sim.events.on_dispatch(on_dispatch)
+    done = sim.run(tasks)
+    assert all(t.state == TaskState.DONE for t in done)
+    kinds = [ev.kind for ev in sim.events.log]
+    assert kinds.count("device_down") == 1
+    assert "device_drain" not in kinds            # no graceful phase
+    victim = next(t for t in done if t.tid == seen[0])
+    assert victim.n_crashes == 1
+    assert victim.device == 0                     # finished on the survivor
+    down = next(ev for ev in sim.events.log if ev.kind == "device_down")
+    assert victim.completion > down.t
+
+
 def test_elastic_capacity_seconds_less_than_fleet_makespan():
     tasks = _workload(41, n=16)
     sim = ClusterSimulator(PAPER_NPU, make_policy("prema", True),

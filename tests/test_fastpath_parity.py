@@ -121,6 +121,36 @@ def test_parity_under_elasticity():
                               elastic=True))
 
 
+@pytest.mark.parametrize("faults", (
+    None,                                        # no injector at all
+    "inert",                                     # injector that can't fire
+    "clipped",                                   # active, horizon-clipped
+))
+def test_parity_with_non_firing_fault_injector(faults):
+    """A FaultInjector that never produces a fault must leave the run
+    bit-identical to the pre-fault code path (the frozen legacy core):
+    the fault plumbing is pay-for-what-you-use."""
+    from repro.core.faults import FaultInjector
+    w = random_workload(seed=51, n_tasks=30)
+    inj = {None: None,
+           "inert": FaultInjector(),
+           "clipped": FaultInjector(mtbf=1.0, seed=9, horizon=0.0)}[faults]
+    results = {}
+    for impl in ("fast", "legacy"):
+        tasks = [mk_task(i, p, a, t, e) for i, (p, a, t, e) in enumerate(w)]
+        cfg = ClusterConfig(n_devices=2, mechanism="dynamic",
+                            placement="least_loaded",
+                            faults=inj if impl == "fast" else None)
+        if impl == "fast":
+            sim = ClusterSimulator(PAPER_NPU, make_policy("prema", True), cfg)
+        else:
+            sim = LegacyClusterSimulator(PAPER_NPU, "prema", cfg,
+                                         preemptive=True)
+        done = sim.run(tasks)
+        results[impl] = (fingerprint(done), list(sim.events.log))
+    assert_identical(results)
+
+
 def test_ready_queue_selection_matches_list_seeded():
     for policy in ("fcfs", "hpf", "sjf", "token", "prema"):
         pol = make_policy(policy, True)

@@ -1,0 +1,365 @@
+"""Fault injection and recovery: crashes, checkpoint re-queue, retries.
+
+Pins the robustness contracts of core/faults.py, the failure path in
+core/cluster.py / serving/engine.py, and workloads/retry.py:
+
+* the injector's per-device schedules are pure functions of
+  (seed, mtbf, mttr) — reset rewinds, streams are device-independent;
+* a crash loses exactly the un-checkpointed progress: the resident task
+  re-queues from its last durable checkpoint, KILL-style from zero when
+  it has none, and ``lost_work``/``n_crashes``/availability account for
+  it exactly;
+* same seed + same faults ⇒ bit-identical event logs (stochastic
+  failures included); an inert injector is bit-identical to no injector;
+* client retries re-offer the same logical task with deterministic
+  backoff until the budget/deadline abandons it, keeping
+  offered == settled exact on every layer;
+* the new ``device_fail``/``device_recover``/``retry``/``abandon``
+  events round-trip through a JsonlSpool with ``keep_log=False``;
+* ``AutoscalerConfig(replace_failed=True)`` provisions replacement
+  capacity on every crash.
+"""
+import math
+import types
+
+import numpy as np
+import pytest
+
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.events import FAULT_EVENT_KINDS, JsonlSpool
+from repro.core.faults import FaultInjector
+from repro.core.scheduler import make_policy
+from repro.core.simulator import NPUSimulator, SimConfig
+from repro.core.task import Task, TaskState
+from repro.hw import PAPER_NPU
+from repro.workloads import ExecutedTrace, QueueShed, RetryDriver, RetryPolicy
+
+
+def mk_task(tid, priority=3, arrival=0.0, total=4e-3, tenant=None, n=16):
+    return Task(tid=tid, model=f"m{tid % 3}", priority=priority,
+                arrival=arrival, batch=1, node_times=np.full(n, total / n),
+                node_out_bytes=np.full(n, 1 << 20, dtype=np.int64),
+                predicted_total=total, tenant=tenant)
+
+
+def workload(seed, n=24, lo=2e-3, hi=12e-3):
+    rng = np.random.default_rng(seed)
+    return [mk_task(i, int(rng.choice([1, 3, 9])),
+                    float(rng.uniform(0, 20e-3)), float(rng.uniform(lo, hi)))
+            for i in range(n)]
+
+
+def make_sim(**cfg_kwargs):
+    cfg_kwargs.setdefault("n_devices", 2)
+    return ClusterSimulator(PAPER_NPU, make_policy("prema", True),
+                            ClusterConfig(**cfg_kwargs))
+
+
+def kinds(sim):
+    return [ev.kind for ev in sim.events.log]
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_injector_streams_are_deterministic_and_per_device():
+    a = FaultInjector(mtbf=1.0, mttr=0.1, seed=7)
+    b = FaultInjector(mtbf=1.0, mttr=0.1, seed=7)
+    seq_a = [a.first_failure(0, 0.0), a.repair_at(0, 1.0),
+             a.next_failure(0, 2.0)]
+    seq_b = [b.first_failure(0, 0.0), b.repair_at(0, 1.0),
+             b.next_failure(0, 2.0)]
+    assert seq_a == seq_b
+    # other devices draw from independent streams
+    assert a.first_failure(1, 0.0) != seq_a[0]
+    # reset rewinds every stream to the start
+    a.reset()
+    assert a.first_failure(0, 0.0) == seq_a[0]
+
+
+def test_injector_validation_and_inertness():
+    with pytest.raises(ValueError):
+        FaultInjector(mtbf=0.0)
+    with pytest.raises(ValueError):
+        FaultInjector(mttr=-1.0)
+    with pytest.raises(ValueError):
+        FaultInjector(script=((0.1, "explode", 0),))
+    assert not FaultInjector().active
+    assert FaultInjector(mtbf=1.0).active
+    assert FaultInjector(script=((0.1, "fail", 0),)).active
+
+
+def test_injector_horizon_and_instant_repair():
+    inj = FaultInjector(mtbf=1.0, seed=3, horizon=1e-9)
+    assert inj.first_failure(0, 0.0) is None   # clipped past the horizon
+    assert FaultInjector(mtbf=1.0).repair_at(4, 2.5) == 2.5   # mttr == 0
+    entries = FaultInjector(script=((0.2, "recover", 1), (0.1, "fail", 1))
+                            ).scripted()
+    assert entries == [(0.1, "fail", 1), (0.2, "recover", 1)]
+
+
+# ---------------------------------------------------------------------------
+# cluster crashes: scripted, stochastic, checkpoint-vs-kill
+# ---------------------------------------------------------------------------
+
+
+def test_scripted_crash_loses_progress_and_recovers():
+    # one long task alone on one device: fail at 4 ms, repair at 6 ms.
+    # No checkpoint exists, so the restart is KILL-style from zero.
+    sim = make_sim(n_devices=1,
+                   faults=FaultInjector(script=((4e-3, "fail", 0),
+                                                (6e-3, "recover", 0))))
+    (t,) = sim.run([mk_task(0, total=10e-3)])
+    assert t.state is TaskState.DONE
+    assert t.n_crashes == 1
+    assert t.lost_work == pytest.approx(4e-3, rel=1e-3)
+    assert t.completion == pytest.approx(16e-3, rel=1e-2)  # 6 ms + full rerun
+    s = sim.summary()
+    assert s["n_failures"] == 1
+    assert s["downtime_seconds"] == pytest.approx(2e-3, rel=1e-6)
+    assert 0.0 < s["availability"] < 1.0
+    for k in FAULT_EVENT_KINDS:
+        assert k in kinds(sim)
+
+
+def test_checkpoint_recovery_beats_kill_restart():
+    # same workload + same crash schedule under both mechanisms: durable
+    # checkpoints bound what a crash (or preemption) can destroy
+    results = {}
+    for mech in ("checkpoint", "kill"):
+        sim = make_sim(n_devices=2, mechanism=mech,
+                       faults=FaultInjector(mtbf=0.03, mttr=0.005, seed=5))
+        done = sim.run(workload(9, n=30, lo=2e-3, hi=20e-3))
+        assert all(t.state is TaskState.DONE for t in done)
+        results[mech] = sim.summary()
+    assert results["checkpoint"]["n_failures"] == results["kill"]["n_failures"]
+    assert 0.0 < results["checkpoint"]["lost_work"] < results["kill"]["lost_work"]
+
+
+def test_stochastic_failures_are_bit_deterministic():
+    def run():
+        sim = make_sim(faults=FaultInjector(mtbf=0.02, mttr=0.004, seed=11))
+        done = sim.run(workload(13))
+        return list(sim.events.log), sim.summary(), done
+
+    log_a, sum_a, done_a = run()
+    log_b, sum_b, done_b = run()
+    assert sum_a["n_failures"] > 0
+    assert log_a == log_b
+    assert sum_a == sum_b
+    assert ([(t.tid, t.completion, t.lost_work, t.n_crashes) for t in done_a]
+            == [(t.tid, t.completion, t.lost_work, t.n_crashes) for t in done_b])
+
+
+def test_manual_fail_without_repair_is_permanent():
+    # crash one of two devices mid-run and never repair it: the survivor
+    # finishes everything, the dead device accrues downtime to makespan
+    sim = make_sim(n_devices=2)
+    state = {"done": 0}
+
+    def hook(ev):
+        state["done"] += 1
+        if state["done"] == 2:
+            sim.fail_device(ev.device)
+
+    sim.events.on_complete(hook)
+    done = sim.run(workload(17, n=12))
+    assert all(t.state is TaskState.DONE for t in done)
+    s = sim.summary()
+    assert s["n_failures"] == 1
+    assert s["availability"] < 1.0
+    assert "device_fail" in kinds(sim) and "device_recover" not in kinds(sim)
+
+
+# ---------------------------------------------------------------------------
+# client retries: budgets, backoff, abandonment, exact accounting
+# ---------------------------------------------------------------------------
+
+
+def test_retry_policy_backoff_and_deadline():
+    pol = RetryPolicy(max_retries=3, backoff=1e-3, backoff_mult=2.0,
+                      deadline=0.5, deadline_scale=4.0)
+    assert pol.backoff_for(0) == 1e-3 and pol.backoff_for(2) == 4e-3
+    slow = types.SimpleNamespace(isolated_time=1.0)
+    fast = types.SimpleNamespace(isolated_time=0.01)
+    assert pol.deadline_for(slow) == 0.5          # absolute bound wins
+    assert pol.deadline_for(fast) == pytest.approx(0.04)
+    assert RetryPolicy().deadline_for(slow) is None
+
+
+def test_retries_keep_offered_accounting_exact():
+    # a burst into a depth-2 shedder: drops re-offer with backoff until
+    # admitted, so every logical task settles exactly once
+    tasks = [mk_task(i, arrival=0.0, total=2e-3, tenant="burst")
+             for i in range(12)]
+    sim = make_sim(n_devices=1, admission=QueueShed(max_depth=2))
+    driver = RetryDriver(RetryPolicy(max_retries=10, backoff=2e-3))
+    done = driver.drive(sim, tasks)
+    n_drop = sum(1 for t in tasks if t.state is TaskState.DROPPED)
+    n_done = sum(1 for t in tasks if t.state is TaskState.DONE)
+    assert len(done) == 12 and n_done + n_drop == 12
+    assert driver.n_retried > 0
+    assert sum(t.n_retries for t in tasks) == driver.n_retried
+    log_kinds = kinds(sim)
+    assert log_kinds.count("retry") == driver.n_retried
+    assert log_kinds.count("submit") == 12 + driver.n_retried
+    # per-logical-task folding: one row per tid, attempts counted
+    per = ExecutedTrace.capture(sim).per_task()
+    assert len(per) == 12
+    assert sum(r["n_submits"] for r in per.values()) == 12 + driver.n_retried
+    offered = types.SimpleNamespace(records=[
+        types.SimpleNamespace(tid=t.tid, arrival=0.0) for t in tasks])
+    d = ExecutedTrace.capture(sim).diff(offered)
+    assert d["n_offered"] == d["n_submitted"] == 12
+    assert d["n_completed"] + d["n_dropped"] == 12
+    assert d["n_retries"] == driver.n_retried
+
+
+def test_retry_budget_exhaustion_abandons():
+    tasks = [mk_task(i, arrival=0.0, total=5e-3) for i in range(10)]
+    sim = make_sim(n_devices=1, admission=QueueShed(max_depth=1))
+    driver = RetryDriver(RetryPolicy(max_retries=1, backoff=1e-4))
+    driver.drive(sim, tasks)
+    abandoned = [t for t in tasks if t.abandoned]
+    assert driver.n_abandoned == len(abandoned) > 0
+    assert all(t.state is TaskState.DROPPED for t in abandoned)
+    assert kinds(sim).count("abandon") == driver.n_abandoned
+    s = sim.summary()
+    assert s["n_abandoned"] == driver.n_abandoned
+    assert s["retries"] == driver.n_retried
+
+
+def test_deadline_turns_retry_into_abandon():
+    # backoff lands every re-offer past the client's patience: no retries
+    tasks = [mk_task(i, arrival=0.0, total=5e-3) for i in range(8)]
+    sim = make_sim(n_devices=1, admission=QueueShed(max_depth=1))
+    driver = RetryDriver(RetryPolicy(max_retries=100, backoff=10.0,
+                                     deadline=1e-3))
+    driver.drive(sim, tasks)
+    assert driver.n_retried == 0
+    assert driver.n_abandoned == sum(1 for t in tasks
+                                     if t.state is TaskState.DROPPED) > 0
+
+
+def test_retries_on_single_npu_simulator():
+    tasks = [mk_task(i, arrival=0.0, total=2e-3) for i in range(8)]
+    sim = NPUSimulator(PAPER_NPU, make_policy("prema", True),
+                       SimConfig(admission=QueueShed(max_depth=2)))
+    done = RetryDriver(RetryPolicy(max_retries=10, backoff=2e-3)
+                       ).drive(sim, tasks)
+    settled = sum(1 for t in tasks
+                  if t.state in (TaskState.DONE, TaskState.DROPPED))
+    assert len(done) == settled == 8
+
+
+def test_chaos_plus_retries_stay_exact():
+    # failures and client retries together: accounting still settles
+    tasks = workload(29, n=20)
+    for t in tasks:
+        t.tenant = "hi" if t.priority == 9 else "lo"
+    sim = make_sim(n_devices=2, admission=QueueShed(max_depth=3),
+                   faults=FaultInjector(mtbf=0.02, mttr=0.004, seed=3))
+    driver = RetryDriver(RetryPolicy(max_retries=5, backoff=1e-3))
+    done = driver.drive(sim, tasks)
+    n_drop = sum(1 for t in tasks if t.state is TaskState.DROPPED)
+    n_done = sum(1 for t in tasks if t.state is TaskState.DONE)
+    assert len(done) == 20 and n_done + n_drop == 20
+    s = sim.summary()
+    assert s["n_failures"] > 0
+    assert math.isfinite(s["availability"]) and s["availability"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# event round-trip: keep_log=False + JsonlSpool
+# ---------------------------------------------------------------------------
+
+
+def test_fault_and_retry_events_spool_roundtrip(tmp_path):
+    def build():
+        tasks = [mk_task(i, arrival=0.0, total=4e-3) for i in range(10)]
+        sim = make_sim(n_devices=1, admission=QueueShed(max_depth=1),
+                       faults=FaultInjector(script=((3e-3, "fail", 0),
+                                                    (5e-3, "recover", 0))))
+        return sim, tasks, RetryDriver(RetryPolicy(max_retries=2,
+                                                   backoff=2e-3))
+
+    sim, tasks, driver = build()
+    driver.drive(sim, tasks)
+    ref_log = list(sim.events.log)
+    assert {"device_fail", "device_recover", "retry", "abandon"} <= set(
+        ev.kind for ev in ref_log)
+
+    path = tmp_path / "chaos.jsonl"
+    sim, tasks, driver = build()
+    sim.events.keep_log = False
+    with JsonlSpool(str(path)) as spool:
+        spool.attach(sim.events)
+        driver.drive(sim, tasks)
+        assert sim.events.log == []          # nothing buffered in memory
+        assert spool.n_events == len(ref_log)
+    assert ExecutedTrace.load(str(path)).events == ref_log
+
+
+# ---------------------------------------------------------------------------
+# serving engine: fail/recover hooks
+# ---------------------------------------------------------------------------
+
+
+def test_engine_device_failure_and_recovery():
+    jax = pytest.importorskip("jax")
+    from repro.models import get_model
+    from repro.serving import InferenceRequest, ServingEngine
+
+    m = get_model("olmo-1b", tiny=True)
+    eng = ServingEngine(
+        {"olmo-1b": (m, m.init_params(jax.random.PRNGKey(0)))},
+        policy="prema", execute=False, n_devices=2)
+    state = {"failed": False}
+
+    def hook(ev):
+        if not state["failed"] and ev.device == 0:
+            state["failed"] = True
+            eng.fail_device(0)
+            eng.recover_device(0)
+
+    eng.events.on_dispatch(hook)
+    reqs = [InferenceRequest(rid=i, arch="olmo-1b",
+                             prompt=np.ones((1, 8), np.int32),
+                             max_new_tokens=8, arrival=i * 1e-4)
+            for i in range(6)]
+    results = eng.run(reqs)
+    assert len(results) == 6
+    crashed = [t for t in eng.tasks if t.n_crashes > 0]
+    assert len(crashed) == 1 and crashed[0].lost_work >= 0.0
+    s = eng.summary()
+    assert s["n_failures"] == 1
+    log_kinds = [ev.kind for ev in eng.events.log]
+    assert log_kinds.count("device_fail") == 1
+    assert log_kinds.count("device_recover") == 1
+
+
+# ---------------------------------------------------------------------------
+# autoscaler: replacement capacity on crash
+# ---------------------------------------------------------------------------
+
+
+def test_autoscaler_replaces_failed_capacity():
+    def run(replace):
+        sim = make_sim(n_devices=2,
+                       faults=FaultInjector(script=((3e-3, "fail", 0),
+                                                    (20e-3, "recover", 0))))
+        scaler = Autoscaler(AutoscalerConfig(
+            min_devices=1, max_devices=4, replace_failed=replace,
+            target_queue_per_device=100.0)).attach(sim)
+        done = sim.run(workload(31, n=16))
+        return scaler, done
+
+    scaler, done = run(True)
+    assert all(t.state is TaskState.DONE for t in done)
+    replaces = [d for d in scaler.decisions if d[1] == "replace"]
+    assert len(replaces) == 1 and replaces[0][0] == pytest.approx(3e-3)
+    scaler_off, _ = run(False)
+    assert not any(d[1] == "replace" for d in scaler_off.decisions)
