@@ -11,6 +11,10 @@
 #   make bench-simperf    - full event-core throughput matrix (simulated
 #                           tasks/sec + peak RSS, fast vs frozen legacy;
 #                           the smoke subset rides in bench-smoke)
+#   make bench-obs        - observability overhead gate (detached parity +
+#                           attached-tracer wall ceiling) at full size,
+#                           plus a Perfetto trace artifact; the smoke
+#                           subset rides in bench-smoke
 #   make bench-regression - bench-smoke + compare against the committed
 #                           baselines (fails on >10% SLA/latency drift)
 #   make bench-baseline   - refresh benchmarks/baselines/*.json (commit the
@@ -30,11 +34,15 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 FORMAT_PATHS = src/repro/core/events.py src/repro/core/autoscaler.py \
     src/repro/workloads/admission.py \
     benchmarks/overload_sweep.py benchmarks/autoscale_sweep.py \
-    benchmarks/check_smoke.py \
-    tests/test_events.py tests/test_admission.py tests/test_autoscaler.py
+    benchmarks/check_smoke.py benchmarks/obs_overhead.py \
+    src/repro/obs/__init__.py src/repro/obs/tracing.py \
+    src/repro/obs/telemetry.py src/repro/obs/slo.py \
+    src/repro/obs/replay_diff.py examples/observability_tour.py \
+    tests/test_events.py tests/test_admission.py tests/test_autoscaler.py \
+    tests/test_obs.py tests/test_obs_property.py
 
 .PHONY: test test-fast lint fmt bench-smoke bench-regression \
-    bench-baseline bench bench-full bench-simperf bench-chaos
+    bench-baseline bench bench-full bench-simperf bench-chaos bench-obs
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -64,6 +72,8 @@ define run_smoke_sweeps
 	    --out $(1)/chaos_sweep.json
 	$(PYTHON) benchmarks/simperf.py --smoke \
 	    --out $(1)/simperf.json
+	$(PYTHON) benchmarks/obs_overhead.py --smoke \
+	    --out $(1)/obs_overhead.json --trace-out $(1)/obs_trace.json
 endef
 
 bench-smoke:
@@ -71,14 +81,14 @@ bench-smoke:
 	$(PYTHON) benchmarks/check_smoke.py $(BENCH_OUT)/cluster_scaling.json \
 	    $(BENCH_OUT)/load_sweep.json $(BENCH_OUT)/overload_sweep.json \
 	    $(BENCH_OUT)/autoscale_sweep.json $(BENCH_OUT)/chaos_sweep.json \
-	    $(BENCH_OUT)/simperf.json
+	    $(BENCH_OUT)/simperf.json $(BENCH_OUT)/obs_overhead.json
 
 bench-regression:
 	$(call run_smoke_sweeps,$(BENCH_OUT))
 	$(PYTHON) benchmarks/check_smoke.py $(BENCH_OUT)/cluster_scaling.json \
 	    $(BENCH_OUT)/load_sweep.json $(BENCH_OUT)/overload_sweep.json \
 	    $(BENCH_OUT)/autoscale_sweep.json $(BENCH_OUT)/chaos_sweep.json \
-	    $(BENCH_OUT)/simperf.json \
+	    $(BENCH_OUT)/simperf.json $(BENCH_OUT)/obs_overhead.json \
 	    --baseline $(BASELINE_DIR)
 
 bench-baseline:
@@ -86,7 +96,7 @@ bench-baseline:
 	$(PYTHON) benchmarks/check_smoke.py $(BASELINE_DIR)/cluster_scaling.json \
 	    $(BASELINE_DIR)/load_sweep.json $(BASELINE_DIR)/overload_sweep.json \
 	    $(BASELINE_DIR)/autoscale_sweep.json $(BASELINE_DIR)/chaos_sweep.json \
-	    $(BASELINE_DIR)/simperf.json
+	    $(BASELINE_DIR)/simperf.json $(BASELINE_DIR)/obs_overhead.json
 
 bench-simperf:
 	mkdir -p $(BENCH_OUT)
@@ -95,6 +105,11 @@ bench-simperf:
 bench-chaos:
 	mkdir -p $(BENCH_OUT)
 	$(PYTHON) benchmarks/chaos_sweep.py --out $(BENCH_OUT)/chaos_sweep.json
+
+bench-obs:
+	mkdir -p $(BENCH_OUT)
+	$(PYTHON) benchmarks/obs_overhead.py --out $(BENCH_OUT)/obs_overhead_full.json \
+	    --trace-out $(BENCH_OUT)/obs_trace_full.json
 
 bench:
 	$(PYTHON) benchmarks/run.py
@@ -109,3 +124,5 @@ bench-full:
 	$(PYTHON) benchmarks/autoscale_sweep.py --out $(BENCH_OUT)/autoscale_sweep.json
 	$(PYTHON) benchmarks/chaos_sweep.py --out $(BENCH_OUT)/chaos_sweep.json
 	$(PYTHON) benchmarks/simperf.py --out $(BENCH_OUT)/simperf_full.json
+	$(PYTHON) benchmarks/obs_overhead.py --out $(BENCH_OUT)/obs_overhead_full.json \
+	    --trace-out $(BENCH_OUT)/obs_trace_full.json

@@ -234,6 +234,17 @@ def run(
     return rows
 
 
+def showcase_cell(n_tasks: int = TASKS_PER_RUN):
+    """Autoscaled prema on the diurnal ramp, for ``--trace-out`` —
+    device_up/down tracks alongside the queue-depth counter."""
+    iso = mean_isolated_time()
+    tr = generate(tenant_mix(make_traffic("diurnal", AVG_LOAD / iso,
+                                          64.0 * iso)),
+                  common.rng(9100), n_tasks, pred=common.predictor())
+    sim, _scaler = make_sim("autoscale", "prema")
+    return sim, tr.tasks()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument(
@@ -252,6 +263,7 @@ def main() -> None:
         "--profile", action="store_true",
         help="run under cProfile; stats land next to --out"
     )
+    common.add_obs_args(ap)
     args = ap.parse_args()
     common.set_seed(args.seed)
     print("name,us_per_call,derived")
@@ -261,6 +273,8 @@ def main() -> None:
     common.emit(rows)
     if args.out:
         common.write_json(args.out, "autoscale_sweep", rows, extra=extra)
+    common.record_showcase(args, showcase_cell,
+                           window=4.0 * mean_isolated_time())
 
 
 if __name__ == "__main__":

@@ -252,6 +252,18 @@ def run(smoke: bool = False, collect: Optional[Dict] = None
     return rows
 
 
+def showcase_cell(n_tasks: int = TASKS_PER_RUN):
+    """The headline chaos cell (prema + checkpoint + replacement under
+    the smoke failure rate) prepared for ``common.record_showcase`` —
+    a crash/recover/migration timeline worth opening in Perfetto."""
+    iso = mean_isolated_time()
+    mtbf_iso = next(v for v in FAIL_LEVELS.values() if v is not None)
+    tr = generate(tenant_mix(Poisson(rate=LOAD * N_DEVICES / iso)),
+                  common.rng(9400), n_tasks, pred=common.predictor())
+    sim, _scaler = make_sim("prema", "checkpoint", mtbf_iso, replace=True)
+    return sim, tr.tasks()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true",
@@ -262,6 +274,7 @@ def main() -> None:
                     help="also write machine-readable JSON results")
     ap.add_argument("--profile", action="store_true",
                     help="run under cProfile; stats land next to --out")
+    common.add_obs_args(ap)
     args = ap.parse_args()
     common.set_seed(args.seed)
     print("name,us_per_call,derived")
@@ -271,6 +284,8 @@ def main() -> None:
     common.emit(rows)
     if args.out:
         common.write_json(args.out, "chaos_sweep", rows, extra=extra)
+    common.record_showcase(args, showcase_cell,
+                           window=2.0 * mean_isolated_time())
 
 
 if __name__ == "__main__":

@@ -22,6 +22,13 @@ claim*:
   work at every swept failure rate, PREMA with crash replacement holds
   the interactive SLA >= 90 % under failures, and client retries keep
   offered == completed + dropped exact;
+* ``obs_overhead``: the observability layer pays for what it uses — a
+  detached (and an attach-then-detach) run is bit-identical to a run
+  where the tracer never existed with the bus's no-subscriber fast path
+  restored, an attached tracer observes without perturbing the log, and
+  its wall overhead stays <= ``OBS_OVERHEAD_MAX`` (a same-machine ratio;
+  against a baseline only the machine-independent event/span counts are
+  compared);
 * ``simperf``: the fast/legacy parity cell is bit-exact, and against a
   baseline the machine-independent fast-over-legacy speedup ratio may
   not regress by more than 35 % (sub-second smoke cells are timer-noisy;
@@ -57,6 +64,7 @@ TAIL_BLOWUP_MIN = 2.0       # open-loop FCFS p99 NTT growth past the knee
 SLA_HI_MIN = 0.9
 AUTOSCALE_CAPACITY_MAX = 0.6   # autoscaled device-seconds vs static-max
 CHAOS_LOST_RATIO_MIN = 1.0     # KILL-restart lost work over checkpoint's
+OBS_OVERHEAD_MAX = 1.15        # tracer-attached / detached wall ceiling
 REGRESSION_TOL = 0.10          # --baseline: relative drift allowed
 SIMPERF_SPEEDUP_TOL = 0.35     # simperf: allowed speedup-ratio regression
 SIMPERF_SPEEDUP_FLOOR = 1.0    # simperf: fast must never lose to legacy
@@ -244,6 +252,53 @@ def check_simperf(payload: Dict) -> None:
                f"simperf: fast path lost to the frozen core: {p!r}")
 
 
+def check_obs_overhead(payload: Dict) -> None:
+    """The pay-for-what-you-use gate: detached runs are bit-identical
+    with the fast path restored, and the tracer-attached wall overhead
+    stays under ``OBS_OVERHEAD_MAX`` (a same-machine ratio, not an
+    absolute timing)."""
+    parity = [r for r in payload["rows"] if r["name"].endswith(".parity")]
+    _check(bool(parity), "obs_overhead: parity rows missing")
+    _check(all(r["derived"].startswith("exact") for r in parity),
+           f"obs_overhead: detached/attached parity broken: {parity}")
+    cells = payload.get("extra", {}).get("cells", [])
+    _check(bool(cells), "obs_overhead: structured cells missing")
+    for c in cells:
+        _check(c["overhead_ratio"] <= OBS_OVERHEAD_MAX,
+               f"obs_overhead: tracer overhead {c['overhead_ratio']:.3f}x "
+               f"> {OBS_OVERHEAD_MAX}x at n={c['n']} d={c['devices']} "
+               f"{c['policy']}")
+        _check(c["detached_exact"] and c["attached_exact"]
+               and c["fastpath_restored"],
+               f"obs_overhead: parity flags false in cell {c!r}")
+        _check(c["n_spans"] > 0 and c["n_events"] > 0,
+               f"obs_overhead: degenerate cell {c!r}")
+
+
+def compare_obs_overhead_baseline(payload: Dict, base: Dict) -> List[str]:
+    """obs_overhead's baseline gate.  Wall ratios are same-machine noise
+    across CI runners, so only the machine-independent event/span counts
+    are compared — a drift there means the workload or the tracer's
+    reconstruction changed."""
+    failures: List[str] = []
+    key = ("n", "devices", "policy")
+    base_cells = {tuple(c[k] for k in key): c
+                  for c in base.get("extra", {}).get("cells", [])}
+    cur_cells = {tuple(c[k] for k in key): c
+                 for c in payload.get("extra", {}).get("cells", [])}
+    for k in sorted(base_cells):
+        if k not in cur_cells:
+            failures.append(f"obs_overhead: cell disappeared: {k}")
+            continue
+        for field in ("n_events", "n_spans"):
+            if cur_cells[k][field] != base_cells[k][field]:
+                failures.append(
+                    f"obs_overhead: {field} at n={k[0]} d={k[1]} {k[2]} "
+                    f"changed: {base_cells[k][field]} -> "
+                    f"{cur_cells[k][field]}")
+    return failures
+
+
 def _simperf_cells(payload: Dict) -> Dict[tuple, Dict]:
     return {(c["impl"], c["n"], c["devices"], c["policy"]): c
             for c in payload.get("extra", {}).get("cells", [])}
@@ -293,6 +348,7 @@ CHECKS = {
     "autoscale_sweep": check_autoscale_sweep,
     "chaos_sweep": check_chaos_sweep,
     "simperf": check_simperf,
+    "obs_overhead": check_obs_overhead,
 }
 
 # Benchmarks whose baseline comparison replaces the generic directional
@@ -300,6 +356,7 @@ CHECKS = {
 # readings the generic gate must not compare).
 BASELINE_CHECKS = {
     "simperf": compare_simperf_baseline,
+    "obs_overhead": compare_obs_overhead_baseline,
 }
 
 

@@ -128,6 +128,17 @@ def run(smoke: bool = False) -> List[Tuple[str, float, str]]:
     return rows
 
 
+def showcase_cell(n_devices: int = 4):
+    """prema/dynamic on the 4-device grid, for ``--trace-out``."""
+    tasks = _workloads(1, TASKS_PER_DEVICE * n_devices,
+                       n_devices=n_devices)[0]
+    sim = ClusterSimulator(
+        PAPER_NPU, make_policy("prema", preemptive=True),
+        ClusterConfig(mechanism="dynamic", n_devices=n_devices,
+                      placement="affinity"))
+    return sim, trace.clone_tasks(tasks)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true",
@@ -139,6 +150,7 @@ def main() -> None:
                     help="also write machine-readable JSON results")
     ap.add_argument("--profile", action="store_true",
                     help="run under cProfile; stats land next to --out")
+    common.add_obs_args(ap)
     args = ap.parse_args()
     common.set_seed(args.seed)
     print("name,us_per_call,derived")
@@ -147,6 +159,7 @@ def main() -> None:
     common.emit(rows)
     if args.out:
         common.write_json(args.out, "cluster_scaling", rows)
+    common.record_showcase(args, showcase_cell, window=0.5)
 
 
 if __name__ == "__main__":

@@ -85,12 +85,16 @@ def sweep(configs: List[Tuple[str, str, bool, str]],
 
 
 @contextlib.contextmanager
-def maybe_profile(enabled: bool, out: Optional[str], benchmark: str):
+def maybe_profile(enabled: bool, out: Optional[str], benchmark: str,
+                  tag: Optional[str] = None):
     """The ``--profile`` contract shared by run.py and every standalone
     entry point: when enabled, the wrapped block runs under cProfile and
     the stats land next to ``--out`` (``<out-stem>.pstats``), or as
-    ``<benchmark>.pstats`` in the working directory when no ``--out`` was
-    given.  Inspect with ``python -m pstats`` or snakeviz."""
+    ``<benchmark>-seed<S>[-<tag>].pstats`` in the working directory when
+    no ``--out`` was given — the seed (and any caller-supplied config
+    ``tag``) in the stem keeps two runs of the same benchmark from
+    silently overwriting each other.  Inspect with ``python -m pstats``
+    or snakeviz."""
     if not enabled:
         yield
         return
@@ -100,10 +104,68 @@ def maybe_profile(enabled: bool, out: Optional[str], benchmark: str):
         yield
     finally:
         prof.disable()
-        path = (os.path.splitext(os.path.abspath(out))[0] + ".pstats"
-                if out else f"{benchmark}.pstats")
+        if out:
+            path = os.path.splitext(os.path.abspath(out))[0] + ".pstats"
+        else:
+            stem = f"{benchmark}-seed{BASE_SEED}"
+            if tag:
+                stem += f"-{tag}"
+            path = f"{stem}.pstats"
         prof.dump_stats(path)
         print(f"profile written: {path}", file=sys.stderr)
+
+
+def add_obs_args(parser) -> None:
+    """The ``--trace-out`` / ``--telemetry-out`` contract shared by every
+    sweep: record the sweep's designated showcase cell with a
+    :class:`repro.obs.tracing.SpanTracer` (Chrome/Perfetto JSON to
+    ``--trace-out``) and/or a :class:`repro.obs.telemetry.Telemetry`
+    (JSONL timeseries to ``--telemetry-out``, rendered by
+    ``benchmarks/report.py --telemetry``)."""
+    parser.add_argument("--trace-out", default=None, metavar="PATH",
+                        help="export a Perfetto trace of the showcase "
+                             "cell (opens in ui.perfetto.dev)")
+    parser.add_argument("--telemetry-out", default=None, metavar="PATH",
+                        help="export windowed telemetry JSONL of the "
+                             "showcase cell")
+
+
+@contextlib.contextmanager
+def observed(trace_out: Optional[str], telemetry_out: Optional[str],
+             layer, tasks=None, window: float = 60.0):
+    """Attach obs sinks to ``layer`` for one run and export on exit.
+    Both paths None ⇒ nothing is subscribed (the no-subscriber fast path
+    is untouched)."""
+    from repro.obs import SpanTracer, Telemetry, TelemetryConfig
+    tracer = SpanTracer().attach(layer) if trace_out else None
+    tel = (Telemetry(TelemetryConfig(window=window)).attach(
+        layer, tasks=tasks) if telemetry_out else None)
+    try:
+        yield
+    finally:
+        if tracer is not None:
+            tracer.detach()
+            tracer.export(trace_out)
+            print(f"perfetto trace written: {trace_out}", file=sys.stderr)
+        if tel is not None:
+            tel.detach()
+            tel.export_jsonl(telemetry_out)
+            print(f"telemetry written: {telemetry_out}", file=sys.stderr)
+
+
+def record_showcase(args, make_layer_and_tasks, window: float = 60.0) -> None:
+    """Run each sweep's designated showcase cell once with obs sinks
+    attached when ``--trace-out``/``--telemetry-out`` was given (a
+    *separate* run from the measured sweep, so attaching never perturbs
+    timings).  ``make_layer_and_tasks() -> (layer, tasks)``."""
+    trace_out = getattr(args, "trace_out", None)
+    telemetry_out = getattr(args, "telemetry_out", None)
+    if not (trace_out or telemetry_out):
+        return
+    layer, tasks = make_layer_and_tasks()
+    with observed(trace_out, telemetry_out, layer, tasks=tasks,
+                  window=window):
+        layer.run(tasks)
 
 
 def emit(rows: List[Tuple[str, float, str]]):

@@ -139,6 +139,19 @@ def run(smoke: bool = False) -> List[Tuple[str, float, str]]:
     return sweep(ARRIVAL_KINDS, POLICIES, DEVICE_COUNTS, LOADS, n_runs=3)
 
 
+def showcase_cell(n_devices: int = 4, load: float = 1.2):
+    """The past-saturation mmpp/prema cell, for ``--trace-out``."""
+    rate = load * n_devices / mean_isolated_time()
+    tr = generate(paper_mix(arrivals=make_process("mmpp", rate)),
+                  common.rng(8500), TASKS_PER_DEVICE * n_devices,
+                  pred=common.predictor())
+    sim = ClusterSimulator(
+        PAPER_NPU, make_policy("prema", preemptive=True),
+        ClusterConfig(mechanism="dynamic", n_devices=n_devices,
+                      placement="least_loaded"))
+    return sim, tr.tasks()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true",
@@ -149,6 +162,7 @@ def main() -> None:
                     help="also write machine-readable JSON results")
     ap.add_argument("--profile", action="store_true",
                     help="run under cProfile; stats land next to --out")
+    common.add_obs_args(ap)
     args = ap.parse_args()
     common.set_seed(args.seed)
     print("name,us_per_call,derived")
@@ -157,6 +171,8 @@ def main() -> None:
     common.emit(rows)
     if args.out:
         common.write_json(args.out, "load_sweep", rows)
+    common.record_showcase(args, showcase_cell,
+                           window=2.0 * mean_isolated_time())
 
 
 if __name__ == "__main__":

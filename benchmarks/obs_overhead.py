@@ -1,0 +1,207 @@
+"""Observability overhead gate: pay-for-what-you-use, measured.
+
+The obs layer's contract has two halves, both checked here on the
+simperf diurnal smoke cell (10k tasks, 16 devices, prema — the same
+backlog-building workload the event-core gate runs):
+
+* **detached = free**: with nothing attached the bus keeps its
+  no-subscriber fast path — subscriber lists stay empty after
+  attach→detach, and the event log is bit-identical to a run where the
+  tracer never existed;
+* **attached = bounded**: a live :class:`repro.obs.tracing.SpanTracer`
+  observes every event without perturbing scheduling (attached event
+  log bit-identical to detached) and costs at most
+  ``OBS_OVERHEAD_MAX`` extra wall time.  Detached/attached repeats are
+  interleaved and the gated ratio (``benchmarks/check_smoke.py``) is
+  the *minimum per-repeat paired ratio*: pairs compare adjacent
+  instants so machine drift cancels, and since contention noise only
+  ever adds wall time the cleanest pair is the closest observable to
+  the true overhead; absolute tasks/sec is machine noise, the ratio is
+  not.
+
+An informational full-stack row (tracer + telemetry + SLO monitor all
+attached) shows the cost of everything at once; only the tracer ratio is
+gated.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/obs_overhead.py --smoke --out o.json
+    PYTHONPATH=src python benchmarks/obs_overhead.py --trace-out t.json
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks import common
+from benchmarks.simperf import make_diurnal_tasks
+
+SMOKE_CELL = (10_000, 16, "prema")
+FULL_CELLS = ((10_000, 16, "prema"), (100_000, 16, "prema"))
+REPEATS = 5
+# The attached/detached wall ceiling lives with the other gate
+# constants in benchmarks/check_smoke.py (OBS_OVERHEAD_MAX).
+
+
+def _build(n_dev: int, policy: str, keep_log: bool):
+    from repro.core.cluster import ClusterConfig, ClusterSimulator
+    from repro.core.scheduler import make_policy
+    from repro.hw import PAPER_NPU
+
+    sim = ClusterSimulator(PAPER_NPU, make_policy(policy, True),
+                           ClusterConfig(n_devices=n_dev))
+    sim.events.keep_log = keep_log
+    return sim
+
+
+def _timed(n: int, n_dev: int, policy: str, seed: int,
+           attachers) -> List[List[float]]:
+    """Wall seconds per configuration per repeat.  Each ``attachers``
+    entry receives the sim and returns a detach callback (or None).
+    The configurations run back-to-back *within* each repeat, so a
+    paired ratio (attached_r / detached_r) compares adjacent instants
+    and machine drift across the whole measurement cancels out."""
+    walls: List[List[float]] = [[] for _ in attachers]
+    for _ in range(REPEATS):
+        for per_cfg, attach in zip(walls, attachers):
+            tasks = make_diurnal_tasks(n, n_dev, seed)
+            sim = _build(n_dev, policy, keep_log=False)
+            detach = attach(sim)
+            t0 = time.perf_counter()
+            sim.run(tasks)
+            per_cfg.append(time.perf_counter() - t0)
+            if detach is not None:
+                detach()
+    return walls
+
+
+def parity_checks(n: int, n_dev: int, policy: str, seed: int) -> Dict:
+    """Bit-parity half of the gate (logs kept, one run each)."""
+    from repro.obs import SpanTracer
+
+    logs = {}
+    # never-attached baseline
+    sim = _build(n_dev, policy, keep_log=True)
+    sim.run(make_diurnal_tasks(n, n_dev, seed))
+    logs["baseline"] = list(sim.events.log)
+    # attach → detach before run: fast path must be restored
+    sim = _build(n_dev, policy, keep_log=True)
+    tracer = SpanTracer().attach(sim)
+    tracer.detach()
+    fastpath = all(not subs for subs in sim.events._subs.values())
+    sim.run(make_diurnal_tasks(n, n_dev, seed))
+    logs["detached"] = list(sim.events.log)
+    # attached for the whole run: must observe, never perturb
+    sim = _build(n_dev, policy, keep_log=True)
+    tracer = SpanTracer().attach(sim)
+    sim.run(make_diurnal_tasks(n, n_dev, seed))
+    logs["attached"] = list(sim.events.log)
+    return {
+        "detached_exact": logs["baseline"] == logs["detached"],
+        "attached_exact": logs["baseline"] == logs["attached"],
+        "fastpath_restored": fastpath,
+        "n_events": len(logs["baseline"]),
+        "n_spans": len(tracer.spans),
+        "tracer": tracer,
+    }
+
+
+def run_cell(n: int, n_dev: int, policy: str, seed: int) -> Dict:
+    from repro.obs import SLOMonitor, SLORule, SpanTracer, Telemetry
+
+    def no_obs(sim):
+        return None
+
+    def with_tracer(sim):
+        tracer = SpanTracer().attach(sim)
+        return tracer.detach
+
+    def with_stack(sim):
+        tracer = SpanTracer().attach(sim)
+        tel = Telemetry().attach(sim)
+        slo = SLOMonitor([SLORule(name="hi", target=0.9)]).attach(sim)
+        return lambda: (tracer.detach(), tel.detach(), slo.detach())
+
+    det, att, stk = _timed(n, n_dev, policy, seed,
+                           (no_obs, with_tracer, with_stack))
+    par = parity_checks(n, n_dev, policy, seed)
+    return {"n": n, "devices": n_dev, "policy": policy,
+            "wall_detached_s": min(det), "wall_attached_s": min(att),
+            "wall_stack_s": min(stk),
+            # timer noise is one-sided (contention only ever adds wall
+            # time), so the cleanest adjacent pair is the closest
+            # observable to the true overhead
+            "overhead_ratio": min(a / d for a, d in zip(att, det)),
+            "stack_ratio": min(s / d for s, d in zip(stk, det)),
+            "detached_exact": par["detached_exact"],
+            "attached_exact": par["attached_exact"],
+            "fastpath_restored": par["fastpath_restored"],
+            "n_events": par["n_events"], "n_spans": par["n_spans"],
+            "_tracer": par["tracer"]}
+
+
+def run(smoke: bool = False, seed: int = 0,
+        collect: Optional[Dict] = None, trace_out: Optional[str] = None
+        ) -> List[Tuple[str, float, str]]:
+    cells = (SMOKE_CELL,) if smoke else FULL_CELLS
+    rows: List[Tuple[str, float, str]] = []
+    results = []
+    for n, dev, policy in cells:
+        c = run_cell(n, dev, policy, seed)
+        tracer = c.pop("_tracer")
+        results.append(c)
+        tag = f"obs.{policy}.n{n}.d{dev}"
+        rows.append((f"{tag}.detached", c["wall_detached_s"] * 1e6,
+                     f"tps={n / c['wall_detached_s']:.0f}"))
+        rows.append((f"{tag}.attached", c["wall_attached_s"] * 1e6,
+                     f"tps={n / c['wall_attached_s']:.0f};"
+                     f"ratio={c['overhead_ratio']:.3f}"))
+        rows.append((f"{tag}.fullstack", c["wall_stack_s"] * 1e6,
+                     f"ratio={c['stack_ratio']:.3f}"))
+        rows.append((f"{tag}.parity", 0.0,
+                     ("exact" if c["detached_exact"] and c["attached_exact"]
+                      and c["fastpath_restored"] else "MISMATCH")
+                     + f";n_events={c['n_events']};n_spans={c['n_spans']}"))
+        if trace_out and (n, dev, policy) == cells[0]:
+            tracer.export(trace_out)
+            print(f"perfetto trace written: {trace_out}", file=sys.stderr)
+    if collect is not None:
+        collect["cells"] = results
+        collect["repeats"] = REPEATS
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI cell only (1e4 tasks x 16 devices)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="re-base the workload RNG stream")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also write machine-readable JSON results")
+    ap.add_argument("--profile", action="store_true",
+                    help="run under cProfile; stats land next to --out")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the attached parity run as a Perfetto "
+                         "trace (the CI artifact)")
+    args = ap.parse_args()
+    common.set_seed(args.seed)
+    print("name,us_per_call,derived")
+    extra: Dict = {}
+    with common.maybe_profile(args.profile, args.out, "obs_overhead"):
+        rows = run(smoke=args.smoke, seed=args.seed, collect=extra,
+                   trace_out=args.trace_out)
+    common.emit(rows)
+    if args.out:
+        common.write_json(args.out, "obs_overhead", rows, extra=extra)
+
+
+if __name__ == "__main__":
+    main()

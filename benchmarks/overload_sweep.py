@@ -217,6 +217,20 @@ def run(smoke: bool = False,
     return rows
 
 
+def showcase_cell(n_devices: int = 2, load: float = 1.6):
+    """Past-saturation prema + priority_shed, for ``--trace-out`` — a
+    preemption/shedding storm timeline."""
+    rate = load * n_devices / mean_isolated_time()
+    tr = generate(tenant_mix(Poisson(rate=rate)), common.rng(8800),
+                  TASKS_PER_DEVICE * n_devices, pred=common.predictor())
+    sim = ClusterSimulator(
+        PAPER_NPU, make_policy("prema", preemptive=True),
+        ClusterConfig(mechanism="dynamic", n_devices=n_devices,
+                      admission=make_admission_policy("priority_shed",
+                                                      n_devices)))
+    return sim, tr.tasks()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true",
@@ -227,6 +241,7 @@ def main() -> None:
                     help="also write machine-readable JSON results")
     ap.add_argument("--profile", action="store_true",
                     help="run under cProfile; stats land next to --out")
+    common.add_obs_args(ap)
     args = ap.parse_args()
     common.set_seed(args.seed)
     print("name,us_per_call,derived")
@@ -236,6 +251,8 @@ def main() -> None:
     common.emit(rows)
     if args.out:
         common.write_json(args.out, "overload_sweep", rows, extra=extra)
+    common.record_showcase(args, showcase_cell,
+                           window=2.0 * mean_isolated_time())
 
 
 if __name__ == "__main__":

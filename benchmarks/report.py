@@ -1,7 +1,8 @@
 """Render EXPERIMENTS.md §Dry-run and §Roofline tables from
-results/dryrun.json.
+results/dryrun.json, or a telemetry JSONL timeseries as markdown.
 
     PYTHONPATH=src:. python -m benchmarks.report [dryrun.json]
+    PYTHONPATH=src:. python -m benchmarks.report --telemetry telemetry.jsonl
 """
 from __future__ import annotations
 
@@ -53,5 +54,56 @@ def main(path="results/dryrun.json"):
               f"| {r['mfu']*100:.1f}% |")
 
 
+def _f(row, key, scale=1.0, digits=2):
+    v = row.get(key)
+    if v is None or v != v:
+        return "-"
+    return f"{v * scale:.{digits}f}"
+
+
+def telemetry_report(path):
+    """Render ``repro.obs.Telemetry.export_jsonl`` output (one header
+    line + one JSON line per sim-time window) as a markdown table."""
+    with open(path) as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    if not lines or lines[0].get("kind") != "telemetry":
+        raise SystemExit(f"{path}: not a telemetry JSONL export")
+    head, rows = lines[0], lines[1:]
+    tot = head.get("totals", {})
+    print(f"### Telemetry — window {head['window']:g}s, "
+          f"{head['n_devices']} device(s), {head['n_windows']} window(s)\n")
+    print(f"totals: submit={tot.get('submit', 0)} "
+          f"complete={tot.get('complete', 0)} "
+          f"preempt={tot.get('preempt', 0)} drop={tot.get('drop', 0)} "
+          f"retry={tot.get('retry', 0)} fails={tot.get('device_fail', 0)} "
+          f"slo_alerts={tot.get('slo_alert', 0)}"
+          + (f" sla={tot['sla_attainment']:.3f}"
+             if "sla_attainment" in tot else "")
+          + (f" ntt_mean={tot['ntt_mean']:.2f}"
+             if "ntt_mean" in tot else "") + "\n")
+    print("| window | sub | disp | comp | pre | drop | q_mean | util | "
+          "avail | ntt p99 | tat p99 (ms) | sla |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        sla = "-"
+        per = r.get("per_tenant")
+        if per:
+            n = sum(v["n"] for v in per.values())
+            met = sum(v["sla_attainment"] * v["n"] for v in per.values()
+                      if v["sla_attainment"] == v["sla_attainment"])
+            sla = f"{met / n:.3f}" if n else "-"
+        print(f"| [{r['t0']:g}, {r['t1']:g}) | {r.get('submit', 0)} "
+              f"| {r.get('dispatch', 0)} | {r.get('complete', 0)} "
+              f"| {r.get('preempt', 0)} | {r.get('drop', 0)} "
+              f"| {_f(r, 'queue_depth_mean')} | {_f(r, 'utilization')} "
+              f"| {_f(r, 'availability', digits=3)} "
+              f"| {_f(r, 'ntt_p99')} | {_f(r, 'turnaround_p99', 1e3, 1)} "
+              f"| {sla} |")
+
+
 if __name__ == "__main__":
-    main(*sys.argv[1:])
+    argv = sys.argv[1:]
+    if argv and argv[0] == "--telemetry":
+        telemetry_report(*argv[1:])
+    else:
+        main(*argv)

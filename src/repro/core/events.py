@@ -43,6 +43,16 @@ Fault injection (``core/faults.py``) adds two more device events
                     exhausted or its deadline passed (``device == -1``).
 ==================  =======================================================
 
+The observability layer (``repro/obs/slo.py``) adds two *control* events
+(``tid == -1``, ``device == -1``) that reactive subsystems — autoscaler,
+admission — can subscribe to like any other kind:
+
+=============  ============================================================
+``slo_alert``  a tenant class is burning its error budget too fast
+               (``tenant`` names the class, ``mechanism`` the rule id).
+``slo_clear``  the same rule dropped back under its threshold.
+=============  ============================================================
+
 The bus is the one observation point for reactive subsystems: closed-loop
 clients resample their think time on ``complete``/``drop``
 (:class:`repro.workloads.arrivals.ClosedLoopDriver`), executed-trace
@@ -75,9 +85,12 @@ EVENT_KINDS = (
     "device_recover",
     "retry",
     "abandon",
+    "slo_alert",
+    "slo_clear",
 )
 DEVICE_EVENT_KINDS = ("device_up", "device_drain", "device_down")
 FAULT_EVENT_KINDS = ("device_fail", "device_recover")
+SLO_EVENT_KINDS = ("slo_alert", "slo_clear")
 
 
 class Event(NamedTuple):
@@ -143,6 +156,26 @@ class EventBus:
 
     def unsubscribe(self, kind: str, fn: Subscriber) -> None:
         self._subs[kind].remove(fn)
+
+    def subscribe_map(self, handlers: Dict[str, Subscriber]) -> Callable[[], None]:
+        """Subscribe a ``kind → handler`` mapping in one call and return a
+        ``detach()`` closure that removes exactly those subscriptions —
+        the idiom observability sinks (``repro/obs/``) use to attach and
+        restore the no-subscriber fast path on detach.  ``detach`` is
+        idempotent."""
+        entries = [(kind, fn) for kind, fn in handlers.items()]
+        for kind, fn in entries:
+            self.subscribe(kind, fn)
+        detached = []
+
+        def detach() -> None:
+            if detached:
+                return
+            detached.append(True)
+            for kind, fn in entries:
+                self.unsubscribe(kind, fn)
+
+        return detach
 
     def on_submit(self, fn: Subscriber) -> Subscriber:
         return self.subscribe("submit", fn)
@@ -244,6 +277,17 @@ class EventBus:
     def abandon(self, t: float, task) -> None:
         self._task_event(t, "abandon", task, -1)
 
+    # -- SLO monitoring (repro.obs.slo; tid == -1) ---------------------
+    def slo_alert(self, t: float, tenant: Optional[str], rule: str) -> None:
+        """A tenant class is burning its error budget too fast; ``rule``
+        (carried in the ``mechanism`` field) names the rule that fired."""
+        self.emit(Event(t=float(t), kind="slo_alert", tid=-1, device=-1,
+                        mechanism=rule, tenant=tenant))
+
+    def slo_clear(self, t: float, tenant: Optional[str], rule: str) -> None:
+        self.emit(Event(t=float(t), kind="slo_clear", tid=-1, device=-1,
+                        mechanism=rule, tenant=tenant))
+
 
 class JsonlSpool:
     """Streaming event sink: one JSON line per event, written as emitted.
@@ -256,12 +300,14 @@ class JsonlSpool:
     """
 
     def __init__(self, path_or_fp: Union[str, IO[str]],
-                 header: bool = True, meta: Optional[Dict] = None):
+                 header: bool = True, meta: Optional[Dict] = None,
+                 flush_every: int = 0):
         if hasattr(path_or_fp, "write"):
             self._fp, self._owns = path_or_fp, False
         else:
             self._fp, self._owns = open(path_or_fp, "w"), True
         self.n_events = 0
+        self.flush_every = int(flush_every)
         self._bus: Optional[EventBus] = None
         if header:
             # n_records omitted: unknowable while streaming (loaders
@@ -273,11 +319,18 @@ class JsonlSpool:
     def __call__(self, ev: Event) -> None:
         self._fp.write(json.dumps(ev.to_json(), sort_keys=True) + "\n")
         self.n_events += 1
+        if self.flush_every and self.n_events % self.flush_every == 0:
+            self._fp.flush()
 
     def attach(self, bus: EventBus) -> "JsonlSpool":
         bus.subscribe("*", self)
         self._bus = bus
         return self
+
+    def flush(self) -> None:
+        """Push buffered lines to the OS so a concurrently-read (or
+        later-killed) spool is readable up to the last flushed event."""
+        self._fp.flush()
 
     def close(self) -> None:
         if self._bus is not None:

@@ -2,6 +2,7 @@
 tail-latency percentiles, and per-tenant SLA/goodput summaries."""
 from __future__ import annotations
 
+import bisect
 from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
@@ -27,6 +28,8 @@ def rejected(tasks: Sequence[Task]) -> List[Task]:
 def antt(tasks: Sequence[Task]) -> float:
     """Average normalized turnaround time (lower is better)."""
     tasks = completed(tasks)
+    if not tasks:
+        return float("nan")
     return float(np.mean([t.ntt for t in tasks]))
 
 
@@ -49,6 +52,8 @@ def fairness(tasks: Sequence[Task]) -> float:
 def sla_violation_rate(tasks: Sequence[Task], n: float) -> float:
     """Fraction of tasks with turnaround > n x isolated time (§VI-C)."""
     v = [t.turnaround > n * t.isolated_time for t in completed(tasks)]
+    if not v:
+        return float("nan")
     return float(np.mean(v))
 
 
@@ -175,6 +180,93 @@ def aggregate(runs: Iterable[Dict[str, float]]) -> Dict[str, float]:
     runs = list(runs)
     keys = runs[0].keys()
     return {k: float(np.mean([r[k] for r in runs])) for k in keys}
+
+
+# ---------------------------------------------------------------------------
+# Streaming plumbing — fixed-bucket histograms and sim-time windows,
+# shared by repro/obs/telemetry.py (O(buckets) memory per series however
+# many samples flow through; exact aggregates stay with ``summarize``
+# over retained task lists)
+# ---------------------------------------------------------------------------
+
+def log_bucket_edges(lo: float, hi: float, n: int = 24) -> List[float]:
+    """``n`` logarithmically-spaced bucket edges covering ``[lo, hi]`` —
+    the standard latency-histogram layout (constant per-bucket relative
+    error)."""
+    if not (0.0 < lo < hi):
+        raise ValueError(f"need 0 < lo < hi, got [{lo}, {hi}]")
+    return [float(x) for x in np.geomspace(lo, hi, n)]
+
+
+def window_index(t: float, window: float, t0: float = 0.0) -> int:
+    """Index of the sim-time window ``[t0 + k*w, t0 + (k+1)*w)``
+    containing ``t``.  Raises on non-positive window lengths rather than
+    silently folding everything into one bucket."""
+    if window <= 0.0:
+        raise ValueError(f"window length must be > 0, got {window}")
+    return int((t - t0) // window)
+
+
+class Histogram:
+    """Fixed-bucket streaming histogram.
+
+    ``edges`` (sorted, len m) define m+1 buckets: bucket 0 is the
+    underflow ``< edges[0]``, bucket i counts ``[edges[i-1], edges[i])``,
+    the last bucket is the overflow ``>= edges[-1]``.  ``add`` is O(log m);
+    memory is O(m) regardless of sample count.  ``percentile`` is
+    bucket-resolution (linear interpolation inside the winning bucket);
+    ``mean`` is exact (tracked sum/count)."""
+
+    __slots__ = ("edges", "counts", "_sum")
+
+    def __init__(self, edges: Sequence[float]):
+        self.edges = [float(e) for e in edges]
+        if self.edges != sorted(self.edges) or len(self.edges) < 1:
+            raise ValueError("edges must be a sorted non-empty sequence")
+        self.counts = [0] * (len(self.edges) + 1)
+        self._sum = 0.0
+
+    @property
+    def n(self) -> int:
+        return sum(self.counts)
+
+    def add(self, value: float, weight: int = 1) -> None:
+        self.counts[bisect.bisect_right(self.edges, value)] += weight
+        self._sum += value * weight
+
+    def mean(self) -> float:
+        n = self.n
+        return self._sum / n if n else float("nan")
+
+    def percentile(self, pct: float) -> float:
+        """Bucket-resolution estimate of the ``pct``-ile (0..100).
+        Underflow resolves to ``edges[0]``, overflow to ``edges[-1]`` —
+        the histogram cannot see beyond its edge span."""
+        n = self.n
+        if n == 0:
+            return float("nan")
+        target = pct / 100.0 * n
+        cum = 0
+        for i, c in enumerate(self.counts):
+            cum += c
+            if cum >= target and c:
+                lo = self.edges[i - 1] if i >= 1 else self.edges[0]
+                hi = self.edges[i] if i < len(self.edges) else self.edges[-1]
+                frac = (target - (cum - c)) / c
+                return float(lo + (hi - lo) * min(max(frac, 0.0), 1.0))
+        return float(self.edges[-1])
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        if self.edges != other.edges:
+            raise ValueError("cannot merge histograms with different edges")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self._sum += other._sum
+        return self
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"edges": list(self.edges), "counts": list(self.counts),
+                "sum": self._sum}
 
 
 # ---------------------------------------------------------------------------

@@ -169,7 +169,27 @@ class ExecutedTrace:
             raise ValueError(
                 f"not an executed trace (kind={header.get('kind')!r}); "
                 "use Trace.load for offered traces")
-        events = [Event.from_json(json.loads(ln)) for ln in lines[1:]]
+        body = lines[1:]
+        try:
+            events = [Event.from_json(json.loads(ln)) for ln in body]
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+            if header.get("n_records") is not None:
+                raise
+            # Streaming spools (JsonlSpool) omit n_records because the
+            # count is unknowable while the run is live; a killed run
+            # leaves a half-written final line.  Salvage everything up
+            # to it — mid-file corruption still raises below.
+            events = []
+            for i, ln in enumerate(body):
+                try:
+                    events.append(Event.from_json(json.loads(ln)))
+                except (json.JSONDecodeError, KeyError, TypeError,
+                        ValueError):
+                    if i != len(body) - 1:
+                        raise ValueError(
+                            f"corrupt executed trace: unparseable event "
+                            f"at line {i + 2} (not the final line)")
+                    break
         if header.get("n_records") not in (None, len(events)):
             raise ValueError(
                 f"truncated trace: header says {header['n_records']} "

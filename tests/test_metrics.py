@@ -160,3 +160,84 @@ def test_cluster_summary_capacity_seconds():
     s2 = metrics.cluster_summary([a], busy_times=[1.0, 0.5], makespan=2.0)
     assert s2["capacity_seconds"] == pytest.approx(4.0)
     assert s2["util_min"] == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# degenerate inputs: empty runs must report nan, never raise
+# ---------------------------------------------------------------------------
+
+
+def test_empty_inputs_yield_nan_not_crash():
+    import math
+    s = metrics.summarize([])
+    assert s["n_tasks"] == 0 and math.isnan(s["antt"])
+    assert math.isnan(s["sla_satisfaction"]) and math.isnan(s["p99_ntt"])
+    p = metrics.percentile_summary([])
+    assert p and all(math.isnan(v) for v in p.values())
+    assert metrics.per_tenant_summary([]) == {}
+    assert math.isnan(metrics.antt([]))
+    assert math.isnan(metrics.sla_violation_rate([], 4.0))
+
+
+# ---------------------------------------------------------------------------
+# streaming histogram + window arithmetic (the telemetry substrate)
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_buckets_and_exact_mean():
+    h = metrics.Histogram([1.0, 2.0, 4.0])
+    for v in (0.5, 1.5, 1.9, 3.0, 100.0):
+        h.add(v)
+    assert h.counts == [1, 2, 1, 1]     # under, [1,2), [2,4), over
+    assert h.n == 5
+    assert h.mean() == pytest.approx((0.5 + 1.5 + 1.9 + 3.0 + 100.0) / 5)
+
+
+def test_histogram_empty_and_edge_percentiles():
+    import math
+    h = metrics.Histogram([1.0, 2.0])
+    assert h.n == 0 and math.isnan(h.mean()) and math.isnan(h.percentile(99))
+    h.add(0.1)                           # pure underflow
+    assert h.percentile(50) == pytest.approx(1.0)   # clamped to edges[0]
+    h2 = metrics.Histogram([1.0, 2.0])
+    h2.add(50.0)                         # pure overflow
+    assert h2.percentile(50) == pytest.approx(2.0)  # clamped to edges[-1]
+
+
+def test_histogram_percentile_interpolates_within_bucket():
+    h = metrics.Histogram([0.0, 10.0])
+    for _ in range(10):
+        h.add(5.0)                       # all in [0, 10)
+    assert h.percentile(50) == pytest.approx(5.0)
+    assert 0.0 < h.percentile(10) < h.percentile(90) <= 10.0
+
+
+def test_histogram_merge_and_validation():
+    h1, h2 = metrics.Histogram([1.0, 2.0]), metrics.Histogram([1.0, 2.0])
+    h1.add(0.5), h2.add(1.5), h2.add(3.0)
+    h1.merge(h2)
+    assert h1.counts == [1, 1, 1] and h1.n == 3
+    assert h1.mean() == pytest.approx(5.0 / 3.0)
+    with pytest.raises(ValueError):
+        h1.merge(metrics.Histogram([1.0, 3.0]))
+    with pytest.raises(ValueError):
+        metrics.Histogram([2.0, 1.0])
+    with pytest.raises(ValueError):
+        metrics.Histogram([])
+
+
+def test_log_bucket_edges_and_window_index():
+    edges = metrics.log_bucket_edges(0.5, 512.0, 11)
+    assert len(edges) == 11
+    assert edges[0] == pytest.approx(0.5) and edges[-1] == pytest.approx(512.0)
+    ratios = [b / a for a, b in zip(edges, edges[1:])]
+    assert all(r == pytest.approx(ratios[0]) for r in ratios)   # geometric
+    with pytest.raises(ValueError):
+        metrics.log_bucket_edges(0.0, 1.0)
+    with pytest.raises(ValueError):
+        metrics.log_bucket_edges(2.0, 1.0)
+    assert metrics.window_index(0.0, 1.0) == 0
+    assert metrics.window_index(2.5, 1.0) == 2
+    assert metrics.window_index(5.0, 2.0, t0=1.0) == 2
+    with pytest.raises(ValueError):
+        metrics.window_index(1.0, 0.0)
