@@ -1,27 +1,6 @@
 # Tier-1 verification and benchmark smoke for the PREMA reproduction.
-#
-#   make test             - full test suite (tier-1 gate)
-#   make test-fast        - everything not marked slow (no model/kernel JAX
-#                           execution); new test files are picked up
-#                           automatically unless they opt into @slow
-#   make lint             - ruff check + format check (see pyproject.toml)
-#   make fmt              - ruff-format the FORMAT_PATHS file set in place
-#   make bench-smoke      - CI-sized benchmarks -> $(BENCH_OUT)/*.json,
-#                           validated by benchmarks/check_smoke.py
-#   make bench-simperf    - full event-core throughput matrix (simulated
-#                           tasks/sec + peak RSS, fast vs frozen legacy;
-#                           the smoke subset rides in bench-smoke)
-#   make bench-obs        - observability overhead gate (detached parity +
-#                           attached-tracer wall ceiling) at full size,
-#                           plus a Perfetto trace artifact; the smoke
-#                           subset rides in bench-smoke
-#   make bench-regression - bench-smoke + compare against the committed
-#                           baselines (fails on >10% SLA/latency drift)
-#   make bench-baseline   - refresh benchmarks/baselines/*.json (commit the
-#                           result when a metric shift is intentional)
-#   make bench            - every figure-reproduction benchmark + sweeps
-#   make bench-full       - the full (non-smoke) sweep suite with JSON out
-#                           (the nightly CI job)
+# Run `make help` for the target list (generated from the `##` comments
+# on each target below — keep them current, help is never hand-edited).
 
 PYTHON ?= python
 BENCH_OUT ?= bench-out
@@ -41,23 +20,40 @@ FORMAT_PATHS = src/repro/core/events.py src/repro/core/autoscaler.py \
     tests/test_events.py tests/test_admission.py tests/test_autoscaler.py \
     tests/test_obs.py tests/test_obs_property.py
 
-.PHONY: test test-fast lint fmt bench-smoke bench-regression \
-    bench-baseline bench bench-full bench-simperf bench-chaos bench-obs
+# The smoke-sized sweep set: one JSON per sweep, validated by
+# benchmarks/check_smoke.py (see docs/benchmarks.md for what each gate
+# asserts).  Adding a sweep here wires it into bench-smoke,
+# bench-regression, and bench-baseline at once.
+SMOKE_NAMES = cluster_scaling load_sweep overload_sweep autoscale_sweep \
+    chaos_sweep batching_sweep simperf obs_overhead
 
-test:
+.PHONY: help test test-fast lint fmt docs-check bench-smoke \
+    bench-regression bench-baseline bench bench-full bench-simperf \
+    bench-chaos bench-obs
+
+help:  ## list targets (generated from the target comments in this Makefile)
+	@grep -E '^[a-zA-Z_-]+:.*?## ' $(MAKEFILE_LIST) \
+	    | sed 's/:.*##/:/' \
+	    | awk -F': ' '{printf "  make %-18s %s\n", $$1, $$2}'
+
+test:  ## full test suite (the tier-1 gate)
 	$(PYTHON) -m pytest -x -q
 
-test-fast:
+test-fast:  ## everything not marked slow (no model/kernel JAX execution)
 	$(PYTHON) -m pytest -x -q -m "not slow"
 
-lint:
+lint:  ## ruff check (repo-wide, incl. core docstrings) + format check
 	ruff check .
 	ruff format --check $(FORMAT_PATHS)
 
-fmt:
+fmt:  ## ruff-format the FORMAT_PATHS file set in place
 	ruff format $(FORMAT_PATHS)
 
-# The four --out sweeps at smoke size; $(1) is the output directory.
+docs-check:  ## docstring lint + broken relative links in docs/ + README
+	ruff check src/repro/core
+	$(PYTHON) tools/check_links.py README.md docs
+
+# All smoke sweeps at CI size; $(1) is the output directory.
 define run_smoke_sweeps
 	mkdir -p $(1)
 	$(PYTHON) benchmarks/cluster_scaling.py --smoke \
@@ -70,52 +66,48 @@ define run_smoke_sweeps
 	    --out $(1)/autoscale_sweep.json
 	$(PYTHON) benchmarks/chaos_sweep.py --smoke \
 	    --out $(1)/chaos_sweep.json
+	$(PYTHON) benchmarks/batching_sweep.py --smoke \
+	    --out $(1)/batching_sweep.json
 	$(PYTHON) benchmarks/simperf.py --smoke \
 	    --out $(1)/simperf.json
 	$(PYTHON) benchmarks/obs_overhead.py --smoke \
 	    --out $(1)/obs_overhead.json --trace-out $(1)/obs_trace.json
 endef
 
-bench-smoke:
+bench-smoke:  ## CI-sized sweeps -> $(BENCH_OUT)/*.json + sanity gates
 	$(call run_smoke_sweeps,$(BENCH_OUT))
-	$(PYTHON) benchmarks/check_smoke.py $(BENCH_OUT)/cluster_scaling.json \
-	    $(BENCH_OUT)/load_sweep.json $(BENCH_OUT)/overload_sweep.json \
-	    $(BENCH_OUT)/autoscale_sweep.json $(BENCH_OUT)/chaos_sweep.json \
-	    $(BENCH_OUT)/simperf.json $(BENCH_OUT)/obs_overhead.json
+	$(PYTHON) benchmarks/check_smoke.py \
+	    $(foreach n,$(SMOKE_NAMES),$(BENCH_OUT)/$(n).json)
 
-bench-regression:
+bench-regression:  ## bench-smoke + fail on >10% drift vs committed baselines
 	$(call run_smoke_sweeps,$(BENCH_OUT))
-	$(PYTHON) benchmarks/check_smoke.py $(BENCH_OUT)/cluster_scaling.json \
-	    $(BENCH_OUT)/load_sweep.json $(BENCH_OUT)/overload_sweep.json \
-	    $(BENCH_OUT)/autoscale_sweep.json $(BENCH_OUT)/chaos_sweep.json \
-	    $(BENCH_OUT)/simperf.json $(BENCH_OUT)/obs_overhead.json \
+	$(PYTHON) benchmarks/check_smoke.py \
+	    $(foreach n,$(SMOKE_NAMES),$(BENCH_OUT)/$(n).json) \
 	    --baseline $(BASELINE_DIR)
 
-bench-baseline:
+bench-baseline:  ## refresh benchmarks/baselines/*.json (commit the result)
 	$(call run_smoke_sweeps,$(BASELINE_DIR))
-	$(PYTHON) benchmarks/check_smoke.py $(BASELINE_DIR)/cluster_scaling.json \
-	    $(BASELINE_DIR)/load_sweep.json $(BASELINE_DIR)/overload_sweep.json \
-	    $(BASELINE_DIR)/autoscale_sweep.json $(BASELINE_DIR)/chaos_sweep.json \
-	    $(BASELINE_DIR)/simperf.json $(BASELINE_DIR)/obs_overhead.json
+	$(PYTHON) benchmarks/check_smoke.py \
+	    $(foreach n,$(SMOKE_NAMES),$(BASELINE_DIR)/$(n).json)
 
-bench-simperf:
+bench-simperf:  ## full event-core throughput matrix (fast vs frozen legacy)
 	mkdir -p $(BENCH_OUT)
 	$(PYTHON) benchmarks/simperf.py --out $(BENCH_OUT)/simperf_full.json
 
-bench-chaos:
+bench-chaos:  ## full fault-injection sweep with JSON out
 	mkdir -p $(BENCH_OUT)
 	$(PYTHON) benchmarks/chaos_sweep.py --out $(BENCH_OUT)/chaos_sweep.json
 
-bench-obs:
+bench-obs:  ## observability overhead gate at full size + Perfetto trace
 	mkdir -p $(BENCH_OUT)
 	$(PYTHON) benchmarks/obs_overhead.py --out $(BENCH_OUT)/obs_overhead_full.json \
 	    --trace-out $(BENCH_OUT)/obs_trace_full.json
 
-bench:
+bench:  ## every figure-reproduction benchmark + cluster scaling
 	$(PYTHON) benchmarks/run.py
 	$(PYTHON) benchmarks/cluster_scaling.py
 
-bench-full:
+bench-full:  ## the full (non-smoke) sweep suite with JSON out (nightly CI)
 	mkdir -p $(BENCH_OUT)
 	$(PYTHON) benchmarks/run.py
 	$(PYTHON) benchmarks/cluster_scaling.py --out $(BENCH_OUT)/cluster_scaling.json
@@ -123,6 +115,7 @@ bench-full:
 	$(PYTHON) benchmarks/overload_sweep.py --out $(BENCH_OUT)/overload_sweep.json
 	$(PYTHON) benchmarks/autoscale_sweep.py --out $(BENCH_OUT)/autoscale_sweep.json
 	$(PYTHON) benchmarks/chaos_sweep.py --out $(BENCH_OUT)/chaos_sweep.json
+	$(PYTHON) benchmarks/batching_sweep.py --out $(BENCH_OUT)/batching_sweep.json
 	$(PYTHON) benchmarks/simperf.py --out $(BENCH_OUT)/simperf_full.json
 	$(PYTHON) benchmarks/obs_overhead.py --out $(BENCH_OUT)/obs_overhead_full.json \
 	    --trace-out $(BENCH_OUT)/obs_trace_full.json

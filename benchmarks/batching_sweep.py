@@ -1,0 +1,226 @@
+"""Continuous-batching sweep: one-request-per-device vs batch slots,
+chunked prefill, and prefill/decode disaggregation.
+
+The serving engine's headline trade (docs/benchmarks.md): at a *fixed*
+cluster size, continuous batching multiplies decode throughput — an
+iteration with ``B`` co-resident requests costs
+``(1 + batch_overhead*(B-1)) * max(step_i)``, so tokens/s scales nearly
+linearly in ``B`` on decode-bound work — while chunked prefill and
+disaggregated pools protect the *interactive* TTFT SLO from long-prompt
+batch jobs that would otherwise stall shared iterations.
+
+Four configurations over the same mixed workload (interactive priority-9
+short prompts + priority-1 long-prompt batch jobs, Poisson arrivals past
+the single-slot saturation point) on the same 4-device cluster:
+
+* ``single``   — ``batch_slots=1``: the classic one-request-per-device
+  loop (the seed engine's behavior; parity-locked).
+* ``batched``  — 8 slots per device, *monolithic* prefill: each prompt
+  runs as one blocking step, so a long prefill stalls its co-residents.
+* ``chunked``  — 8 slots + chunked prefill: prompts advance one period
+  per iteration and decode latency stays bounded.
+* ``disagg``   — chunked + a dedicated prefill pool (1 prefill / 3
+  decode devices, ``speed_aware`` placement): prefill never shares an
+  iteration with decode at all; sequences migrate KV at hand-off.
+
+Per point: tokens/s, mean/p95 TTFT (overall and interactive-only),
+interactive TTFT SLA attainment against an absolute target, mean TPOT,
+and KV hand-off migrations.  CI gates (benchmarks/check_smoke.py):
+every batched config must beat ``single`` on tokens/s, and the chunked
+configs must hold interactive TTFT SLA >= 0.9.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/batching_sweep.py            # full
+    PYTHONPATH=src python benchmarks/batching_sweep.py --smoke    # CI
+    PYTHONPATH=src python benchmarks/batching_sweep.py --out o.json
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks import common
+from repro.core import metrics
+
+N_DEVICES = 4
+BATCH_SLOTS = 8
+MODEL = "olmo-1b"
+INTERACTIVE_PRIORITY = 9
+# absolute interactive TTFT SLO (seconds of engine virtual time): a few
+# interactive prefills' worth of headroom on the tiny profile, tight
+# enough that a monolithic long-prompt prefill sharing the iteration
+# blows it
+TTFT_SLA = 2e-4
+TASKS_PER_DEVICE = 30
+LOAD = 3.0          # offered load relative to single-slot capacity
+
+CONFIGS: Tuple[Tuple[str, Dict], ...] = (
+    ("single", dict(batch_slots=1)),
+    ("batched", dict(batch_slots=BATCH_SLOTS, chunked_prefill=False)),
+    ("chunked", dict(batch_slots=BATCH_SLOTS, chunked_prefill=True)),
+    ("disagg", dict(batch_slots=BATCH_SLOTS, chunked_prefill=True,
+                    device_roles=("prefill", "prefill", "decode", "decode"),
+                    placement="speed_aware")),
+)
+
+_models = None
+
+
+def models():
+    """Tiny registered model shared by every config (params built once)."""
+    global _models
+    if _models is None:
+        import jax
+        from repro.models import get_model
+        m = get_model(MODEL, tiny=True)
+        _models = {MODEL: (m, m.init_params(jax.random.PRNGKey(0)))}
+    return _models
+
+
+def make_requests(rng: np.random.Generator, n: int, rate: float):
+    """Mixed open-loop workload: 40% interactive (short prompt, priority
+    9), 60% batch (long prompt, priority 1), Poisson arrivals."""
+    from repro.serving.request import InferenceRequest
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        interactive = rng.random() < 0.4
+        if interactive:
+            plen = int(rng.integers(16, 64))
+            dec = int(rng.integers(8, 32))
+            prio, tenant = INTERACTIVE_PRIORITY, "interactive"
+        else:
+            plen = int(rng.integers(256, 1024))
+            dec = int(rng.integers(64, 256))
+            prio, tenant = 1, "batch"
+        reqs.append(InferenceRequest(
+            rid=i, arch=MODEL,
+            prompt=rng.integers(1, 200, (1, plen)).astype(np.int32),
+            max_new_tokens=dec, true_decode_len=dec,
+            priority=prio, arrival=t, tenant=tenant))
+    return reqs
+
+
+def make_engine(cfg: Dict):
+    from repro.serving.engine import ServingEngine
+    kw = dict(execute=False, n_devices=N_DEVICES, policy="prema",
+              mechanism="dynamic")
+    kw.update(cfg)
+    return ServingEngine(models(), **kw)
+
+
+def _probe_rate(n_probe: int = 64) -> float:
+    """Arrival rate offering ``LOAD`` x the single-slot cluster capacity
+    (requests/s over mean isolated time)."""
+    eng = make_engine(dict(batch_slots=1))
+    reqs = make_requests(common.rng(9100), n_probe, rate=1.0)
+    iso = [eng._make_job(r).task.isolated_time for r in reqs]
+    return LOAD * N_DEVICES / float(np.mean(iso))
+
+
+def run_point(cfg: Dict, n_tasks: int, n_runs: int,
+              seed0: int = 9200) -> Dict[str, float]:
+    rate = _probe_rate()
+    runs = []
+    for r in range(n_runs):
+        eng = make_engine(cfg)
+        reqs = make_requests(common.rng(seed0 + 131 * r), n_tasks, rate)
+        results = eng.run(reqs)
+        s = metrics.serving_summary(results,
+                                    interactive_priority=INTERACTIVE_PRIORITY)
+        inter = [x.ttft for x in results
+                 if x.priority >= INTERACTIVE_PRIORITY]
+        sla_hi = (float(np.mean([t <= TTFT_SLA for t in inter]))
+                  if inter else float("nan"))
+        runs.append({
+            "tokens_per_s": s["tokens_per_s"],
+            "mean_ttft": s["mean_ttft"],
+            "p95_ttft": s["p95_ttft"],
+            "mean_tpot": s["mean_tpot"],
+            "interactive_p95_ttft": s["p95_interactive_ttft"],
+            "interactive_ttft_sla": sla_hi,
+            "migrations": float(eng.cluster.n_migrations),
+        })
+    return metrics.aggregate(runs)
+
+
+def sweep(n_tasks: int, n_runs: int
+          ) -> Tuple[List[Tuple[str, float, str]], List[Dict]]:
+    rows: List[Tuple[str, float, str]] = []
+    points: List[Dict] = []
+    for label, cfg in CONFIGS:
+        t0 = time.perf_counter()
+        m = run_point(cfg, n_tasks, n_runs)
+        us = (time.perf_counter() - t0) / n_runs * 1e6
+        rows.append((f"batching.{label}.d{N_DEVICES}", us, (
+            f"tok_s={m['tokens_per_s']:.0f};"
+            f"ttft_p95={m['p95_ttft']:.2e};"
+            f"int_ttft_p95={m['interactive_p95_ttft']:.2e};"
+            f"int_sla={m['interactive_ttft_sla']:.3f};"
+            f"tpot={m['mean_tpot']:.2e};"
+            f"migr={m['migrations']:.0f}")))
+        points.append(dict(config=label, n_devices=N_DEVICES,
+                           ttft_sla_target=TTFT_SLA, **m))
+    return rows, points
+
+
+def run(smoke: bool = False,
+        collect: Optional[Dict] = None) -> List[Tuple[str, float, str]]:
+    """Entry point for benchmarks/run.py (full) and --smoke (CI)."""
+    if smoke:
+        rows, points = sweep(n_tasks=TASKS_PER_DEVICE * N_DEVICES, n_runs=1)
+    else:
+        rows, points = sweep(n_tasks=2 * TASKS_PER_DEVICE * N_DEVICES,
+                             n_runs=3)
+    if collect is not None:
+        collect["points"] = points
+    return rows
+
+
+def showcase_cell():
+    """The disagg cell for ``--trace-out``: slot sub-tracks on the decode
+    pool, KV hand-off migrations from the prefill device."""
+    label, cfg = CONFIGS[-1]
+    eng = make_engine(cfg)
+    reqs = make_requests(common.rng(9200), TASKS_PER_DEVICE * N_DEVICES,
+                         _probe_rate())
+    tasks = [eng._make_job(r).task for r in reqs]
+    del tasks  # Telemetry needs the engine's own job tasks; tracer-only
+    return eng, reqs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="single-run sweep for CI")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="re-base every benchmark RNG stream")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also write machine-readable JSON results")
+    ap.add_argument("--profile", action="store_true",
+                    help="run under cProfile; stats land next to --out")
+    common.add_obs_args(ap)
+    args = ap.parse_args()
+    common.set_seed(args.seed)
+    print("name,us_per_call,derived")
+    extra: Dict = {}
+    with common.maybe_profile(args.profile, args.out, "batching_sweep"):
+        rows = run(smoke=args.smoke, collect=extra)
+    common.emit(rows)
+    if args.out:
+        common.write_json(args.out, "batching_sweep", rows, extra=extra)
+    common.record_showcase(args, showcase_cell, window=1e-3)
+
+
+if __name__ == "__main__":
+    main()

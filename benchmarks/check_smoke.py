@@ -65,6 +65,7 @@ SLA_HI_MIN = 0.9
 AUTOSCALE_CAPACITY_MAX = 0.6   # autoscaled device-seconds vs static-max
 CHAOS_LOST_RATIO_MIN = 1.0     # KILL-restart lost work over checkpoint's
 OBS_OVERHEAD_MAX = 1.15        # tracer-attached / detached wall ceiling
+BATCHING_SPEEDUP_MIN = 1.1     # batched tokens/s over single-slot floor
 REGRESSION_TOL = 0.10          # --baseline: relative drift allowed
 SIMPERF_SPEEDUP_TOL = 0.35     # simperf: allowed speedup-ratio regression
 SIMPERF_SPEEDUP_FLOOR = 1.0    # simperf: fast must never lose to legacy
@@ -235,6 +236,33 @@ def check_chaos_sweep(payload: Dict) -> None:
         _check(p["retries"] > 0, "chaos: retry cell never retried")
 
 
+def check_batching_sweep(payload: Dict) -> None:
+    """The continuous-batching headline gate: at a fixed cluster size
+    every multi-slot config must beat the one-request-per-device
+    baseline on tokens/s, the chunked-prefill configs must hold the
+    interactive TTFT SLA, and the disaggregated pools must actually
+    hand sequences across the prefill/decode boundary."""
+    points = payload.get("extra", {}).get("points", [])
+    _check(bool(points), "batching_sweep: structured points missing")
+    by_cfg = {p["config"]: p for p in points}
+    _check("single" in by_cfg, "batching_sweep: single-slot baseline missing")
+    base_tps = by_cfg["single"]["tokens_per_s"]
+    batched = [p for c, p in by_cfg.items() if c != "single"]
+    _check(bool(batched), "batching_sweep: no batched configs")
+    for p in batched:
+        _check(p["tokens_per_s"] >= BATCHING_SPEEDUP_MIN * base_tps,
+               f"batching[{p['config']}]: tokens/s "
+               f"{p['tokens_per_s']:.0f} did not beat single-slot "
+               f"{base_tps:.0f} by >= {BATCHING_SPEEDUP_MIN}x")
+    for cfg in ("chunked", "disagg"):
+        _check(cfg in by_cfg, f"batching_sweep: {cfg} config missing")
+        _check(by_cfg[cfg]["interactive_ttft_sla"] >= SLA_HI_MIN,
+               f"batching[{cfg}]: interactive TTFT SLA "
+               f"{by_cfg[cfg]['interactive_ttft_sla']:.3f} < {SLA_HI_MIN}")
+    _check(by_cfg["disagg"]["migrations"] > 0,
+           "batching[disagg]: no prefill->decode KV hand-offs happened")
+
+
 def check_simperf(payload: Dict) -> None:
     parity = [r for r in payload["rows"] if ".parity." in r["name"]]
     _check(bool(parity), "simperf: fast-vs-legacy parity row missing")
@@ -347,6 +375,7 @@ CHECKS = {
     "overload_sweep": check_overload_sweep,
     "autoscale_sweep": check_autoscale_sweep,
     "chaos_sweep": check_chaos_sweep,
+    "batching_sweep": check_batching_sweep,
     "simperf": check_simperf,
     "obs_overhead": check_obs_overhead,
 }
@@ -374,7 +403,7 @@ LOWER_BETTER = frozenset(
      "shed", "backlog", "ckpt", "ratio", "lost"))
 HIGHER_BETTER = frozenset(
     ("sla", "stp", "goodput", "tput", "achieved", "util", "throughput",
-     "fairness", "load", "knee", "avail"))
+     "fairness", "load", "knee", "avail", "tok"))
 
 
 def metric_direction(key: str) -> int:

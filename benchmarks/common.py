@@ -4,6 +4,11 @@ All benchmarks run on the paper's Table-I NPU model with the paper's
 8-DNN suite and methodology (§III): N tasks sampled uniformly over the
 suite, uniform-random dispatch, priorities ∈ {1,3,9}, batch ∈ {1,4,16},
 averaged over ``N_RUNS`` workloads per configuration.
+
+The CLI contract every benchmark speaks (``--smoke`` / ``--seed`` /
+``--out`` / ``--profile``, ``name,us_per_call,derived`` rows,
+``write_json`` payloads validated by ``benchmarks/check_smoke.py``) and
+the committed-baseline workflow are documented in docs/benchmarks.md.
 """
 from __future__ import annotations
 

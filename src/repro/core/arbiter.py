@@ -38,6 +38,8 @@ from repro.core.task import Task
 
 
 class Action(enum.Enum):
+    """What the layer should do with a device at this wake-up."""
+
     IDLE = "idle"          # no candidate (empty queue or policy abstained)
     START = "start"        # device free: begin/resume the candidate
     BUSY = "busy"          # device inside a switch-overhead window; retry
@@ -49,6 +51,8 @@ class Action(enum.Enum):
 
 @dataclasses.dataclass(frozen=True)
 class Decision:
+    """One arbiter verdict: the action, its candidate, its mechanism."""
+
     action: Action
     cand: Optional[Task] = None
     mechanism: Optional[Mechanism] = None
@@ -90,6 +94,7 @@ class Arbiter:
 
     def pick(self, ready: List[Task], now: float,
              running: Optional[Task]) -> Optional[Task]:
+        """The policy's current candidate (no tokens accrued; see wake)."""
         return self.policy.select(ready, now, running)
 
     # ------------------------------------------------------------------
@@ -137,6 +142,81 @@ class Arbiter:
         if cand is running:
             return Decision(Action.KEEP, cand)
         return self.arbitrate(running, cand)
+
+    # ---- slot-level arbitration (continuous batching) ----------------
+    def slot_victim(self, residents: List[Task]) -> Optional[Task]:
+        """The co-resident the policy is most willing to displace.
+
+        With one resident per device the preemption victim is forced;
+        with a vector of batch slots the arbiter must *rank* residents.
+        The ranking mirrors each policy family's selection rule run
+        backwards: priority-aware policies (hpf) evict the lowest
+        priority, predictor-backed policies (sjf/token/prema) the longest
+        predicted remaining work (the costliest slot, Algorithm 3's
+        framing), arrival-ordered policies (fcfs/rrb) the youngest
+        arrival.  Ties break on tid for determinism.
+
+        Args:
+            residents: tasks currently occupying the device's slots.
+
+        Returns:
+            The victim candidate, or None when ``residents`` is empty.
+        """
+        if not residents:
+            return None
+        if self.policy.name == "hpf":
+            return min(residents, key=lambda r: (r.priority, -r.arrival,
+                                                 -r.tid))
+        if self.policy.uses_predictor:
+            return max(residents, key=lambda r: (r.predicted_remaining,
+                                                 r.tid))
+        return max(residents, key=lambda r: (r.arrival, r.tid))
+
+    def decide_batch(self, ready: List[Task], now: float,
+                     residents: List[Task], free_slots: int,
+                     busy_until: float = 0.0, *,
+                     wake: bool = True) -> Decision:
+        """Per-wake-up sequence for one *batch slot* of a device.
+
+        The batched analogue of :meth:`decide`: with a free slot the
+        candidate simply STARTs (no one is displaced — continuous
+        batching admits it into the running iteration); with all slots
+        occupied the policy's least-preferred resident
+        (:meth:`slot_victim`) stands in for the single running task and
+        the usual may_preempt → mechanism → KILL-guarantee sequence
+        applies to that slot alone.
+
+        Args:
+            ready: the global ready queue (policy-visible task list).
+            now: current sim time on the device's clock.
+            residents: tasks occupying the device's slots.
+            free_slots: number of unoccupied slots on the device.
+            busy_until: end of the device's switch-overhead window.
+            wake: run ``policy.on_wake`` first (token accrual); pass
+                False when the caller already woke the policy at ``now``.
+
+        Returns:
+            A :class:`Decision`; ``PREEMPT``/``DRAIN``/``DEFER`` target
+            the ``slot_victim`` resident, which the caller looks up again
+            to learn the slot index.
+        """
+        if not ready:
+            return Decision(Action.IDLE)
+        if wake:
+            self.wake(ready, now)
+        cand = self.pick(ready, now, None)
+        if cand is None:
+            return Decision(Action.IDLE)
+        if free_slots > 0:
+            if now >= busy_until:
+                return Decision(Action.START, cand)
+            return Decision(Action.BUSY, cand)
+        if not self.policy.preemptive or now < busy_until:
+            return Decision(Action.KEEP, cand)
+        victim = self.slot_victim(residents)
+        if victim is None or victim is cand:
+            return Decision(Action.KEEP, cand)
+        return self.arbitrate(victim, cand)
 
 
 def remaining_cost(task: Task, speed: float = 1.0) -> float:

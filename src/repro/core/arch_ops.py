@@ -169,6 +169,7 @@ def make_llm_network(cfg: ArchConfig, prompt_len: int, batch: int,
 
 def flops(cfg: ArchConfig, prompt_len: int, batch: int,
           mode: str = "prefill") -> int:
+    """Total FLOPs of one prefill pass or one decode step."""
     if mode == "prefill":
         return sum(op.flops for op in prefill_ops(cfg, prompt_len, batch))
     return sum(op.flops for op in decode_step_ops(cfg, prompt_len, batch))

@@ -65,6 +65,12 @@ class AutoscalerConfig:
     # max_devices), restoring capacity while the crashed device repairs;
     # scale-down retires the surplus once the failure heals.
     replace_failed: bool = False
+    # Disaggregated pools (batched serving): when not "any", this
+    # autoscaler manages only the devices of that pool role — scale-ups
+    # join with the role, scale-downs and the [min, max] bounds consider
+    # only that pool, so a prefill and a decode autoscaler can run
+    # side-by-side on one engine without fighting over capacity.
+    pool_role: str = "any"
 
     def __post_init__(self):
         if self.min_devices < 1:
@@ -73,6 +79,8 @@ class AutoscalerConfig:
             raise ValueError("max_devices must be >= min_devices")
         if not 0.0 <= self.low_watermark < 1.0:
             raise ValueError("low_watermark must be in [0, 1)")
+        if self.pool_role not in ("any", "prefill", "decode"):
+            raise ValueError(f"unknown pool_role {self.pool_role!r}")
 
 
 class Autoscaler:
@@ -112,11 +120,13 @@ class Autoscaler:
         return self
 
     def detach(self) -> None:
+        """Unsubscribe from the attached layer's bus (no-op if detached)."""
         if self.layer is not None:
             self.layer.events.unsubscribe("*", self._on_event)
             self.layer = None
 
     def reset(self) -> None:
+        """Clear accumulated signal and decision history between runs."""
         self.decisions = []
         self._samples.clear()
         self._area = 0.0
@@ -128,6 +138,7 @@ class Autoscaler:
 
     @property
     def n_scale_events(self) -> int:
+        """Total scale-up + scale-down actions taken this run."""
         return len(self.decisions)
 
     # -- signal maintenance --------------------------------------------
@@ -216,6 +227,22 @@ class Autoscaler:
         return ok / len(self._completions) < self.cfg.sla_target
 
     # -- decisions ------------------------------------------------------
+    def _pool_alive(self) -> int:
+        """Live device count within the managed pool (all devices when
+        ``pool_role == "any"``; role-matching ones otherwise)."""
+        if self.cfg.pool_role == "any":
+            return self.layer.cluster.n_alive
+        return sum(1 for d in self.layer.cluster.devices
+                   if d.alive and not d.draining and not d.failed
+                   and d.role == self.cfg.pool_role)
+
+    def _add_device(self):
+        """Provision one device, joining it to the managed pool."""
+        if self.cfg.pool_role != "any":
+            return self.layer.add_device(self.cfg.device_hw,
+                                         role=self.cfg.pool_role)
+        return self.layer.add_device(self.cfg.device_hw)
+
     def _replace(self, now: float, failed_dev: int) -> None:
         """React to a crash: add one device so serving capacity is back
         before the failed unit repairs.  Repair, not reactive scaling —
@@ -223,23 +250,22 @@ class Autoscaler:
         the fresh device is not drained before it finishes provisioning
         (``n_alive`` already excludes the failed device, so the bound
         check naturally leaves room for the replacement)."""
-        cluster = self.layer.cluster
-        if cluster.n_alive >= self.cfg.max_devices:
+        if self._pool_alive() >= self.cfg.max_devices:
             return
-        dev = self.layer.add_device(self.cfg.device_hw)
+        dev = self._add_device()
         self.decisions.append((now, "replace", dev))
         self._last_action = now
 
     def _decide(self, now: float) -> None:
-        cfg, cluster = self.cfg, self.layer.cluster
+        cfg = self.cfg
         if self._last_action is not None and now - self._last_action < cfg.cooldown:
             return
-        n_alive = cluster.n_alive
+        n_alive = self._pool_alive()
         depth = self._avg_depth(now)
         up_thr = cfg.target_queue_per_device * n_alive
         if (depth > up_thr or self._sla_bad()) and n_alive < cfg.max_devices:
             for _ in range(min(cfg.scale_step, cfg.max_devices - n_alive)):
-                dev = self.layer.add_device(cfg.device_hw)
+                dev = self._add_device()
                 self.decisions.append((now, "up", dev))
             self._last_action = now
         elif (
@@ -255,12 +281,16 @@ class Autoscaler:
 
     def _drain_candidate(self) -> Optional[int]:
         """Pick the device to retire: idle before busy, slow before fast,
-        youngest (highest index) on ties — deterministic by construction."""
+        youngest (highest index) on ties — deterministic by construction.
+        A pool-scoped autoscaler only ever retires its own pool."""
         live = [d for d in self.layer.cluster.devices if d.alive and not d.draining]
+        if self.cfg.pool_role != "any":
+            live = [d for d in live if d.role == self.cfg.pool_role]
         if len(live) <= self.cfg.min_devices:
             return None
         best = min(
             live,
-            key=lambda d: (d.running is not None, d.speed, -d.dev),
+            key=lambda d: (d.running is not None or d.n_resident > 0,
+                           d.speed, -d.dev),
         )
         return best.dev

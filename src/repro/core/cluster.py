@@ -116,10 +116,32 @@ PLACEMENT_NAMES = ("least_loaded", "affinity", "speed_aware", "random")
 # paper's high-priority token weight).
 INTERACTIVE_PRIORITY = 9
 
+# Disaggregated-pool roles: a "prefill" device only hosts jobs in their
+# prefill phase, a "decode" device only decoding jobs, "any" hosts both.
+POOL_ROLES = ("any", "prefill", "decode")
+
+
+def role_accepts(role: str, phase: Optional[str]) -> bool:
+    """Whether a device pool role may host a job in ``phase``.
+
+    ``phase`` is ``"prefill"``/``"decode"`` on the batched serving path
+    and ``None`` on the whole-task path (which every role accepts — the
+    task carries no phase, so pools are meaningless there).
+    """
+    return role == "any" or phase is None or role == phase
+
 
 @dataclasses.dataclass
 class DeviceState:
-    """One NPU's slot in the cluster."""
+    """One NPU's slot in the cluster.
+
+    ``batch_slots``/``residents``/``role`` generalize the single
+    ``running`` task to a vector of co-resident batch slots (continuous
+    batching, ``serving/engine.py``); the whole-device simulators keep
+    using ``running`` alone, and a default-constructed device
+    (``batch_slots == 1``, ``role == "any"``) behaves bit-identically to
+    the pre-batching cluster core.
+    """
     dev: int
     hw: Optional[HardwareModel] = None  # None -> the cluster's reference hw
     speed: float = 1.0            # wall time = reference time / speed
@@ -129,6 +151,11 @@ class DeviceState:
     busy_until: float = 0.0       # switch-overhead window (non-preemptible)
     busy_time: float = 0.0        # accumulated service seconds
     last_model: Optional[str] = None
+    # ---- continuous batching (serving/engine.py batched path) ----
+    role: str = "any"             # pool membership (POOL_ROLES)
+    batch_slots: int = 1          # concurrent residents the device admits
+    residents: List[Optional[Task]] = dataclasses.field(
+        default_factory=list)     # slot -> resident (batched path only)
     # ---- elastic lifecycle ----
     added_at: float = 0.0         # ordered at (provisioning is paid for)
     alive_since: float = 0.0      # schedulable from here (post-provision)
@@ -142,9 +169,11 @@ class DeviceState:
 
     @property
     def alive(self) -> bool:
+        """Whether the device is still a cluster member."""
         return self.alive_until is None
 
     def schedulable(self, now: float) -> bool:
+        """Whether new placements may land here at ``now``."""
         return (self.alive and not self.draining and not self.failed
                 and now + 1e-15 >= self.alive_since)
 
@@ -168,6 +197,26 @@ class DeviceState:
             down += max(0.0, min(end, until) - self.failed_at)
         return down
 
+    # ---- batch-slot helpers (batched serving path) ----
+    @property
+    def n_resident(self) -> int:
+        """Occupied batch slots (always 0 on the whole-device path, which
+        tracks its single resident in ``running`` instead)."""
+        return sum(1 for r in self.residents if r is not None)
+
+    def free_slot(self) -> Optional[int]:
+        """Lowest free slot index, or None when all ``batch_slots`` are
+        occupied.  The residents vector grows lazily up to
+        ``batch_slots`` so single-resident devices stay allocation-free.
+        """
+        for i, r in enumerate(self.residents):
+            if r is None:
+                return i
+        if len(self.residents) < self.batch_slots:
+            self.residents.append(None)
+            return len(self.residents) - 1
+        return None
+
 
 def _alive_seconds(d: DeviceState, now: float) -> float:
     return max(now - d.alive_since, 1e-12)
@@ -182,11 +231,14 @@ def _least_loaded(free: List[DeviceState], now: float) -> DeviceState:
 
 def place_least_loaded(task: Task, free: List[DeviceState],
                        rng: np.random.Generator, now: float) -> DeviceState:
+    """Lowest busy-time-per-alive-second device wins."""
     return _least_loaded(free, now)
 
 
 def place_affinity(task: Task, free: List[DeviceState],
                    rng: np.random.Generator, now: float) -> DeviceState:
+    """Prefer the checkpoint's home device, then model-warm devices —
+    avoids paying cross-device migration and cold-model switch costs."""
     if task.restore_pending and task.device is not None:
         home = [d for d in free if d.dev == task.device]
         if home:
@@ -200,7 +252,18 @@ def place_affinity(task: Task, free: List[DeviceState],
 def place_speed_aware(task: Task, free: List[DeviceState],
                       rng: np.random.Generator, now: float) -> DeviceState:
     """Interactive-priority work goes to the fastest free device (ties
-    broken least-loaded); the rest balances load over the live set."""
+    broken least-loaded); the rest balances load over the live set.
+
+    Pool-role aware: when the task carries a ``phase`` (batched serving
+    path) and a role-specialized device matching it is free, the
+    specialized pool wins over ``"any"`` devices — generalists are kept
+    free for the phase the specialized pools cannot host.
+    """
+    phase = getattr(task, "phase", None)
+    if phase is not None:
+        exact = [d for d in free if d.role == phase]
+        if exact:
+            free = exact
     if task.priority >= INTERACTIVE_PRIORITY:
         top = max(d.speed for d in free)
         return _least_loaded([d for d in free if d.speed == top], now)
@@ -209,6 +272,7 @@ def place_speed_aware(task: Task, free: List[DeviceState],
 
 def place_random(task: Task, free: List[DeviceState],
                  rng: np.random.Generator, now: float) -> DeviceState:
+    """Uniform choice over free devices (the seeded baseline)."""
     return free[int(rng.integers(len(free)))]
 
 
@@ -221,6 +285,7 @@ _PLACEMENTS = {
 
 
 def make_placement(name: str):
+    """Look up a placement function by name (``PLACEMENT_NAMES``)."""
     try:
         return _PLACEMENTS[name.lower()]
     except KeyError:
@@ -235,16 +300,36 @@ class Cluster:
 
     def __init__(self, n_devices: int, placement: str = "least_loaded",
                  seed: int = 0, base_hw: Optional[HardwareModel] = None,
-                 device_hw: Optional[Sequence[HardwareModel]] = None):
+                 device_hw: Optional[Sequence[HardwareModel]] = None,
+                 device_roles: Optional[Sequence[str]] = None,
+                 batch_slots: int = 1):
+        """``device_roles`` assigns each device a pool role from
+        ``POOL_ROLES`` (prefill/decode disaggregation; defaults to
+        ``"any"`` everywhere), ``batch_slots`` the number of concurrent
+        residents every device admits on the batched serving path.  Both
+        default to the whole-device configuration the simulators use."""
         if device_hw is not None and len(device_hw) > 0:
             n_devices = len(device_hw)
+        if device_roles is not None and len(device_roles) > 0:
+            bad = [r for r in device_roles if r not in POOL_ROLES]
+            if bad:
+                raise ValueError(f"unknown pool roles {bad!r}; "
+                                 f"choose from {POOL_ROLES}")
+            if device_hw is None:
+                n_devices = len(device_roles)
+            elif len(device_roles) != n_devices:
+                raise ValueError("device_roles and device_hw lengths differ")
         if n_devices < 1:
             raise ValueError("n_devices must be >= 1")
+        if batch_slots < 1:
+            raise ValueError("batch_slots must be >= 1")
         self.base_hw = base_hw
+        self.batch_slots = int(batch_slots)
         self.devices: List[DeviceState] = []
         for d in range(n_devices):
             hw = device_hw[d] if device_hw else None
-            self.devices.append(self._make_device(d, hw))
+            role = device_roles[d] if device_roles else "any"
+            self.devices.append(self._make_device(d, hw, role=role))
         self.placement_name = placement
         self._place = make_placement(placement)
         self.rng = np.random.default_rng(seed)
@@ -254,16 +339,18 @@ class Cluster:
         self.n_failures = 0
 
     def _make_device(self, dev: int, hw: Optional[HardwareModel],
-                     added_at: float = 0.0,
-                     alive_since: float = 0.0) -> DeviceState:
+                     added_at: float = 0.0, alive_since: float = 0.0,
+                     role: str = "any") -> DeviceState:
         speed = 1.0
         if hw is not None and self.base_hw is not None:
             speed = relative_speed(hw, self.base_hw)
         return DeviceState(dev, hw=hw, speed=speed, added_at=added_at,
-                           alive_since=alive_since, busy_until=alive_since)
+                           alive_since=alive_since, busy_until=alive_since,
+                           role=role, batch_slots=self.batch_slots)
 
     @property
     def n_devices(self) -> int:
+        """Total devices ever added, including removed/failed ones."""
         return len(self.devices)
 
     @property
@@ -275,38 +362,59 @@ class Cluster:
                    if d.alive and not d.draining and not d.failed)
 
     def free(self, now: float) -> List[DeviceState]:
+        """Devices that can start a task at ``now`` (whole-device path)."""
         return [d for d in self.devices
                 if d.schedulable(now) and d.running is None
                 and now >= d.busy_until]
 
+    def free_for(self, now: float, phase: Optional[str]) -> List[DeviceState]:
+        """Devices with a spare batch slot at ``now`` whose pool role
+        accepts a job in ``phase`` (batched path analogue of ``free``)."""
+        return [d for d in self.devices
+                if d.schedulable(now) and role_accepts(d.role, phase)
+                and d.n_resident < d.batch_slots and now >= d.busy_until]
+
     def choose(self, task: Task, free: List[DeviceState],
                now: float = 0.0) -> DeviceState:
+        """Pick a device for ``task`` via the configured placement."""
         return self._place(task, free, self.rng, now)
 
     def busy_times(self) -> List[float]:
+        """Accumulated service seconds per device."""
         return [d.busy_time for d in self.devices]
 
     def capacity_seconds(self, until: float) -> List[float]:
+        """Paid-for seconds per device inside ``[0, until]``."""
         return [d.capacity_seconds(until) for d in self.devices]
 
     def downtime_seconds(self, until: float) -> List[float]:
+        """Failed seconds per device inside ``[0, until]``."""
         return [d.downtime_seconds(until) for d in self.devices]
 
     # ---- elastic transitions (event emission is the caller's job) ----
     def add_device(self, now: float, hw: Optional[HardwareModel] = None,
-                   provision_latency: float = 0.0) -> DeviceState:
+                   provision_latency: float = 0.0,
+                   role: str = "any") -> DeviceState:
+        """Join a device (schedulable after ``provision_latency``);
+        ``role`` assigns it to a pool on the batched serving path."""
+        if role not in POOL_ROLES:
+            raise ValueError(f"unknown pool role {role!r}; "
+                             f"choose from {POOL_ROLES}")
         d = self._make_device(len(self.devices), hw, added_at=now,
-                              alive_since=now + provision_latency)
+                              alive_since=now + provision_latency,
+                              role=role)
         self.devices.append(d)
         self.n_scale_ups += 1
         return d
 
     def drain_device(self, dev: int) -> DeviceState:
+        """Stop placements on ``dev`` (residents are the caller's job)."""
         d = self.devices[dev]
         d.draining = True
         return d
 
     def remove_device(self, dev: int, now: float) -> DeviceState:
+        """Take an idle, drained ``dev`` out of the cluster at ``now``."""
         d = self.devices[dev]
         if d.running is not None:
             raise RuntimeError(f"device {dev} still has a resident task; "
@@ -320,6 +428,8 @@ class Cluster:
 
 @dataclasses.dataclass
 class ClusterConfig(SimConfig):
+    """Cluster knobs on top of SimConfig: size, placement, elasticity."""
+
     n_devices: int = 1
     placement: str = "least_loaded"
     placement_seed: int = 0
@@ -424,6 +534,7 @@ class ClusterSimulator:
 
     @property
     def n_alive_devices(self) -> int:
+        """Placeable devices right now (see ``Cluster.n_alive``)."""
         return self.cluster.n_alive
 
     # ------------------------------------------------------------------
@@ -1009,6 +1120,7 @@ class ClusterSimulator:
 
     # ------------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
+        """Cluster-level metrics of the last run (STP/ANTT/SLA/util...)."""
         if not self._tasks:
             raise RuntimeError("summary() requires a completed run()")
         done = [t.completion for t in self._tasks if t.completion is not None]

@@ -9,7 +9,8 @@ the shared :class:`~repro.core.arbiter.Arbiter`:
 ==========  ===============================================================
 ``submit``    a task was offered to the system (its arrival instant);
               fires before any admission decision, ``device == -1``.
-``dispatch``  a task began (or resumed) execution on a device.
+``dispatch``  a task began (or resumed) execution on a device; under
+              continuous batching ``slot`` names its batch slot.
 ``preempt``   a running task was displaced; carries the mechanism
               (``checkpoint`` / ``kill``) that was used.
 ``complete``  a task finished on a device.
@@ -108,14 +109,19 @@ class Event(NamedTuple):
     mechanism: Optional[str] = None  # preempt only: checkpoint | kill
     tenant: Optional[str] = None
     priority: int = 0
+    slot: int = -1                  # batch slot on the device (continuous
+    #                                 batching); -1 = whole-device event
 
     def to_json(self) -> dict:
+        """The JSONL wire form (``ExecutedTrace``/``JsonlSpool`` framing)."""
         return {"t": self.t, "kind": self.kind, "tid": self.tid,
                 "device": self.device, "mechanism": self.mechanism,
-                "tenant": self.tenant, "priority": self.priority}
+                "tenant": self.tenant, "priority": self.priority,
+                "slot": self.slot}
 
     @classmethod
     def from_json(cls, d: dict) -> "Event":
+        """Rebuild from :meth:`to_json` output; missing fields default."""
         return cls(**{name: d[name] for name in cls._fields if name in d})
 
 
@@ -148,6 +154,7 @@ class EventBus:
 
     # -- subscription --------------------------------------------------
     def subscribe(self, kind: str, fn: Subscriber) -> Subscriber:
+        """Register ``fn`` for one event ``kind`` (``"*"`` = all kinds)."""
         if kind not in self._subs:
             raise KeyError(f"unknown event kind {kind!r}; "
                            f"choose from {EVENT_KINDS + ('*',)}")
@@ -155,6 +162,7 @@ class EventBus:
         return fn
 
     def unsubscribe(self, kind: str, fn: Subscriber) -> None:
+        """Remove a subscription added with :meth:`subscribe`."""
         self._subs[kind].remove(fn)
 
     def subscribe_map(self, handlers: Dict[str, Subscriber]) -> Callable[[], None]:
@@ -178,18 +186,23 @@ class EventBus:
         return detach
 
     def on_submit(self, fn: Subscriber) -> Subscriber:
+        """Sugar for ``subscribe("submit", fn)``."""
         return self.subscribe("submit", fn)
 
     def on_dispatch(self, fn: Subscriber) -> Subscriber:
+        """Sugar for ``subscribe("dispatch", fn)``."""
         return self.subscribe("dispatch", fn)
 
     def on_preempt(self, fn: Subscriber) -> Subscriber:
+        """Sugar for ``subscribe("preempt", fn)``."""
         return self.subscribe("preempt", fn)
 
     def on_complete(self, fn: Subscriber) -> Subscriber:
+        """Sugar for ``subscribe("complete", fn)``."""
         return self.subscribe("complete", fn)
 
     def on_drop(self, fn: Subscriber) -> Subscriber:
+        """Sugar for ``subscribe("drop", fn)``."""
         return self.subscribe("drop", fn)
 
     # -- emission ------------------------------------------------------
@@ -198,6 +211,7 @@ class EventBus:
         self.log = []
 
     def emit(self, ev: Event) -> None:
+        """Log ``ev`` (when ``keep_log``) and notify its subscribers."""
         if self.keep_log:
             self.log.append(ev)
         # breadth-first delivery: an event emitted from inside a hook
@@ -232,49 +246,64 @@ class EventBus:
                 fn(ev)
 
     def _task_event(self, t: float, kind: str, task, device: int,
-                    mechanism: Optional[str] = None) -> None:
+                    mechanism: Optional[str] = None, slot: int = -1) -> None:
         self.emit(Event(float(t), kind, task.tid, device, mechanism,
                         getattr(task, "tenant", None),
-                        int(getattr(task, "priority", 0))))
+                        int(getattr(task, "priority", 0)), slot))
 
     def submit(self, t: float, task) -> None:
+        """A task was offered at its arrival instant (before admission)."""
         self._task_event(t, "submit", task, -1)
 
-    def dispatch(self, t: float, task, device: int) -> None:
-        self._task_event(t, "dispatch", task, device)
+    def dispatch(self, t: float, task, device: int, slot: int = -1) -> None:
+        """A task began (or resumed) on ``device``; ``slot`` is its batch
+        slot under continuous batching (-1 when the device runs a single
+        resident — the historical whole-device path)."""
+        self._task_event(t, "dispatch", task, device, slot=slot)
 
-    def preempt(self, t: float, task, device: int, mechanism: str) -> None:
-        self._task_event(t, "preempt", task, device, mechanism)
+    def preempt(self, t: float, task, device: int, mechanism: str,
+                slot: int = -1) -> None:
+        """A running task was displaced by ``mechanism`` on ``device``."""
+        self._task_event(t, "preempt", task, device, mechanism, slot=slot)
 
-    def complete(self, t: float, task, device: int) -> None:
-        self._task_event(t, "complete", task, device)
+    def complete(self, t: float, task, device: int, slot: int = -1) -> None:
+        """A task finished on ``device`` (``slot`` as in :meth:`dispatch`)."""
+        self._task_event(t, "complete", task, device, slot=slot)
 
     def drop(self, t: float, task) -> None:
+        """Admission control shed the task; it never executes."""
         self._task_event(t, "drop", task, -1)
 
     # -- device lifecycle (elastic clusters; tid == -1) ----------------
     def device_up(self, t: float, device: int) -> None:
+        """A device joined the cluster (schedulable after provisioning)."""
         self.emit(Event(t=float(t), kind="device_up", tid=-1, device=device))
 
     def device_drain(self, t: float, device: int) -> None:
+        """A device stopped accepting new placements."""
         self.emit(Event(t=float(t), kind="device_drain", tid=-1, device=device))
 
     def device_down(self, t: float, device: int) -> None:
+        """A drained device left the cluster for good."""
         self.emit(Event(t=float(t), kind="device_down", tid=-1, device=device))
 
     # -- faults (core/faults.py; tid == -1) ----------------------------
     def device_fail(self, t: float, device: int) -> None:
+        """A device crashed: zero capacity until ``device_recover``."""
         self.emit(Event(t=float(t), kind="device_fail", tid=-1, device=device))
 
     def device_recover(self, t: float, device: int) -> None:
+        """A failed device was repaired and is schedulable again."""
         self.emit(Event(t=float(t), kind="device_recover", tid=-1,
                         device=device))
 
     # -- client recovery (repro.workloads.retry) -----------------------
     def retry(self, t: float, task) -> None:
+        """A client re-offered a dropped task after backoff."""
         self._task_event(t, "retry", task, -1)
 
     def abandon(self, t: float, task) -> None:
+        """A client gave up on a task (budget/deadline exhausted)."""
         self._task_event(t, "abandon", task, -1)
 
     # -- SLO monitoring (repro.obs.slo; tid == -1) ---------------------
@@ -285,6 +314,7 @@ class EventBus:
                         mechanism=rule, tenant=tenant))
 
     def slo_clear(self, t: float, tenant: Optional[str], rule: str) -> None:
+        """The named rule's burn rate dropped back under its clear bar."""
         self.emit(Event(t=float(t), kind="slo_clear", tid=-1, device=-1,
                         mechanism=rule, tenant=tenant))
 
@@ -323,6 +353,7 @@ class JsonlSpool:
             self._fp.flush()
 
     def attach(self, bus: EventBus) -> "JsonlSpool":
+        """Subscribe to every event on ``bus``; returns self for chaining."""
         bus.subscribe("*", self)
         self._bus = bus
         return self
@@ -333,6 +364,7 @@ class JsonlSpool:
         self._fp.flush()
 
     def close(self) -> None:
+        """Detach from the bus, flush, and close an owned file handle."""
         if self._bus is not None:
             self._bus.unsubscribe("*", self)
             self._bus = None

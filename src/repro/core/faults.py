@@ -127,5 +127,6 @@ class FaultInjector:
         return now + float(self._rng(dev).exponential(self.mttr))
 
     def describe(self) -> Dict:
+        """Configuration summary for benchmark JSON metadata."""
         return {"mtbf": self.mtbf, "mttr": self.mttr, "seed": self.seed,
                 "n_scripted": len(self.script), "horizon": self.horizon}

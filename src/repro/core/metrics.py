@@ -117,6 +117,45 @@ def percentile_summary(tasks: Sequence[Task],
                   if t.first_service is not None]}, pcts)
 
 
+def serving_summary(results: Sequence,
+                    interactive_priority: int = 9) -> Dict[str, float]:
+    """Token-level serving aggregates over a run's ``RequestResult`` set.
+
+    The paper's NTT/SLA framing extends to the two serving SLOs:
+    **TTFT** (time to first token — prefill queueing + compute) and
+    **TPOT** (time per output token over decode).  Returns their means
+    and p50/p95/p99, plus ``tokens_per_s`` (generated tokens over the
+    run's makespan — the continuous-batching headline number) and the
+    interactive-priority TTFT percentiles separately, since chunked
+    prefill exists to protect exactly that class.
+
+    Args:
+        results: completed :class:`repro.serving.request.RequestResult` s.
+        interactive_priority: priority level reported separately.
+
+    Returns:
+        Flat ``str -> float`` dict; NaN where a series is empty.
+    """
+    results = list(results)
+    out: Dict[str, float] = {}
+    if not results:
+        return {"tokens_per_s": 0.0, "mean_ttft": float("nan"),
+                "mean_tpot": float("nan")}
+    ttfts = [r.ttft for r in results]
+    tpots = [r.tpot for r in results if not np.isnan(r.tpot)]
+    makespan = max(r.completion for r in results)
+    n_tok = sum(r.n_tokens for r in results)
+    out["tokens_per_s"] = n_tok / max(makespan, 1e-12)
+    out["n_tokens"] = float(n_tok)
+    out["mean_ttft"] = float(np.mean(ttfts))
+    out["mean_tpot"] = float(np.mean(tpots)) if tpots else float("nan")
+    inter = [r.ttft for r in results if r.priority >= interactive_priority]
+    out.update(_percentile_rows(
+        {"ttft": ttfts, "tpot": tpots, "interactive_ttft": inter},
+        PERCENTILES))
+    return out
+
+
 def summarize(tasks: Sequence[Task]) -> Dict[str, float]:
     """Aggregate over one run's task set.  Latency/SLA keys cover the
     completed subset; ``n_offered``/``n_rejected``/``shed_rate`` account
@@ -228,13 +267,16 @@ class Histogram:
 
     @property
     def n(self) -> int:
+        """Total weight added so far."""
         return sum(self.counts)
 
     def add(self, value: float, weight: int = 1) -> None:
+        """Bucket ``value`` (O(log buckets), constant memory)."""
         self.counts[bisect.bisect_right(self.edges, value)] += weight
         self._sum += value * weight
 
     def mean(self) -> float:
+        """Exact mean of added values (the sum is tracked, not bucketed)."""
         n = self.n
         return self._sum / n if n else float("nan")
 
@@ -257,6 +299,7 @@ class Histogram:
         return float(self.edges[-1])
 
     def merge(self, other: "Histogram") -> "Histogram":
+        """Accumulate ``other`` in place; edge layouts must match."""
         if self.edges != other.edges:
             raise ValueError("cannot merge histograms with different edges")
         for i, c in enumerate(other.counts):
@@ -265,6 +308,7 @@ class Histogram:
         return self
 
     def to_dict(self) -> Dict[str, object]:
+        """JSON-serializable form (telemetry export)."""
         return {"edges": list(self.edges), "counts": list(self.counts),
                 "sum": self._sum}
 

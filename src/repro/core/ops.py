@@ -30,9 +30,11 @@ class GemmOp:
 
     @property
     def flops(self) -> int:
+        """Multiply-accumulate FLOPs (2·m·k·n per repeat)."""
         return 2 * self.m * self.k * self.n * self.repeat
 
     def output_bytes(self, bytes_per_elem: int = 2) -> int:
+        """Output-activation bytes at this node (checkpoint context)."""
         if self.out_bytes is not None:
             return self.out_bytes
         return self.m * self.n * self.repeat * bytes_per_elem
@@ -46,6 +48,7 @@ class VectorOp:
 
     @property
     def flops(self) -> int:
+        """One op per element."""
         return self.elems
 
 
@@ -69,6 +72,7 @@ class NetworkDesc:
     batch: int = 1
 
     def ops(self, in_len: int = 0, unroll: int = 0) -> List[NodeOp]:
+        """The flattened op list for one inference of the given lengths."""
         out = list(self.static_ops)
         for _ in range(in_len):
             out.extend(self.encoder_ops)
@@ -77,6 +81,7 @@ class NetworkDesc:
         return out
 
     def with_batch(self, batch: int) -> "NetworkDesc":
+        """Rescale every op's batch-proportional dimension to ``batch``."""
         scale = batch / self.batch
 
         def scale_op(op):
@@ -110,6 +115,7 @@ def depthwise_conv2d(name: str, channels: int, kh: int, kw: int,
 
 
 def fc(name: str, in_f: int, out_f: int, batch: int = 1) -> GemmOp:
+    """Fully-connected layer as a single GEMM."""
     return GemmOp(m=out_f, k=in_f, n=batch, name=name)
 
 

@@ -68,12 +68,14 @@ def gemm_time(op: GemmOp, hw: HardwareModel, acc: int = DEFAULT_ACC) -> float:
 
 
 def vector_time(op: VectorOp, hw: HardwareModel) -> float:
+    """Vector-unit node latency: max of compute and in-place memory."""
     compute = op.elems / hw.peak_vector_flops * 2
     mem = op.elems * hw.bytes_per_elem / hw.hbm_bw  # in-place (§IV-B)
     return max(compute, mem)
 
 
 def node_time(op: NodeOp, hw: HardwareModel, acc: int = DEFAULT_ACC) -> float:
+    """Latency of one node op on ``hw`` (Algorithm 1 per-op model)."""
     if isinstance(op, GemmOp):
         return gemm_time(op, hw, acc)
     if isinstance(op, VectorOp):
@@ -83,15 +85,18 @@ def node_time(op: NodeOp, hw: HardwareModel, acc: int = DEFAULT_ACC) -> float:
 
 def network_time(ops: Sequence[NodeOp], hw: HardwareModel,
                  acc: int = DEFAULT_ACC) -> float:
+    """End-to-end latency of an op sequence (sum of node times)."""
     return float(sum(node_time(op, hw, acc) for op in ops))
 
 
 def per_node_times(ops: Sequence[NodeOp], hw: HardwareModel,
                    acc: int = DEFAULT_ACC) -> np.ndarray:
+    """Per-node latencies — the Task's schedulable-period durations."""
     return np.asarray([node_time(op, hw, acc) for op in ops])
 
 
 def network_flops(ops: Sequence[NodeOp]) -> int:
+    """Total FLOPs over an op sequence."""
     return sum(op.flops for op in ops)
 
 
@@ -138,6 +143,7 @@ class LengthRegressor:
         self._samples: Dict[int, List[int]] = {}
 
     def fit(self, pairs: Sequence[Tuple[int, int]]) -> "LengthRegressor":
+        """Profile (in_len, out_len) pairs into a geometric-mean LUT."""
         buckets: Dict[int, List[int]] = {}
         for in_len, out_len in pairs:
             buckets.setdefault(int(in_len), []).append(max(1, int(out_len)))
@@ -149,6 +155,7 @@ class LengthRegressor:
         return self
 
     def predict(self, in_len: int) -> float:
+        """Expected output length for ``in_len`` (LUT + interpolation)."""
         if not self._keys:
             raise RuntimeError("LengthRegressor not fitted")
         if in_len in self._table:
@@ -173,6 +180,7 @@ class LengthRegressor:
 
     @property
     def input_lengths(self) -> List[int]:
+        """Profiled input lengths, ascending."""
         return list(self._keys)
 
 
@@ -181,6 +189,8 @@ class LengthRegressor:
 # ==========================================================================
 @dataclasses.dataclass
 class Prediction:
+    """Algorithm-1 output: total time plus the per-node breakdown."""
+
     total_time: float
     node_times: np.ndarray          # per executed node (predicted unroll)
     n_static: int
@@ -196,12 +206,15 @@ class Predictor:
         self._regressors: Dict[str, LengthRegressor] = {}
 
     def register_regressor(self, model_name: str, reg: LengthRegressor):
+        """Install the fitted output-length LUT for a seq2seq model."""
         self._regressors[model_name] = reg
 
     def regressor(self, model_name: str) -> Optional[LengthRegressor]:
+        """The registered LUT for ``model_name``, or None."""
         return self._regressors.get(model_name)
 
     def predict_unroll(self, net: NetworkDesc, in_len: Optional[int]) -> int:
+        """Predicted decode/unroll length for one inference of ``net``."""
         if not net.recurrent_ops:
             return 0
         if net.kind == "rnn_linear":
@@ -215,6 +228,7 @@ class Predictor:
 
     def predict(self, net: NetworkDesc, in_len: Optional[int] = None,
                 unroll_override: Optional[int] = None) -> Prediction:
+        """Full Algorithm-1 prediction for one inference of ``net``."""
         unroll = (unroll_override if unroll_override is not None
                   else self.predict_unroll(net, in_len))
         ops = net.ops(in_len or 0, unroll)

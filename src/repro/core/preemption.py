@@ -23,6 +23,8 @@ from repro.hw import HardwareModel
 
 
 class Mechanism(enum.Enum):
+    """The paper's three preemption mechanisms (§IV-C)."""
+
     CHECKPOINT = "checkpoint"
     KILL = "kill"
     DRAIN = "drain"
@@ -34,6 +36,7 @@ def checkpoint_latency(task: Task, hw: HardwareModel) -> float:
 
 
 def restore_latency(task: Task, hw: HardwareModel) -> float:
+    """Time to reload a checkpointed context before resuming."""
     return task.checkpoint_bytes(hw.vmem_bytes) / hw.hbm_bw
 
 
@@ -47,6 +50,7 @@ def migration_latency(task: Task, hw: HardwareModel) -> float:
 
 
 def preemption_cost(task: Task, hw: HardwareModel, mech: Mechanism) -> float:
+    """Immediate cost charged when ``mech`` displaces ``task``."""
     if mech is Mechanism.CHECKPOINT:
         return checkpoint_latency(task, hw)
     return 0.0

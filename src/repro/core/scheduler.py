@@ -84,6 +84,7 @@ class Policy:
 
     def select(self, ready: List[Task], now: float,
                running: Optional[Task]) -> Optional[Task]:
+        """The policy's preferred candidate from ``ready`` (None = idle)."""
         raise NotImplementedError
 
     def on_wake(self, ready: List[Task], now: float) -> None:
@@ -102,15 +103,19 @@ class Policy:
 
 
 class FCFS(Policy):
+    """First come, first served (arrival order; ties on tid)."""
+
     def __init__(self, preemptive: bool = False):
         super().__init__(name="fcfs", preemptive=preemptive)
 
     def select(self, ready, now, running):
+        """Earliest arrival wins."""
         if _fast(ready, "fcfs"):
             return ready.select()
         return min(ready, key=lambda t: (t.arrival, t.tid)) if ready else None
 
     def may_preempt(self, running, cand, dynamic_mech):
+        """Only an earlier arrival may displace (rare: requeue paths)."""
         return cand.arrival < running.arrival
 
 
@@ -122,6 +127,7 @@ class RoundRobin(Policy):
         self._last_tid: int = -1
 
     def select(self, ready, now, running):
+        """Next tid after the previously-selected one, cycling."""
         if not ready:
             return None
         order = sorted(ready, key=lambda t: t.tid)
@@ -133,9 +139,11 @@ class RoundRobin(Policy):
         return order[0]
 
     def may_preempt(self, running, cand, dynamic_mech):
+        """Always: the quantum boundary is the preemption point."""
         return True
 
     def reset(self):
+        """Restart the cycle position."""
         self._last_tid = -1
 
 
@@ -146,6 +154,7 @@ class HPF(Policy):
         super().__init__(name="hpf", preemptive=preemptive)
 
     def select(self, ready, now, running):
+        """Highest priority; FCFS within a priority level."""
         if _fast(ready, "hpf"):
             return ready.select()
         if not ready:
@@ -153,6 +162,7 @@ class HPF(Policy):
         return min(ready, key=lambda t: (-t.priority, t.arrival, t.tid))
 
     def may_preempt(self, running, cand, dynamic_mech):
+        """Strictly higher priority displaces."""
         return cand.priority > running.priority
 
 
@@ -165,6 +175,7 @@ class SJF(Policy):
                          uses_predictor=True)
 
     def select(self, ready, now, running):
+        """Shortest predicted remaining work wins."""
         if _fast(ready, "sjf"):
             return ready.select()
         if not ready:
@@ -172,6 +183,7 @@ class SJF(Policy):
         return min(ready, key=lambda t: (t.predicted_remaining, t.tid))
 
     def may_preempt(self, running, cand, dynamic_mech):
+        """A predicted-shorter candidate displaces."""
         return cand.predicted_remaining < running.predicted_remaining
 
 
@@ -184,9 +196,11 @@ class TokenFCFS(Policy):
                          uses_predictor=True)
 
     def on_wake(self, ready, now):
+        """Accrue priority-weighted wait tokens (Eq. 2)."""
         accrue_tokens(ready, now)
 
     def select(self, ready, now, running):
+        """FCFS among tasks above the token threshold."""
         if _fast(ready, "token"):
             return ready.select()
         if not ready:
@@ -196,6 +210,7 @@ class TokenFCFS(Policy):
         return min(cands, key=lambda t: (t.arrival, t.tid))
 
     def may_preempt(self, running, cand, dynamic_mech):
+        """More accrued tokens displaces."""
         return cand.tokens > running.tokens
 
 
@@ -207,9 +222,11 @@ class PREMA(Policy):
                          uses_predictor=True)
 
     def on_wake(self, ready, now):
+        """Accrue priority-weighted wait tokens (Eq. 2)."""
         accrue_tokens(ready, now)
 
     def select(self, ready, now, running):
+        """Shortest estimated job among the token candidates."""
         if _fast(ready, "prema"):
             return ready.select()
         if not ready:
@@ -219,12 +236,14 @@ class PREMA(Policy):
         return min(cands, key=lambda t: (t.predicted_remaining, t.tid))
 
     def may_preempt(self, running, cand, dynamic_mech):
+        """Under Algorithm 3 always arbitrate; else predicted-shorter."""
         if dynamic_mech:
             return True  # Algorithm 3 arbitrates CHECKPOINT vs DRAIN
         return cand.predicted_remaining < running.predicted_remaining
 
 
 def make_policy(name: str, preemptive: bool = False) -> Policy:
+    """Instantiate a policy by name (one of ``POLICY_NAMES``)."""
     name = name.lower()
     if name == "fcfs":
         return FCFS(preemptive)

@@ -41,6 +41,8 @@ from repro.hw import HardwareModel
 
 @dataclasses.dataclass
 class SimConfig:
+    """Single-device simulator knobs (mechanism, quantum, admission)."""
+
     mechanism: str = "dynamic"   # checkpoint | kill | drain | dynamic
     quantum: float = SCHED_QUANTUM
     log_events: bool = False
@@ -53,6 +55,7 @@ class SimConfig:
     admission: Optional[object] = None
 
     def arbiter_config(self) -> ArbiterConfig:
+        """The arbiter-facing subset of this config."""
         return ArbiterConfig(mechanism=self.mechanism,
                              kill_early_frac=self.kill_early_frac,
                              max_kills=self.max_kills)
@@ -75,6 +78,14 @@ def tile_roundup(task: Task, elapsed: float) -> float:
 
 
 class NPUSimulator:
+    """Single-NPU virtual-clock simulator — the paper's setting (§V).
+
+    A thin wrapper over the shared :class:`~repro.core.arbiter.Arbiter`:
+    one device, one running task, preemption by checkpoint/kill/drain,
+    events on ``self.events``.  ``ClusterSimulator(n_devices=1)`` is
+    bit-identical (tests/test_cluster.py).
+    """
+
     def __init__(self, hw: HardwareModel, policy: Policy,
                  cfg: Optional[SimConfig] = None):
         self.hw = hw

@@ -12,6 +12,8 @@ PRIORITY_LEVELS = (1, 3, 9)
 
 
 class TaskState(enum.Enum):
+    """Lifecycle of a task across every execution layer."""
+
     WAITING = "waiting"        # in ReadyQueue, never run or KILLed back
     RUNNING = "running"
     PREEMPTED = "preempted"    # checkpointed, in ReadyQueue
@@ -44,6 +46,8 @@ class Task:
     # ---- dynamic scheduling state ----
     state: TaskState = TaskState.WAITING
     device: Optional[int] = None       # device the task last ran on (cluster)
+    phase: Optional[str] = None        # batched serving: "prefill"/"decode"
+    #                                    (None on the whole-task path)
     tokens: float = 0.0
     executed: float = 0.0              # Time_executed (actual progress)
     last_wake: float = 0.0             # last token-accrual timestamp
@@ -76,11 +80,13 @@ class Task:
 
     @property
     def total_nodes(self) -> int:
+        """Number of schedulable periods (checkpointable boundaries)."""
         return len(self.node_times)
 
     # ---- progress ----
     @property
     def remaining(self) -> float:
+        """Actual (oracle) seconds of work left."""
         return max(0.0, self.isolated_time - self.executed)
 
     @property
@@ -109,6 +115,7 @@ class Task:
     # ---- metrics ----
     @property
     def turnaround(self) -> float:
+        """Completion minus arrival (requires the task to be DONE)."""
         assert self.completion is not None
         return self.completion - self.arrival
 
@@ -126,5 +133,6 @@ class Task:
         return self.sla_scale * self.isolated_time
 
     def sla_met(self, default_scale: float = 8.0) -> bool:
+        """Whether turnaround met the tenant SLA (or ``default_scale``)."""
         scale = self.sla_scale if self.sla_scale is not None else default_scale
         return self.turnaround <= scale * self.isolated_time

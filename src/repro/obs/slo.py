@@ -34,7 +34,15 @@ from repro.core import metrics
 class SLORule:
     """One alerting rule over one tenant class (``tenant=None`` matches
     every task).  ``target`` is the SLA-attainment objective (e.g. 0.9 ⇒
-    a 10% error budget); the window is sim-time seconds."""
+    a 10% error budget); the window is sim-time seconds.
+
+    ``metric`` selects what the rule watches: ``"sla"`` (the default)
+    evaluates end-to-end turnaround against each task's SLA budget on
+    ``complete``; ``"ttft"`` evaluates time-to-first-service (submit →
+    first dispatch of the attempt, the serving TTFT SLO) against the
+    absolute ``ttft_target`` seconds — the signal chunked prefill and
+    prefill/decode disaggregation exist to protect.
+    """
     name: str
     tenant: Optional[str] = None
     target: float = 0.9
@@ -43,6 +51,8 @@ class SLORule:
     clear_burn: float = 1.0
     min_samples: int = 10
     count_drops: bool = True
+    metric: str = "sla"               # "sla" | "ttft"
+    ttft_target: Optional[float] = None   # seconds (metric == "ttft")
 
     def __post_init__(self):
         if not 0.0 < self.target < 1.0:
@@ -50,6 +60,12 @@ class SLORule:
         if self.clear_burn > self.alert_burn:
             raise ValueError("clear_burn must be <= alert_burn "
                              "(hysteresis, not oscillation)")
+        if self.metric not in ("sla", "ttft"):
+            raise ValueError(f"unknown metric {self.metric!r}; "
+                             "choose 'sla' or 'ttft'")
+        if self.metric == "ttft" and self.ttft_target is None:
+            raise ValueError("metric='ttft' needs an absolute ttft_target "
+                             "(seconds)")
 
 
 class _RuleState:
@@ -78,6 +94,7 @@ class SLOMonitor:
                                               for r in self.rules}
         self._iso: Dict[int, Tuple[float, float]] = {}
         self._submits: Dict[int, float] = {}
+        self._await_first: Dict[int, float] = {}   # tid -> submit t (ttft)
         self._bus = None
         self._detach = None
         self.alerts: List[Tuple[float, str, str, Optional[str], float]] = []
@@ -87,10 +104,13 @@ class SLOMonitor:
                ) -> "SLOMonitor":
         bus = getattr(layer_or_bus, "events", layer_or_bus)
         self._bus = bus
-        self._detach = bus.subscribe_map({"complete": self._on_outcome,
-                                          "drop": self._on_outcome,
-                                          "abandon": self._on_outcome,
-                                          "submit": self._on_submit})
+        handlers = {"complete": self._on_outcome,
+                    "drop": self._on_outcome,
+                    "abandon": self._on_outcome,
+                    "submit": self._on_submit}
+        if any(r.metric == "ttft" for r in self.rules):
+            handlers["dispatch"] = self._on_dispatch
+        self._detach = bus.subscribe_map(handlers)
         if tasks is not None:
             for t in tasks:
                 scale = getattr(t, "sla_scale", None)
@@ -110,6 +130,19 @@ class SLOMonitor:
         # remember the (re-)offer instant: turnaround spans the last
         # attempt, matching Task.turnaround under crash re-queue
         self._submits[ev.tid] = ev.t
+        self._await_first[ev.tid] = ev.t
+
+    def _on_dispatch(self, ev) -> None:
+        # first dispatch after a submit: the attempt's TTFT sample
+        t_sub = self._await_first.pop(ev.tid, None)
+        if t_sub is None:
+            return
+        for rule in self.rules:
+            if rule.metric != "ttft":
+                continue
+            if rule.tenant is not None and rule.tenant != ev.tenant:
+                continue
+            self._observe(rule, ev.t, (ev.t - t_sub) <= rule.ttft_target)
 
     def _on_outcome(self, ev) -> None:
         if ev.kind == "complete":
@@ -120,11 +153,18 @@ class SLOMonitor:
             met = (ev.t - t_sub) <= iso[1] * iso[0]
         else:
             self._submits.pop(ev.tid, None)
+            self._await_first.pop(ev.tid, None)
             met = False
         for rule in self.rules:
             if rule.tenant is not None and rule.tenant != ev.tenant:
                 continue
             if not met and ev.kind != "complete" and not rule.count_drops:
+                continue
+            if rule.metric == "ttft":
+                # dispatch drives ttft rules; a drop/abandon that never
+                # dispatched is a miss when the rule counts drops
+                if ev.kind != "complete" and rule.count_drops:
+                    self._observe(rule, ev.t, False)
                 continue
             self._observe(rule, ev.t, met)
 

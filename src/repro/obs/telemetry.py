@@ -44,6 +44,10 @@ class TelemetryConfig:
     n_devices: Optional[int] = None
     ntt_edges: Tuple[float, ...] = DEFAULT_NTT_EDGES
     turnaround_edges: Tuple[float, ...] = DEFAULT_TAT_EDGES
+    # TTFT here is the scheduler-visible time-to-first-service (submit →
+    # first dispatch of the attempt), the event-stream analogue of the
+    # token-level TTFT in ``metrics.serving_summary``.
+    ttft_edges: Tuple[float, ...] = DEFAULT_TAT_EDGES
 
     def __post_init__(self):
         if self.window <= 0.0:
@@ -57,8 +61,8 @@ _COUNT_KINDS = ("submit", "dispatch", "preempt", "complete", "drop",
 
 class _Window:
     __slots__ = ("counts", "kills", "queue_int", "busy_int", "delta_int",
-                 "failed_int", "ntt_hist", "tat_hist", "per_tenant",
-                 "per_prio")
+                 "failed_int", "ntt_hist", "tat_hist", "ttft_hist",
+                 "per_tenant", "per_prio")
 
     def __init__(self) -> None:
         self.counts = dict.fromkeys(_COUNT_KINDS, 0)
@@ -69,6 +73,7 @@ class _Window:
         self.failed_int = 0.0   # ∫ failed-device count dt
         self.ntt_hist: Optional[metrics.Histogram] = None
         self.tat_hist: Optional[metrics.Histogram] = None
+        self.ttft_hist: Optional[metrics.Histogram] = None
         # tenant/prio -> [n_complete, n_sla_met, ntt_sum]
         self.per_tenant: Dict[str, List[float]] = {}
         self.per_prio: Dict[int, List[float]] = {}
@@ -84,6 +89,8 @@ class Telemetry:
     def reset(self) -> None:
         self._win: Dict[int, _Window] = {}
         self._inflight: Dict[int, float] = {}    # tid -> submit t
+        self._await_first: Dict[int, float] = {}  # tid -> submit t until
+        #                                           first dispatch (TTFT)
         self._resident: Dict[int, int] = {}      # device -> running tid
         self._iso: Dict[int, Tuple[float, float]] = {}  # tid -> (iso, scale)
         self._depth = 0
@@ -161,30 +168,45 @@ class Telemetry:
         if kind == "submit":
             self._depth += 1
             self._inflight[tid] = t
+            self._await_first[tid] = t
         elif kind == "dispatch":
             self._depth -= 1
             self._busy += 1
-            self._resident[ev.device] = tid
+            slot_key = ev.device if ev.slot < 0 else (ev.device, ev.slot)
+            self._resident[slot_key] = tid
+            t_sub = self._await_first.pop(tid, None)
+            if t_sub is not None:
+                if w.ttft_hist is None:
+                    w.ttft_hist = metrics.Histogram(self.config.ttft_edges)
+                w.ttft_hist.add(t - t_sub)
         elif kind == "preempt":
             self._depth += 1
             self._busy -= 1
-            self._resident.pop(ev.device, None)
+            self._resident.pop(
+                ev.device if ev.slot < 0 else (ev.device, ev.slot), None)
             if ev.mechanism == "kill":
                 w.kills += 1
         elif kind == "complete":
             self._busy -= 1
-            self._resident.pop(ev.device, None)
+            self._resident.pop(
+                ev.device if ev.slot < 0 else (ev.device, ev.slot), None)
             self._complete(w, ev, t)
         elif kind == "drop":
             self._depth -= 1
             self._inflight.pop(tid, None)
+            self._await_first.pop(tid, None)
         elif kind == "device_fail":
             # failed capacity lives in failed_int alone (delta_int tracks
             # elastic up/down), or `alive` would double-subtract the crash
             self._failed += 1
-            # the crashed resident re-queues without a task event: it
-            # stops accruing busy time now and re-enters the queue
-            if self._resident.pop(ev.device, None) is not None:
+            # crashed residents re-queue without a task event: they stop
+            # accruing busy time now and re-enter the queue (a batched
+            # device may hold several, one per slot key)
+            keys = [k for k in self._resident
+                    if k == ev.device or (isinstance(k, tuple)
+                                          and k[0] == ev.device)]
+            for k in keys:
+                self._resident.pop(k)
                 self._busy -= 1
                 self._depth += 1
         elif kind == "device_recover":
@@ -239,7 +261,8 @@ class Telemetry:
                "utilization": w.busy_int / max(alive, 1e-12),
                "availability": 1.0 - w.failed_int / max(n_dev * span, 1e-12),
                "preemption_rate": w.counts["preempt"] / span}
-        for name, h in (("ntt", w.ntt_hist), ("turnaround", w.tat_hist)):
+        for name, h in (("ntt", w.ntt_hist), ("turnaround", w.tat_hist),
+                        ("ttft", w.ttft_hist)):
             if h is not None:
                 row[f"{name}_mean"] = h.mean()
                 for p in metrics.PERCENTILES:

@@ -35,6 +35,12 @@ from typing import Dict, List, NamedTuple, Optional
 ADMISSION_TRACK = 9999
 
 
+def _slot_track(device: int, slot: int) -> int:
+    """Chrome thread id for a (device, batch-slot) sub-track; kept above
+    ADMISSION_TRACK so it can never collide with a device index."""
+    return (device + 1) * 10000 + slot
+
+
 class Span(NamedTuple):
     """One reconstructed interval of a task's life.
 
@@ -43,6 +49,8 @@ class Span(NamedTuple):
     ``reason`` says how the span ended: ``complete``, ``preempt:kill``,
     ``preempt:checkpoint``, ``crash``, ``dispatch`` (a queued span ending
     in service), ``drop``, ``open`` (still in flight at export time).
+    ``slot`` is the batch slot the run occupied under continuous
+    batching (-1 on the whole-device path).
     """
     tid: int
     device: int
@@ -52,6 +60,7 @@ class Span(NamedTuple):
     priority: int
     tenant: Optional[str]
     reason: str
+    slot: int = -1
 
 
 class SpanTracer:
@@ -68,7 +77,9 @@ class SpanTracer:
 
     def reset(self) -> None:
         self._spans: List[tuple] = []        # finished Span tuples
-        self._running: Dict[int, tuple] = {}  # device -> (tid, t0, prio, ten)
+        # run-slot key: the device index (whole-device path, slot == -1)
+        # or a (device, slot) pair (continuous batching)
+        self._running: Dict = {}             # key -> (tid, t0, prio, ten)
         self._waiting: Dict[int, float] = {}  # tid -> wait-start t
         self._task: Dict[int, tuple] = {}     # tid -> (tenant, prio, t_submit)
         self._last_device: Dict[int, int] = {}  # tid -> last dispatch device
@@ -106,7 +117,7 @@ class SpanTracer:
         # (gated by benchmarks/obs_overhead.py): tuple-unpack once,
         # inline the waiting-set/token bookkeeping, and append plain
         # tuples -- no per-event object construction
-        t, kind, tid, device, mechanism, tenant, priority = ev
+        t, kind, tid, device, mechanism, tenant, priority, slot = ev
         self.n_events += 1
         if t > self.last_t:
             self.last_t = t
@@ -121,14 +132,15 @@ class SpanTracer:
                 self.counter_samples.append((t, self._depth, acc))
                 self._spans.append((tid, self._last_device.get(tid, -1),
                                     t0, t, "queued", priority, tenant,
-                                    "dispatch"))
-            self._running[device] = (tid, t, priority, tenant)
+                                    "dispatch", -1))
+            key = device if slot < 0 else (device, slot)
+            self._running[key] = (tid, t, priority, tenant)
             self._last_device[tid] = device
             if tid in self._pending_flow:
                 pf = self._pending_flow.pop(tid)
                 self._flows.append((pf[0], pf[1], pf[2], pf[3], t, device))
         elif kind == "complete":
-            self._end_run(device, t, "complete")
+            self._end_run(device, t, "complete", slot)
             self._ended[tid] = t
         elif kind == "submit":
             if tid not in self._task:
@@ -143,7 +155,7 @@ class SpanTracer:
             self._prio_sum += priority
             self.counter_samples.append((t, self._depth, acc))
         elif kind == "preempt":
-            self._end_run(device, t, "preempt:" + str(mechanism))
+            self._end_run(device, t, "preempt:" + str(mechanism), slot)
             self._waiting[tid] = t
             self._wait_enter(t, priority)
             self._flow_from(tid, "migration", t, device)
@@ -152,7 +164,7 @@ class SpanTracer:
             if t0 is not None:
                 self._wait_leave(t, priority)
                 self._spans.append((tid, -1, t0, t, "queued",
-                                    priority, tenant, "drop"))
+                                    priority, tenant, "drop", -1))
             self._ended[tid] = t
             self._admission.append((t, "drop", tid))
             self._flow_from(tid, "retry", t, ADMISSION_TRACK)
@@ -163,11 +175,16 @@ class SpanTracer:
             self._pending_flow.pop(tid, None)
             self._admission.append((t, "abandon", tid))
         elif kind == "device_fail":
-            run = self._running.pop(device, None)
-            if run is not None:
-                rtid, rt0, rprio, rten = run
+            # a crash evicts every resident: the single whole-device key
+            # plus all of the device's batch slots
+            keys = [k for k in self._running
+                    if k == device or (isinstance(k, tuple)
+                                       and k[0] == device)]
+            for key in keys:
+                rtid, rt0, rprio, rten = self._running.pop(key)
+                rslot = key[1] if isinstance(key, tuple) else -1
                 self._spans.append((rtid, device, rt0, t, "run",
-                                    rprio, rten, "crash"))
+                                    rprio, rten, "crash", rslot))
                 self._waiting[rtid] = t
                 self._wait_enter(t, rprio)
                 self._flow_from(rtid, "crash", t, device)
@@ -191,12 +208,14 @@ class SpanTracer:
                 self._down_spans.append((device, d[0], t, d[1]))
 
     # -- small helpers --------------------------------------------------
-    def _end_run(self, device: int, t: float, reason: str) -> None:
-        run = self._running.pop(device, None)
+    def _end_run(self, device: int, t: float, reason: str,
+                 slot: int = -1) -> None:
+        run = self._running.pop(device if slot < 0 else (device, slot),
+                                None)
         if run is not None:
             tid, t0, prio, tenant = run
             self._spans.append((tid, device, t0, t, "run", prio, tenant,
-                                reason))
+                                reason, slot))
 
     def _flow_from(self, tid: int, cat: str, t: float, track: int) -> None:
         self._flow_seq += 1
@@ -234,9 +253,10 @@ class SpanTracer:
         """Finished spans plus still-open run/queued spans closed at
         ``last_t`` (reason ``open``), sorted by start time."""
         out = [Span(*s) for s in self._spans]
-        for dev, (tid, t0, prio, ten) in self._running.items():
+        for key, (tid, t0, prio, ten) in self._running.items():
+            dev, slot = key if isinstance(key, tuple) else (key, -1)
             out.append(Span(tid, dev, t0, self.last_t, "run", prio, ten,
-                            "open"))
+                            "open", slot))
         for tid, t0 in self._waiting.items():
             info = self._task.get(tid, (None, 0, t0))
             out.append(Span(tid, -1, t0, self.last_t, "queued",
@@ -278,8 +298,16 @@ class SpanTracer:
         meta(3, 0, "process_name", "telemetry")
         devices = sorted({s.device for s in spans if s.device >= 0}
                          | {d for d, *_ in self._down_spans})
+        # slot runs render on per-(device, slot) sub-tracks grouped under
+        # their device by sort_index (device at d*100, slots right after;
+        # the track-id scheme assumes < 100 slots per device)
+        slot_tracks = sorted({(s.device, s.slot) for s in spans
+                              if s.phase == "run" and s.slot >= 0})
         for d in devices:
-            meta(1, d, "thread_name", f"npu{d}", idx=d)
+            meta(1, d, "thread_name", f"npu{d}", idx=d * 100)
+        for d, sl in slot_tracks:
+            meta(1, _slot_track(d, sl), "thread_name",
+                 f"npu{d} slot{sl}", idx=d * 100 + sl + 1)
         meta(1, ADMISSION_TRACK, "thread_name", "admission",
              idx=ADMISSION_TRACK)
 
@@ -290,11 +318,13 @@ class SpanTracer:
 
         for s in spans:
             if s.phase == "run":
-                ev.append({"ph": "X", "pid": 1, "tid": s.device,
+                track = (s.device if s.slot < 0
+                         else _slot_track(s.device, s.slot))
+                ev.append({"ph": "X", "pid": 1, "tid": track,
                            "ts": s.t0 * us, "dur": (s.t1 - s.t0) * us,
                            "name": f"t{s.tid} p{s.priority}", "cat": "run",
                            "args": {"tid": s.tid, "tenant": s.tenant,
-                                    "end": s.reason}})
+                                    "slot": s.slot, "end": s.reason}})
             # task lifecycle on the tenant process: nested async spans
             ttid = tenant_tid[s.tenant or "-"]
             ev.append({"ph": "b", "pid": 2, "tid": ttid, "ts": s.t0 * us,

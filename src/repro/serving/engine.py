@@ -44,7 +44,7 @@ import numpy as np
 from repro.core import arch_ops, metrics, preemption
 from repro.core import events as events_mod
 from repro.core.arbiter import Action, Arbiter, ArbiterConfig
-from repro.core.cluster import Cluster
+from repro.core.cluster import Cluster, role_accepts
 from repro.core.predictor import (LengthRegressor, Predictor,
                                   network_time)
 from repro.core.preemption import Mechanism
@@ -112,7 +112,11 @@ class ServingEngine:
                  placement: str = "least_loaded",
                  admission=None,
                  device_hw: Optional[List[HardwareModel]] = None,
-                 provision_latency: float = 0.0):
+                 provision_latency: float = 0.0,
+                 batch_slots: int = 1,
+                 chunked_prefill: bool = True,
+                 device_roles: Optional[List[str]] = None,
+                 batch_overhead: float = 0.15):
         """``models``: name → (Model, params).  ``policy`` is a name or a
         :class:`Policy` instance; ``preemptive`` overrides the policy's
         flag when given (string policies default to preemptive).
@@ -126,7 +130,25 @@ class ServingEngine:
         ``add_device`` joins.  ``admission`` is an optional
         :class:`repro.workloads.admission.AdmissionPolicy`: rejected
         requests are DROPPED at ingest (a ``drop`` event fires, no tensors
-        run) and appear in per-tenant accounting as ``n_rejected``."""
+        run) and appear in per-tenant accounting as ``n_rejected``.
+
+        ``batch_slots > 1`` or ``device_roles`` switches the engine to
+        the continuous-batching loop (:meth:`_run_batched`): each device
+        holds up to ``batch_slots`` co-resident requests and advances all
+        of them one step per iteration, Orca/vLLM-style.
+        ``device_roles`` splits the cluster into disaggregated
+        prefill/decode pools (one entry per device, ``"prefill"`` /
+        ``"decode"`` / ``"any"``); a sequence finishing prefill on a
+        prefill-pool device hands its KV over the interconnect to the
+        decode pool.  ``chunked_prefill=False`` runs each prompt as one
+        monolithic step (the whole remaining prefill blocks the
+        iteration); ``True`` (default) advances prefill one period per
+        iteration so long prompts never stall co-resident decodes.
+        ``batch_overhead`` is the per-extra-resident iteration-time
+        inflation (batching is not free: an iteration with ``B``
+        residents costs ``(1 + batch_overhead*(B-1)) * max(step_i)``).
+        The default single-slot configuration is bit-identical to the
+        non-batched loop (tests/test_fastpath_parity.py)."""
         self.hw = hw
         if isinstance(policy, Policy):
             self.policy = policy
@@ -141,8 +163,21 @@ class ServingEngine:
         self.placement = placement
         self.device_hw = list(device_hw) if device_hw else None
         self.provision_latency = float(provision_latency)
+        self.batch_slots = int(batch_slots)
+        self.chunked_prefill = bool(chunked_prefill)
+        self.batch_overhead = float(batch_overhead)
+        self.device_roles = list(device_roles) if device_roles else None
+        self.batched = self.batch_slots > 1 or self.device_roles is not None
+        if self.batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
+        if self.device_roles is not None and not any(
+                role_accepts(r, "prefill") for r in self.device_roles):
+            raise ValueError("device_roles has no prefill-capable device "
+                             "(every request starts with a prefill phase)")
         self.cluster = Cluster(int(n_devices), placement, base_hw=hw,
-                               device_hw=self.device_hw)
+                               device_hw=self.device_hw,
+                               device_roles=self.device_roles,
+                               batch_slots=self.batch_slots)
         self.n_devices = self.cluster.n_devices
         self.execute = execute
         self.straggler_factor = straggler_factor
@@ -181,10 +216,12 @@ class ServingEngine:
                                "during run() — call from an event-bus hook")
         return self._elastic
 
-    def add_device(self, hw: Optional[HardwareModel] = None) -> int:
+    def add_device(self, hw: Optional[HardwareModel] = None,
+                   role: str = "any") -> int:
         """Scale up: join a device (schedulable after
-        ``provision_latency``); returns its index."""
-        return self._elastic_hooks()[0](hw)
+        ``provision_latency``); returns its index.  ``role`` assigns it
+        to a prefill/decode pool on the batched path."""
+        return self._elastic_hooks()[0](hw, role)
 
     def drain_device(self, dev: int) -> None:
         """Stop placing on ``dev``; residents are checkpoint-migrated
@@ -277,6 +314,8 @@ class ServingEngine:
         if hasattr(requests, "records"):     # workloads.Trace (duck-typed)
             from repro.workloads.serving_adapter import to_requests
             requests = to_requests(requests, self._models)
+        if self.batched:
+            return self._run_batched(requests)
         jobs = {r.rid: self._make_job(r) for r in requests}
         arrivals = [(r.arrival, r.rid) for r in requests]
         heapq.heapify(arrivals)
@@ -334,9 +373,10 @@ class ServingEngine:
                 self.cluster.remove_device(dev, at)
                 bus.device_down(at, dev)
 
-        def add_dev(hw_: Optional[HardwareModel]) -> int:
+        def add_dev(hw_: Optional[HardwareModel], role: str = "any") -> int:
             d = self.cluster.add_device(
-                clock, hw=hw_, provision_latency=self.provision_latency)
+                clock, hw=hw_, provision_latency=self.provision_latency,
+                role=role)
             dev_clock.append(d.alive_since)
             running.append(None)
             while len(self.kvs) < len(devices):
@@ -460,6 +500,8 @@ class ServingEngine:
             toks = (np.stack(j.state.tokens_out, axis=1)
                     if self.execute and j.state and j.state.tokens_out
                     else np.zeros((j.req.batch, 0), np.int32))
+            n_dec = (0 if self._models[j.req.arch][0].cfg.encoder_only
+                     else t.total_nodes - j.executor.n_periods + 1)
             j.result = RequestResult(
                 rid=j.req.rid, arch=j.req.arch, tokens=toks,
                 arrival=j.req.arrival,
@@ -469,7 +511,7 @@ class ServingEngine:
                 n_preemptions=t.n_preemptions, n_kills=t.n_kills,
                 ckpt_overhead=t.checkpoint_overhead, priority=j.req.priority,
                 sla_target=j.req.sla_scale * t.isolated_time,
-                tenant=j.req.tenant)
+                tenant=j.req.tenant, n_decoded=n_dec)
             self.completed.append(j.result)
             record(j)
             settled_rids.add(j.req.rid)
@@ -654,6 +696,486 @@ class ServingEngine:
         return self.completed
 
     # ------------------------------------------------------------------
+    def _run_batched(self, requests: List[InferenceRequest]
+                     ) -> List[RequestResult]:
+        """Continuous-batching execution loop (``batch_slots > 1`` or
+        pool roles configured).
+
+        Orca/vLLM-style iteration-level scheduling: every device holds a
+        vector of batch slots; one *iteration* advances every resident by
+        one step (one prefill period or one decoded token), costing
+        ``(1 + batch_overhead*(B-1)) * max(step_i) / speed`` wall time.
+        New requests join at iteration boundaries (the arbiter STARTs
+        them into a free slot, or PREEMPTs the policy's
+        :meth:`~repro.core.arbiter.Arbiter.slot_victim` when full).  With
+        ``chunked_prefill`` a long prompt advances one period per
+        iteration and never stalls co-resident decodes; without it the
+        whole remaining prefill runs as one monolithic step.  Under
+        disaggregated pools a sequence finishing prefill on a
+        ``"prefill"``-role device is checkpointed out (KV handed over the
+        interconnect, charged at restore as a migration) and re-queued
+        for the decode pool.
+        """
+        jobs = {r.rid: self._make_job(r) for r in requests}
+        arrivals = [(r.arrival, r.rid) for r in requests]
+        heapq.heapify(arrivals)
+        bus, admission = self.arbiter.events, self.admission
+        self.arbiter.reset()
+        bus.clear()
+        if admission is not None:
+            admission.reset()
+        self.cluster = Cluster(self.n_devices, self.placement,
+                               base_hw=self.hw, device_hw=self.device_hw,
+                               device_roles=self.device_roles,
+                               batch_slots=self.batch_slots)
+        self._run_tasks: List[Task] = []
+        devices = self.cluster.devices
+        dev_clock = [0.0] * len(devices)
+        # engine-side slot table, mirrored into DeviceState.residents so
+        # cluster helpers (free_for, n_resident, drain ranking) agree
+        slots: List[List[Optional[_Job]]] = [[] for _ in devices]
+        del self.kvs[len(devices):]
+        while len(self.kvs) < len(devices):
+            self.kvs.append(KVCacheManager(self._kv_capacity))
+        ready = _ReadyJobs()
+        clock = 0.0
+        settled_rids: set = set()
+        recorded: set = set()
+
+        # analytic KV accounting (both modes): prompt KV at admission,
+        # one token's cache slice per resident per decode iteration
+        dmodel = {name: m.cfg.d_model for name, (m, _) in self._models.items()}
+        enc_only = {name: m.cfg.encoder_only
+                    for name, (m, _) in self._models.items()}
+
+        def tok_bytes(j: _Job) -> int:
+            return j.req.batch * dmodel[j.req.arch] * 2
+
+        def ctx_bytes(j: _Job) -> int:
+            npf = j.executor.n_periods
+            dec_done = max(0, j.task.current_node() - npf)
+            return (j.req.batch * j.req.prompt_len * dmodel[j.req.arch] * 2
+                    + dec_done * tok_bytes(j))
+
+        def sync_phase(j: _Job) -> None:
+            j.task.phase = ("prefill"
+                            if j.task.current_node() < j.executor.n_periods
+                            else "decode")
+
+        def record(j: _Job) -> None:
+            if j.req.rid not in recorded:
+                recorded.add(j.req.rid)
+                self.tasks.append(j.task)
+
+        def inject(req: InferenceRequest, at: float):
+            req.arrival = float(at)
+            j = jobs.get(req.rid)
+            if j is not None and j.req is req:
+                j.task.arrival = req.arrival
+                j.task.n_retries = int(req.n_retries)
+                if req.first_offer is not None:
+                    j.task.first_offer = float(req.first_offer)
+                settled_rids.discard(req.rid)
+            else:
+                if j is not None:
+                    recorded.discard(req.rid)
+                    settled_rids.discard(req.rid)
+                jobs[req.rid] = self._make_job(req)
+            heapq.heappush(arrivals, (req.arrival, req.rid))
+        self._inject = inject
+
+        def settle_drain(dev: int, at: float):
+            nonlocal clock
+            d = devices[dev]
+            if d.remove_pending and d.alive and d.n_resident == 0:
+                clock = max(clock, at)
+                self.cluster.remove_device(dev, at)
+                bus.device_down(at, dev)
+
+        def add_dev(hw_: Optional[HardwareModel], role: str = "any") -> int:
+            d = self.cluster.add_device(
+                clock, hw=hw_, provision_latency=self.provision_latency,
+                role=role)
+            dev_clock.append(d.alive_since)
+            slots.append([])
+            while len(self.kvs) < len(devices):
+                self.kvs.append(KVCacheManager(self._kv_capacity))
+            bus.device_up(clock, d.dev)
+            return d.dev
+
+        def drain_dev(dev: int, remove: bool) -> None:
+            d = devices[dev]
+            if not d.alive or (d.draining and not remove):
+                return
+            if not d.draining:
+                d.draining = True
+                bus.device_drain(clock, dev)
+            d.remove_pending = d.remove_pending or remove
+            settle_drain(dev, clock)
+
+        def ingest(now):
+            while arrivals and arrivals[0][0] <= now + 1e-15:
+                at, rid = heapq.heappop(arrivals)
+                j = jobs[rid]
+                if at + 1e-15 < j.req.arrival or rid in settled_rids:
+                    continue
+                if not events_mod.offer(bus, admission, j.task, at,
+                                        len(ready)):
+                    if jobs[rid].req.arrival > at + 1e-15:
+                        continue
+                    j.task.state = TaskState.DROPPED
+                    j.task.abandoned = bool(j.req.abandoned)
+                    record(j)
+                    settled_rids.add(rid)
+                    continue
+                j.task.state = TaskState.WAITING
+                j.task.last_wake = j.req.arrival
+                sync_phase(j)
+                ready.append(j)
+
+        def dev_hw(d: int) -> HardwareModel:
+            return devices[d].hw if devices[d].hw is not None else self.hw
+
+        def free_slot_index(di: int) -> Optional[int]:
+            dv = devices[di]
+            for i, r in enumerate(slots[di]):
+                if r is None:
+                    return i
+            if len(slots[di]) < dv.batch_slots:
+                return len(slots[di])
+            return None
+
+        def end_slot(di: int, si: int) -> None:
+            slots[di][si] = None
+            devices[di].residents[si] = None
+
+        def begin_slot(di: int, si: int, j: _Job):
+            nonlocal clock
+            t = j.task
+            now = dev_clock[di]
+            clock = max(clock, now)
+            dv = devices[di]
+            if t.restore_pending:
+                lat = preemption.restore_latency(t, dev_hw(di))
+                if t.device is not None and t.device != di:
+                    # KV lives on another chip: pay the interconnect
+                    # transfer (pool hand-off or migration) and move
+                    # residency
+                    lat += preemption.migration_latency(t, dev_hw(di))
+                    self.cluster.n_migrations += 1
+                    self.kvs[t.device].release(j.req.rid)
+                    lat += self.kvs[di].register(j.req.rid, ctx_bytes(j), now)
+                else:
+                    lat += self.kvs[di].touch(j.req.rid, now)
+                t.checkpoint_overhead += lat
+                t.restore_pending = False
+                # simplification: the restore serializes the device's
+                # iteration (every co-resident waits out the transfer)
+                dev_clock[di] += lat
+                if self.execute and j.state is not None:
+                    j.state = PreemptibleExecutor.restore(j.state)
+            else:
+                dev_clock[di] += self.kvs[di].register(
+                    j.req.rid, ctx_bytes(j), now)
+            if j.state is None and self.execute:
+                j.state = j.executor.start(self._batch_dict(j.req))
+            t.state = TaskState.RUNNING
+            t.device = di
+            while len(slots[di]) <= si:
+                slots[di].append(None)
+            slots[di][si] = j
+            while len(dv.residents) <= si:
+                dv.residents.append(None)
+            dv.residents[si] = t
+            dv.last_model = t.model
+            if t.first_service is None:
+                t.first_service = dev_clock[di]
+            bus.dispatch(now, t, di, slot=si)
+
+        def do_checkpoint(di: int, j: _Job):
+            t = j.task
+            lat = preemption.checkpoint_latency(t, dev_hw(di))
+            if self.execute and j.state is not None:
+                j.state = PreemptibleExecutor.checkpoint(j.state)
+            lat += self.kvs[di].resize(j.req.rid, ctx_bytes(j), dev_clock[di])
+            t.checkpoint_overhead += lat
+            t.ckpt_executed = t.executed
+            t.restore_pending = True
+            t.n_preemptions += 1
+            t.state = TaskState.PREEMPTED
+            dev_clock[di] += lat
+
+        def do_kill(di: int, j: _Job):
+            j.state = None
+            self.kvs[di].release(j.req.rid)
+            j.task.lost_work += j.task.executed
+            j.task.reset_progress()
+            j.task.n_kills += 1
+            j.task.state = TaskState.WAITING
+            sync_phase(j)
+
+        def evict_slot(di: int, si: int, j: _Job, now: float) -> None:
+            """Checkpoint a resident out of its slot and re-queue it."""
+            bus.preempt(now, j.task, di, Mechanism.CHECKPOINT.value, slot=si)
+            do_checkpoint(di, j)
+            end_slot(di, si)
+            ready.append(j)
+            j.task.last_wake = dev_clock[di]
+
+        def complete_slot(di: int, si: int, j: _Job):
+            nonlocal clock
+            t = j.task
+            clock = t_done = dev_clock[di]
+            t.executed = t.isolated_time
+            t.completion = t_done
+            t.state = TaskState.DONE
+            self.kvs[di].release(j.req.rid)
+            toks = (np.stack(j.state.tokens_out, axis=1)
+                    if self.execute and j.state and j.state.tokens_out
+                    else np.zeros((j.req.batch, 0), np.int32))
+            # decoded-token count: decode nodes + the first token emitted
+            # at prefill completion (0 for encoder-only architectures)
+            n_dec = (0 if enc_only[j.req.arch]
+                     else t.total_nodes - j.executor.n_periods + 1)
+            j.result = RequestResult(
+                rid=j.req.rid, arch=j.req.arch, tokens=toks,
+                arrival=j.req.arrival,
+                first_token_time=(j.first_token_time
+                                  if j.first_token_time is not None else t_done),
+                completion=t_done, isolated_time=t.isolated_time,
+                n_preemptions=t.n_preemptions, n_kills=t.n_kills,
+                ckpt_overhead=t.checkpoint_overhead, priority=j.req.priority,
+                sla_target=j.req.sla_scale * t.isolated_time,
+                tenant=j.req.tenant, n_decoded=n_dec)
+            self.completed.append(j.result)
+            record(j)
+            settled_rids.add(j.req.rid)
+            self._run_tasks.append(t)
+            end_slot(di, si)
+            bus.complete(t_done, t, di, slot=si)
+
+        def try_fill(now: float) -> bool:
+            """One placement pass: admit the policy's top candidate into
+            a free slot anywhere in the cluster (role-compatible)."""
+            if not ready:
+                return False
+            free = [dv for dv in devices
+                    if dv.schedulable(now)
+                    and dev_clock[dv.dev] <= now + 1e-15
+                    and free_slot_index(dv.dev) is not None]
+            if not free:
+                return False
+            ts = [t for t in ready.tasks
+                  if any(role_accepts(dv.role, t.phase) for dv in free)]
+            if not ts:
+                return False
+            self.arbiter.wake(ready.tasks, now)
+            sel = self.arbiter.pick(ts, now, None)
+            if sel is None:
+                return False
+            j = ready.job_for(sel)
+            hosts = [dv for dv in free if role_accepts(dv.role, sel.phase)]
+            target = (self.cluster.choose(sel, hosts, now)
+                      if len(hosts) > 1 else hosts[0])
+            ready.remove(j)
+            si = free_slot_index(target.dev)
+            dev_clock[target.dev] = max(dev_clock[target.dev], now)
+            begin_slot(target.dev, si, j)
+            return True
+
+        def try_preempt(di: int, now: float) -> None:
+            """All slots taken: let the arbiter displace the slot_victim."""
+            dv = devices[di]
+            res = [t for t in dv.residents if t is not None]
+            ts = [t for t in ready.tasks if role_accepts(dv.role, t.phase)]
+            if not ts or not res:
+                return
+            dec = self.arbiter.decide_batch(ts, now, res, 0)
+            if dec.action is not Action.PREEMPT:
+                return
+            victim_t = self.arbiter.slot_victim(res)
+            si = dv.residents.index(victim_t)
+            vj = slots[di][si]
+            bus.preempt(now, victim_t, di, dec.mechanism.value, slot=si)
+            if dec.mechanism is Mechanism.KILL:
+                do_kill(di, vj)
+            else:
+                do_checkpoint(di, vj)
+            end_slot(di, si)
+            ready.append(vj)
+            victim_t.last_wake = dev_clock[di]
+            cj = ready.job_for(dec.cand)
+            ready.remove(cj)
+            begin_slot(di, si, cj)
+
+        def step_done(j: _Job) -> bool:
+            t = j.task
+            if self.execute:
+                st = j.state
+                if st.phase == "done":
+                    return True
+                if st.phase == "decode":
+                    if (len(st.tokens_out) >= j.req.max_new_tokens
+                            or t.remaining <= 1e-15):
+                        return True
+                    if (j.req.eos_id is not None and
+                            bool(np.all(st.tokens_out[-1] == j.req.eos_id))):
+                        return True
+                return False
+            return t.remaining <= 1e-15
+
+        def run_iteration(di: int) -> None:
+            """Advance every resident of ``di`` by one step, batched."""
+            dv = devices[di]
+            active = [(si, j) for si, j in enumerate(slots[di])
+                      if j is not None]
+            plan = []   # (slot, job, start_node, ref dt, n nodes covered)
+            for si, j in active:
+                t = j.task
+                node = t.current_node()
+                npf = j.executor.n_periods
+                if node < npf and not self.chunked_prefill:
+                    # monolithic prefill: the whole remaining prompt as
+                    # one blocking step (what chunked prefill avoids)
+                    dts = [float(t.node_times[k]) for k in range(node, npf)]
+                else:
+                    dts = [float(t.node_times[min(node, t.total_nodes - 1)])]
+                if self.straggler_factor is not None:
+                    dts = [dt * float(self.straggler_factor(j.req.rid,
+                                                            node + k))
+                           for k, dt in enumerate(dts)]
+                plan.append((si, j, node, sum(dts), len(dts)))
+            B = len(plan)
+            iter_ref = (max(p[3] for p in plan)
+                        * (1.0 + self.batch_overhead * (B - 1)))
+            wall = iter_ref / dv.speed
+            t_end = dev_clock[di] + wall
+            kv_lat = 0.0
+            for si, j, node, dt, nsteps in plan:
+                t = j.task
+                npf = j.executor.n_periods
+                if self.execute:
+                    for _ in range(nsteps):
+                        j.state = j.executor.step(j.state)
+                    if (j.first_token_time is None
+                            and j.state.phase in ("decode", "done")):
+                        j.first_token_time = t_end
+                elif (j.first_token_time is None
+                        and node + nsteps >= npf):
+                    j.first_token_time = t_end
+                t.executed = min(t.isolated_time, t.executed + dt)
+                if node >= npf:       # decode: KV grows one token slice
+                    kv_lat += self.kvs[di].grow(j.req.rid, tok_bytes(j),
+                                                t_end)
+                sync_phase(j)
+            dev_clock[di] = t_end + kv_lat
+            dv.busy_time += wall
+            for si, j, node, dt, nsteps in plan:
+                if step_done(j):
+                    complete_slot(di, si, j)
+                elif dv.role == "prefill" and j.task.phase == "decode":
+                    # pool hand-off: prefill done, the decode pool takes
+                    # over (KV crosses the interconnect at restore; not a
+                    # scheduler preemption, so n_preemptions stays put)
+                    t = j.task
+                    bus.preempt(dev_clock[di], t, di,
+                                Mechanism.CHECKPOINT.value, slot=si)
+                    t.ckpt_executed = t.executed
+                    t.restore_pending = True
+                    t.state = TaskState.PREEMPTED
+                    end_slot(di, si)
+                    ready.append(j)
+                    t.last_wake = dev_clock[di]
+            settle_drain(di, dev_clock[di])
+
+        def fail_dev(dev: int) -> None:
+            d = devices[dev]
+            if not d.alive or d.failed:
+                return
+            for si, j in [(si, j) for si, j in enumerate(slots[dev])
+                          if j is not None]:
+                t = j.task
+                t.lost_work += max(0.0, t.executed - t.ckpt_executed)
+                t.n_crashes += 1
+                self.kvs[dev].release(j.req.rid)
+                if not self.execute and t.ckpt_executed > 0.0:
+                    t.executed = t.ckpt_executed
+                    t.restore_pending = True
+                    t.state = TaskState.PREEMPTED
+                else:
+                    j.state = None
+                    t.reset_progress()
+                    t.state = TaskState.WAITING
+                sync_phase(j)
+                end_slot(dev, si)
+                ready.append(j)
+                t.last_wake = clock
+            d.failed = True
+            d.failed_at = clock
+            self.cluster.n_failures += 1
+            bus.device_fail(clock, dev)
+
+        def recover_dev(dev: int) -> None:
+            d = devices[dev]
+            if not d.alive or not d.failed:
+                return
+            if d.failed_at is not None:
+                d.downtime += max(0.0, clock - d.failed_at)
+            d.failed = False
+            d.failed_at = None
+            dev_clock[dev] = max(dev_clock[dev], clock)
+            bus.device_recover(clock, dev)
+        self._elastic = (add_dev, drain_dev, fail_dev, recover_dev)
+
+        def selectable(i: int) -> bool:
+            d = devices[i]
+            return (d.alive and not d.failed
+                    and (d.n_resident > 0 or not d.draining))
+
+        try:
+            while len(settled_rids) < len(jobs):
+                cands = [i for i in range(len(devices)) if selectable(i)]
+                assert cands, "engine has no schedulable devices left"
+                d = min(cands,
+                        key=lambda i: (dev_clock[i],
+                                       0 if devices[i].n_resident else 1, i))
+                now = clock = dev_clock[d]
+                ingest(now)
+                if devices[d].draining and devices[d].n_resident:
+                    # iteration boundary on a draining device: every
+                    # resident checkpoints out and resumes elsewhere
+                    for si, j in [(si, j) for si, j in enumerate(slots[d])
+                                  if j is not None]:
+                        evict_slot(d, si, j, now)
+                    settle_drain(d, dev_clock[d])
+                    continue
+                while try_fill(now):
+                    pass
+                if (ready and self.policy.preemptive
+                        and free_slot_index(d) is None):
+                    try_preempt(d, now)
+                if devices[d].n_resident == 0:
+                    if arrivals:
+                        dev_clock[d] = max(now, arrivals[0][0])
+                    else:
+                        busy = [dev_clock[i] for i in cands
+                                if devices[i].n_resident]
+                        if busy:
+                            dev_clock[d] = max(now, min(busy))
+                        else:
+                            assert ready, \
+                                "engine stalled with work outstanding"
+                            # policy abstained (or no role-compatible
+                            # host): advance one quantum, anti-livelock
+                            dev_clock[d] = now + SCHED_QUANTUM
+                    continue
+                run_iteration(d)
+        finally:
+            self._inject = None
+            self._elastic = None
+        return self.completed
+
+    # ------------------------------------------------------------------
     def per_tenant(self) -> Dict[str, Dict[str, float]]:
         """SLA-class breakdown of every completed request (ANTT/STP, tail
         percentiles, SLA satisfaction per tenant)."""
@@ -661,9 +1183,12 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
+        """Run-level metrics: scheduler aggregates (``metrics.summarize``),
+        serving throughput/latency (``metrics.serving_summary`` — tokens/s,
+        TTFT/TPOT percentiles), KV-cache stats, and cluster health."""
         out = metrics.summarize(self.tasks)
         out["sla_met_rate"] = float(np.mean([r.sla_met for r in self.completed]))
-        out["mean_ttft"] = float(np.mean([r.ttft for r in self.completed]))
+        out.update(metrics.serving_summary(self.completed))
         kv_stats: Dict[str, float] = {}
         for kv in self.kvs:
             for k, v in kv.stats.items():

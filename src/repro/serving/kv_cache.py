@@ -39,6 +39,12 @@ class KVCacheManager:
     def device_bytes(self) -> int:
         return sum(e.nbytes for e in self._entries.values() if not e.on_host)
 
+    @property
+    def n_resident(self) -> int:
+        """Registered contexts currently HBM-resident (not offloaded) —
+        the batched engine's per-device co-residency count."""
+        return sum(1 for e in self._entries.values() if not e.on_host)
+
     def register(self, rid: int, nbytes: int, now: float = 0.0) -> float:
         """Allocate a context; returns extra latency paid for evictions."""
         self._entries[rid] = _Entry(nbytes=int(nbytes), last_touch=now)
@@ -53,6 +59,20 @@ class KVCacheManager:
         self._entries[rid].nbytes = int(nbytes)
         self._entries[rid].last_touch = now
         return self._make_room(now)
+
+    def grow(self, rid: int, delta_bytes: int, now: float = 0.0) -> float:
+        """Extend a context in place — the per-iteration KV append of
+        batched decode (one token's cache slice per resident per step).
+        Returns eviction latency, like :meth:`resize`."""
+        e = self._entries.get(rid)
+        if e is None:
+            return self.register(rid, delta_bytes, now)
+        e.nbytes += int(delta_bytes)
+        e.last_touch = now
+        lat = self._make_room(now)
+        self.stats["peak_device_bytes"] = max(self.stats["peak_device_bytes"],
+                                              self.device_bytes)
+        return lat
 
     def release(self, rid: int):
         self._entries.pop(rid, None)

@@ -53,6 +53,9 @@ class RequestResult:
     priority: int
     sla_target: float
     tenant: Optional[str] = None
+    # decoded-token count for virtual-mode runs where ``tokens`` is empty
+    # (the batched engine fills it; TPOT falls back to ``tokens`` width)
+    n_decoded: Optional[int] = None
 
     @property
     def turnaround(self) -> float:
@@ -64,7 +67,27 @@ class RequestResult:
 
     @property
     def ttft(self) -> float:
+        """Time to first token: first decoded token's instant − arrival
+        (prefill queueing + prefill compute)."""
         return self.first_token_time - self.arrival
+
+    @property
+    def n_tokens(self) -> int:
+        """Generated token count (per sequence): ``n_decoded`` when the
+        engine recorded it (virtual mode), else the width of ``tokens``."""
+        if self.n_decoded is not None:
+            return int(self.n_decoded)
+        return int(self.tokens.shape[1])
+
+    @property
+    def tpot(self) -> float:
+        """Time per output token over the decode phase — the serving
+        SLO companion to :attr:`ttft` (prefill).  NaN when the request
+        decoded fewer than two tokens."""
+        n = self.n_tokens
+        if n < 2:
+            return float("nan")
+        return (self.completion - self.first_token_time) / (n - 1)
 
     @property
     def sla_met(self) -> bool:

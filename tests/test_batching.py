@@ -1,0 +1,341 @@
+"""Continuous batching: slot-aware arbiter decisions, pool roles and
+role-aware placement, batched-engine determinism, slot-carrying events,
+prefill->decode KV hand-off, and the executed-trace diff/replay tooling
+on batched runs (docs/architecture.md "Batched request flow")."""
+import numpy as np
+import pytest
+
+from repro.core.arbiter import Action, Arbiter
+from repro.core.cluster import (POOL_ROLES, Cluster, DeviceState,
+                                place_speed_aware, role_accepts)
+from repro.core.scheduler import make_policy
+from repro.core.task import Task
+from repro.hw import PAPER_NPU
+
+
+def mk_task(tid, priority, arrival, total, n=16, predicted=None,
+            phase=None):
+    t = Task(tid=tid, model=f"m{tid}", priority=priority, arrival=arrival,
+             batch=1, node_times=np.full(n, total / n),
+             node_out_bytes=np.full(n, 1 << 20, dtype=np.int64),
+             predicted_total=predicted if predicted is not None else total)
+    if phase is not None:
+        t.phase = phase
+    return t
+
+
+# ---------------------------------------------------------------------------
+# arbiter: slot_victim / decide_batch
+# ---------------------------------------------------------------------------
+
+def test_slot_victim_empty_residents():
+    arb = Arbiter(make_policy("prema", True))
+    assert arb.slot_victim([]) is None
+
+
+def test_slot_victim_hpf_evicts_lowest_priority():
+    arb = Arbiter(make_policy("hpf", True))
+    residents = [mk_task(0, 9, 0.0, 1e-3), mk_task(1, 1, 1e-3, 1e-3),
+                 mk_task(2, 3, 2e-3, 1e-3)]
+    assert arb.slot_victim(residents).tid == 1
+
+
+@pytest.mark.parametrize("policy", ("sjf", "token", "prema"))
+def test_slot_victim_predictor_evicts_longest_remaining(policy):
+    arb = Arbiter(make_policy(policy, True))
+    residents = [mk_task(0, 3, 0.0, 1e-3), mk_task(1, 3, 0.0, 8e-3),
+                 mk_task(2, 3, 0.0, 2e-3)]
+    assert arb.slot_victim(residents).tid == 1
+
+
+def test_slot_victim_arrival_ordered_evicts_youngest():
+    arb = Arbiter(make_policy("fcfs", True))
+    residents = [mk_task(0, 3, 5e-3, 1e-3), mk_task(1, 3, 9e-3, 1e-3),
+                 mk_task(2, 3, 1e-3, 1e-3)]
+    assert arb.slot_victim(residents).tid == 1
+
+
+def test_slot_victim_tie_breaks_on_tid():
+    arb = Arbiter(make_policy("hpf", True))
+    residents = [mk_task(0, 1, 0.0, 1e-3), mk_task(1, 1, 0.0, 1e-3)]
+    # identical (priority, arrival): min on (-tid) picks the larger tid
+    assert arb.slot_victim(residents).tid == 1
+
+
+def test_decide_batch_free_slot_starts_without_preempting():
+    arb = Arbiter(make_policy("prema", True))
+    cand = mk_task(5, 9, 0.0, 1e-3)
+    resident = mk_task(0, 1, 0.0, 8e-3)
+    d = arb.decide_batch([cand], 0.0, residents=[resident], free_slots=1)
+    assert d.action is Action.START
+    assert d.cand.tid == 5
+
+
+def test_decide_batch_full_device_preempts_the_slot_victim():
+    arb = Arbiter(make_policy("hpf", True))
+    cand = mk_task(5, 9, 1e-3, 1e-3)
+    residents = [mk_task(0, 3, 0.0, 8e-3), mk_task(1, 1, 0.0, 8e-3)]
+    d = arb.decide_batch([cand], 1e-3, residents=residents, free_slots=0)
+    assert d.action is Action.PREEMPT
+    assert arb.slot_victim(residents).tid == 1
+
+
+def test_decide_batch_keeps_when_victim_outranks_candidate():
+    arb = Arbiter(make_policy("hpf", True))
+    cand = mk_task(5, 1, 1e-3, 1e-3)
+    residents = [mk_task(0, 9, 0.0, 8e-3), mk_task(1, 3, 0.0, 8e-3)]
+    d = arb.decide_batch([cand], 1e-3, residents=residents, free_slots=0)
+    assert d.action is Action.KEEP
+
+
+def test_decide_batch_non_preemptive_policy_keeps():
+    arb = Arbiter(make_policy("hpf", False))
+    cand = mk_task(5, 9, 1e-3, 1e-3)
+    residents = [mk_task(0, 1, 0.0, 8e-3)]
+    d = arb.decide_batch([cand], 1e-3, residents=residents, free_slots=0)
+    assert d.action is Action.KEEP
+
+
+def test_decide_batch_busy_window_defers_start():
+    arb = Arbiter(make_policy("prema", True))
+    cand = mk_task(5, 9, 0.0, 1e-3)
+    d = arb.decide_batch([cand], 0.0, residents=[], free_slots=2,
+                         busy_until=1e-3)
+    assert d.action is Action.BUSY
+
+
+def test_decide_batch_idle_on_empty_ready():
+    arb = Arbiter(make_policy("prema", True))
+    d = arb.decide_batch([], 0.0, residents=[], free_slots=2)
+    assert d.action is Action.IDLE
+
+
+# ---------------------------------------------------------------------------
+# cluster: pool roles, slot vectors, role-aware placement
+# ---------------------------------------------------------------------------
+
+def test_role_accepts_matrix():
+    assert role_accepts("any", "prefill")
+    assert role_accepts("any", "decode")
+    assert role_accepts("any", None)
+    assert role_accepts("prefill", "prefill")
+    assert not role_accepts("prefill", "decode")
+    assert not role_accepts("decode", "prefill")
+    # classic (phase-less) tasks are hosted anywhere
+    assert role_accepts("prefill", None)
+    assert role_accepts("decode", None)
+
+
+def test_cluster_rejects_unknown_role():
+    with pytest.raises(ValueError, match="role"):
+        Cluster(2, device_roles=("prefill", "bogus"))
+
+
+def test_cluster_device_roles_and_slots():
+    c = Cluster(3, device_roles=("any", "prefill", "decode"), batch_slots=4)
+    assert [d.role for d in c.devices] == ["any", "prefill", "decode"]
+    for d in c.devices:
+        assert d.batch_slots == 4
+        # residents vector grows lazily up to batch_slots
+        assert d.n_resident == 0
+        assert d.free_slot() == 0
+        d.residents[0] = mk_task(0, 3, 0.0, 1e-3)
+        assert d.n_resident == 1
+        assert d.free_slot() == 1
+        assert len(d.residents) <= d.batch_slots
+
+
+def test_free_for_filters_by_phase():
+    c = Cluster(3, device_roles=("any", "prefill", "decode"))
+    ids = lambda ds: sorted(d.dev for d in ds)
+    assert ids(c.free_for(0.0, "prefill")) == [0, 1]
+    assert ids(c.free_for(0.0, "decode")) == [0, 2]
+    assert ids(c.free_for(0.0, None)) == [0, 1, 2]
+
+
+def test_add_device_with_role():
+    c = Cluster(1)
+    d = c.add_device(0.0, role="decode")
+    assert d.role == "decode"
+    assert c.devices[-1] is d
+    with pytest.raises(ValueError, match="role"):
+        c.add_device(0.0, role="nope")
+
+
+def test_place_speed_aware_prefers_matching_pool():
+    c = Cluster(3, device_roles=("any", "prefill", "decode"))
+    free = list(c.devices)
+    t = mk_task(0, 3, 0.0, 1e-3, phase="decode")
+    d = place_speed_aware(t, free, None, 0.0)
+    assert d.role == "decode"
+    t2 = mk_task(1, 3, 0.0, 1e-3, phase="prefill")
+    assert place_speed_aware(t2, free, None, 0.0).role == "prefill"
+    # no phase: role is not consulted, any free device qualifies
+    t3 = mk_task(2, 3, 0.0, 1e-3)
+    assert place_speed_aware(t3, free, None, 0.0) in free
+
+
+def test_pool_roles_tuple_is_the_contract():
+    assert POOL_ROLES == ("any", "prefill", "decode")
+    assert DeviceState(dev=0, hw=PAPER_NPU).role == "any"
+
+
+# ---------------------------------------------------------------------------
+# batched serving engine (virtual mode)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_models():
+    jax = pytest.importorskip("jax")
+    from repro.models import get_model
+    m = get_model("olmo-1b", tiny=True)
+    return {"olmo-1b": (m, m.init_params(jax.random.PRNGKey(0)))}
+
+
+def make_requests(seed, n, rate=2000.0):
+    from repro.serving.request import InferenceRequest
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        interactive = rng.random() < 0.5
+        plen = int(rng.integers(4, 16)) if interactive else \
+            int(rng.integers(32, 96))
+        dec = int(rng.integers(2, 6)) if interactive else \
+            int(rng.integers(8, 24))
+        reqs.append(InferenceRequest(
+            rid=i, arch="olmo-1b",
+            prompt=rng.integers(1, 200, (1, plen)).astype(np.int32),
+            max_new_tokens=dec, true_decode_len=dec,
+            priority=9 if interactive else 1, arrival=t,
+            tenant="chat" if interactive else "batch"))
+    return reqs
+
+
+def make_engine(models, **kw):
+    from repro.serving import ServingEngine
+    base = dict(policy="prema", mechanism="dynamic", execute=False,
+                n_devices=2)
+    base.update(kw)
+    return ServingEngine(models, **base)
+
+
+def _fingerprint(results):
+    return sorted((r.rid, r.completion, r.first_token_time, r.n_tokens,
+                   r.n_preemptions, r.n_kills) for r in results)
+
+
+def test_batched_engine_deterministic(tiny_models):
+    logs, fps = [], []
+    for _ in range(2):
+        eng = make_engine(tiny_models, batch_slots=4)
+        res = eng.run(make_requests(3, 24))
+        logs.append(list(eng.events.log))
+        fps.append(_fingerprint(res))
+    assert logs[0] == logs[1]
+    assert fps[0] == fps[1]
+
+
+def test_batched_dispatch_events_carry_slots(tiny_models):
+    eng = make_engine(tiny_models, batch_slots=4)
+    eng.run(make_requests(4, 24, rate=50000.0))
+    slotted = [e for e in eng.events.log
+               if e.kind in ("dispatch", "complete")]
+    assert slotted
+    assert all(e.slot >= 0 for e in slotted)
+    assert any(e.slot > 0 for e in slotted)  # co-residency actually used
+    # classic single-slot path: no slot annotation
+    eng1 = make_engine(tiny_models)
+    eng1.run(make_requests(4, 12))
+    assert all(e.slot == -1 for e in eng1.events.log)
+
+
+def test_batched_completions_account_all_requests(tiny_models):
+    reqs = make_requests(5, 24)
+    eng = make_engine(tiny_models, batch_slots=4)
+    res = eng.run(reqs)
+    assert sorted(r.rid for r in res) == sorted(r.rid for r in reqs)
+    for r in res:
+        assert r.completion >= r.first_token_time >= r.arrival
+        assert r.n_tokens >= 1
+
+
+def test_pool_handoff_migrates_kv(tiny_models):
+    eng = make_engine(tiny_models, n_devices=2, batch_slots=4,
+                      device_roles=("prefill", "decode"),
+                      placement="speed_aware")
+    res = eng.run(make_requests(6, 24))
+    # every decoded sequence crossed the prefill->decode boundary
+    assert eng.cluster.n_migrations > 0
+    by_rid = {r.rid: r for r in res}
+    decoded = [r for r in by_rid.values() if r.n_tokens >= 2]
+    assert decoded
+    for r in decoded:
+        assert r.completion > r.first_token_time
+    # hand-off is a migration, not a scheduling preemption
+    summ = eng.summary()
+    assert summ["migrations"] > 0
+
+
+def test_single_slot_roundtrips_through_classic_loop(tiny_models):
+    eng = make_engine(tiny_models)
+    assert not eng.batched
+    eng_b = make_engine(tiny_models, batch_slots=4)
+    assert eng_b.batched
+    eng_r = make_engine(tiny_models, device_roles=("prefill", "decode"))
+    assert eng_r.batched
+
+
+def test_engine_rejects_bad_batching_config(tiny_models):
+    with pytest.raises(ValueError):
+        make_engine(tiny_models, batch_slots=0)
+    with pytest.raises(ValueError):
+        # decode-only cluster can never prefill
+        make_engine(tiny_models, device_roles=("decode", "decode"))
+
+
+# ---------------------------------------------------------------------------
+# executed-trace diff + replay_diff CLI on batched runs
+# ---------------------------------------------------------------------------
+
+def _serving_trace(seed=9, n=10):
+    from repro.workloads import Poisson, TenantSpec, TrafficMix, generate
+    mix = TrafficMix(tenants=(
+        TenantSpec(name="chat", models=("olmo-1b",), batch=1,
+                   prompt_len_range=(4, 10), decode_len_range=(2, 5),
+                   max_new_tokens=6, sla_scale=6.0),),
+        arrivals=Poisson(rate=5000.0), kind="serving")
+    return generate(mix, np.random.default_rng(seed), n)
+
+
+def test_executed_trace_diff_on_batched_run(tiny_models):
+    from repro.workloads import ExecutedTrace
+    tr = _serving_trace()
+    eng = make_engine(tiny_models, batch_slots=4)
+    eng.run(tr)
+    ex = ExecutedTrace.capture(eng)
+    assert any(e.kind == "dispatch" and e.slot >= 0 for e in ex.events)
+    d = ex.diff(tr)
+    assert d["n_offered"] == len(tr.records)
+    assert d["n_completed"] == d["n_offered"]
+    assert d["n_dropped"] == 0
+    assert not d["never_ran"]
+    assert not d["not_offered"]
+
+
+def test_replay_diff_cli_exit_codes_on_batched_runs(tiny_models, tmp_path):
+    from repro.obs import replay_diff
+    from repro.workloads import ExecutedTrace
+
+    def run_and_save(path, slots):
+        eng = make_engine(tiny_models, batch_slots=slots)
+        eng.run(_serving_trace())
+        ExecutedTrace.capture(eng).save(str(path))
+
+    a, b, c = (tmp_path / n for n in ("a.jsonl", "b.jsonl", "c.jsonl"))
+    run_and_save(a, 4)
+    run_and_save(b, 4)
+    run_and_save(c, 1)   # classic loop: slot=-1 events -> diverges
+    assert replay_diff.main([str(a), str(b)]) == 0
+    assert replay_diff.main([str(a), str(c)]) == 1
+    assert replay_diff.main([str(a), str(tmp_path / "missing.jsonl")]) == 2

@@ -151,6 +151,49 @@ def test_parity_with_non_firing_fault_injector(faults):
     assert_identical(results)
 
 
+def test_engine_single_slot_config_bit_identical_to_default():
+    """Continuous-batching parity guard: a ServingEngine constructed with
+    the batching knobs at their single-slot defaults (``batch_slots=1``,
+    no pool roles) must route through the classic one-request-per-device
+    loop and produce the same event log and results, bit for bit, as an
+    engine that never heard of batching."""
+    jax = pytest.importorskip("jax")
+    from repro.models import get_model
+    from repro.serving import ServingEngine
+    from repro.serving.request import InferenceRequest
+
+    m = get_model("olmo-1b", tiny=True)
+    models = {"olmo-1b": (m, m.init_params(jax.random.PRNGKey(0)))}
+    rng = np.random.default_rng(17)
+    reqs, t = [], 0.0
+    for i in range(16):
+        t += float(rng.exponential(2e-4))
+        reqs.append(InferenceRequest(
+            rid=i, arch="olmo-1b",
+            prompt=rng.integers(1, 200, (1, int(rng.integers(4, 32)))
+                                ).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, 10)),
+            true_decode_len=int(rng.integers(2, 10)),
+            priority=int(rng.choice([1, 3, 9])), arrival=t))
+
+    def run(**batching_kw):
+        eng = ServingEngine(models, policy="prema", mechanism="dynamic",
+                            execute=False, n_devices=2, **batching_kw)
+        res = eng.run(reqs)
+        fp = sorted((r.rid, r.completion, r.first_token_time, r.n_tokens,
+                     r.n_preemptions, r.n_kills, r.ckpt_overhead)
+                    for r in res)
+        return fp, list(eng.events.log), eng.batched
+
+    base_fp, base_log, base_batched = run()
+    exp_fp, exp_log, exp_batched = run(batch_slots=1, chunked_prefill=True,
+                                       device_roles=None,
+                                       batch_overhead=0.15)
+    assert not base_batched and not exp_batched
+    assert exp_log == base_log
+    assert exp_fp == base_fp
+
+
 def test_ready_queue_selection_matches_list_seeded():
     for policy in ("fcfs", "hpf", "sjf", "token", "prema"):
         pol = make_policy(policy, True)

@@ -1,0 +1,86 @@
+"""Relative-link checker for the repo's markdown docs.
+
+Walks the markdown files (and/or directories of them) given on the
+command line, extracts every inline link and image
+(``[text](target)``), and verifies that each *relative* target resolves
+to an existing file or directory relative to the file that links it.
+Anchors (``#section``), absolute URLs (``http(s)://``, ``mailto:``),
+and bare in-page fragments are skipped — this is a filesystem check,
+not a web crawler.
+
+Exit status: 0 when every relative link resolves, 1 otherwise (each
+broken link is printed as ``file:line: target``).  Wired into
+``make docs-check`` and the CI docs job, so a doc rename that orphans a
+link fails the build.
+
+Usage::
+
+    python tools/check_links.py README.md docs
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+from typing import Iterator, List, Tuple
+
+# Inline markdown links/images: [text](target) / ![alt](target).
+# Reference-style definitions ([name]: target) are rare here; the inline
+# pattern covers everything the repo's docs actually use.
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://", "#")
+
+
+def iter_markdown(paths: List[str]) -> Iterator[str]:
+    """Expand files/directories into the markdown files they contain."""
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, files in os.walk(p):
+                for fn in sorted(files):
+                    if fn.endswith((".md", ".markdown")):
+                        yield os.path.join(root, fn)
+        else:
+            yield p
+
+
+def check_file(path: str) -> List[Tuple[str, int, str]]:
+    """Broken relative links in one file as (file, line, target) rows."""
+    broken = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as fp:
+        for lineno, line in enumerate(fp, 1):
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                # strip an in-page anchor from a file target
+                target = target.split("#", 1)[0]
+                if not target:
+                    continue
+                if not os.path.exists(os.path.join(base, target)):
+                    broken.append((path, lineno, m.group(1)))
+    return broken
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns the process exit code."""
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("paths", nargs="+",
+                    help="markdown files or directories to walk")
+    args = ap.parse_args(argv)
+    files = list(iter_markdown(args.paths))
+    if not files:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 1
+    broken = [b for f in files for b in check_file(f)]
+    for path, lineno, target in broken:
+        print(f"{path}:{lineno}: broken relative link -> {target}")
+    print(f"check_links: {len(files)} files, "
+          f"{len(broken)} broken relative links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
