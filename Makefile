@@ -25,7 +25,7 @@ FORMAT_PATHS = src/repro/core/events.py src/repro/core/autoscaler.py \
 # asserts).  Adding a sweep here wires it into bench-smoke,
 # bench-regression, and bench-baseline at once.
 SMOKE_NAMES = cluster_scaling load_sweep overload_sweep autoscale_sweep \
-    chaos_sweep batching_sweep simperf obs_overhead
+    chaos_sweep batching_sweep predictor_sweep simperf obs_overhead
 
 .PHONY: help test test-fast lint fmt docs-check bench-smoke \
     bench-regression bench-baseline bench bench-full bench-simperf \
@@ -49,9 +49,10 @@ lint:  ## ruff check (repo-wide, incl. core docstrings) + format check
 fmt:  ## ruff-format the FORMAT_PATHS file set in place
 	ruff format $(FORMAT_PATHS)
 
-docs-check:  ## docstring lint + broken relative links in docs/ + README
+docs-check:  ## docstrings + doc links + public-API surface snapshot
 	ruff check src/repro/core
 	$(PYTHON) tools/check_links.py README.md docs
+	$(PYTHON) tools/check_api.py
 
 # All smoke sweeps at CI size; $(1) is the output directory.
 define run_smoke_sweeps
@@ -68,6 +69,8 @@ define run_smoke_sweeps
 	    --out $(1)/chaos_sweep.json
 	$(PYTHON) benchmarks/batching_sweep.py --smoke \
 	    --out $(1)/batching_sweep.json
+	$(PYTHON) benchmarks/predictor_sweep.py --smoke \
+	    --out $(1)/predictor_sweep.json
 	$(PYTHON) benchmarks/simperf.py --smoke \
 	    --out $(1)/simperf.json
 	$(PYTHON) benchmarks/obs_overhead.py --smoke \
@@ -116,6 +119,7 @@ bench-full:  ## the full (non-smoke) sweep suite with JSON out (nightly CI)
 	$(PYTHON) benchmarks/autoscale_sweep.py --out $(BENCH_OUT)/autoscale_sweep.json
 	$(PYTHON) benchmarks/chaos_sweep.py --out $(BENCH_OUT)/chaos_sweep.json
 	$(PYTHON) benchmarks/batching_sweep.py --out $(BENCH_OUT)/batching_sweep.json
+	$(PYTHON) benchmarks/predictor_sweep.py --out $(BENCH_OUT)/predictor_sweep.json
 	$(PYTHON) benchmarks/simperf.py --out $(BENCH_OUT)/simperf_full.json
 	$(PYTHON) benchmarks/obs_overhead.py --out $(BENCH_OUT)/obs_overhead_full.json \
 	    --trace-out $(BENCH_OUT)/obs_trace_full.json

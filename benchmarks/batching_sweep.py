@@ -112,11 +112,11 @@ def make_requests(rng: np.random.Generator, n: int, rate: float):
 
 
 def make_engine(cfg: Dict):
-    from repro.serving.engine import ServingEngine
+    from repro.serving.engine import EngineConfig, ServingEngine
     kw = dict(execute=False, n_devices=N_DEVICES, policy="prema",
               mechanism="dynamic")
     kw.update(cfg)
-    return ServingEngine(models(), **kw)
+    return ServingEngine(models(), cfg=EngineConfig(**kw))
 
 
 def _probe_rate(n_probe: int = 64) -> float:

@@ -29,6 +29,13 @@ claim*:
   its wall overhead stays <= ``OBS_OVERHEAD_MAX`` (a same-machine ratio;
   against a baseline only the machine-independent event/span counts are
   compared);
+* ``predictor_sweep``: with *exact* predictions every predictive
+  controller beats its prediction-free baseline — cost-metered admission
+  admits more goodput than request counting, the lookahead autoscaler
+  holds SLA >= the reactive scaler at <= its device-seconds, EASY
+  backfill raises batch throughput over conservative reservation without
+  lowering the interactive SLA — and every controller reports the
+  injected-error level at which it stops paying for itself;
 * ``simperf``: the fast/legacy parity cell is bit-exact, and against a
   baseline the machine-independent fast-over-legacy speedup ratio may
   not regress by more than 35 % (sub-second smoke cells are timer-noisy;
@@ -263,6 +270,54 @@ def check_batching_sweep(payload: Dict) -> None:
            "batching[disagg]: no prefill->decode KV hand-offs happened")
 
 
+def check_predictor_sweep(payload: Dict) -> None:
+    """The prediction-pays-for-itself gate: at zero injected error each
+    predictive controller must beat its prediction-free baseline on its
+    headline metric (the autoscaler must *dominate* — SLA and
+    device-seconds), and each controller's break row must exist so the
+    sweep demonstrably probed where prediction error stops helping."""
+    points = payload.get("extra", {}).get("points", [])
+    _check(bool(points), "predictor_sweep: structured points missing")
+
+    def one(**match) -> Dict:
+        pts = _points(payload, **match)
+        _check(bool(pts), f"predictor_sweep: missing point {match}")
+        return pts[0]
+
+    adm = one(controller="admission", variant="predicted_cost", error=0.0)
+    adm_base = one(controller="admission", variant="token_bucket")
+    _check(adm["goodput"] >= adm_base["goodput"],
+           f"predictor[admission]: cost-metered goodput {adm['goodput']:.2f}"
+           f" lost to request counting {adm_base['goodput']:.2f} at e=0")
+
+    look = one(controller="autoscale", variant="lookahead", error=0.0)
+    react = one(controller="autoscale", variant="reactive")
+    _check(look["sla_satisfaction"] >= react["sla_satisfaction"],
+           f"predictor[autoscale]: lookahead SLA "
+           f"{look['sla_satisfaction']:.3f} < reactive "
+           f"{react['sla_satisfaction']:.3f} at e=0")
+    _check(look["device_seconds"] <= react["device_seconds"],
+           f"predictor[autoscale]: lookahead spent "
+           f"{look['device_seconds']:.2f} device-seconds > reactive "
+           f"{react['device_seconds']:.2f} at e=0")
+
+    bf = one(controller="backfill", variant="backfill", error=0.0)
+    reserve = one(controller="backfill", variant="reserve")
+    _check(bf["tput_batch"] > reserve["tput_batch"],
+           f"predictor[backfill]: EASY batch throughput "
+           f"{bf['tput_batch']:.3f} did not beat reservation "
+           f"{reserve['tput_batch']:.3f} at e=0")
+    _check(bf["sla_hi"] >= reserve["sla_hi"],
+           f"predictor[backfill]: EASY interactive SLA {bf['sla_hi']:.3f}"
+           f" < reservation {reserve['sla_hi']:.3f} at e=0")
+
+    for controller in ("admission", "autoscale", "backfill"):
+        br = one(controller=controller, variant="break")
+        _check(br["knee"] > 0.0,
+               f"predictor[{controller}]: broken at zero error "
+               f"(knee={br['knee']:g})")
+
+
 def check_simperf(payload: Dict) -> None:
     parity = [r for r in payload["rows"] if ".parity." in r["name"]]
     _check(bool(parity), "simperf: fast-vs-legacy parity row missing")
@@ -376,6 +431,7 @@ CHECKS = {
     "autoscale_sweep": check_autoscale_sweep,
     "chaos_sweep": check_chaos_sweep,
     "batching_sweep": check_batching_sweep,
+    "predictor_sweep": check_predictor_sweep,
     "simperf": check_simperf,
     "obs_overhead": check_obs_overhead,
 }

@@ -1,0 +1,379 @@
+"""Predictor sweep: how much prediction error each predictive controller
+tolerates before it stops paying for itself.
+
+Three controllers consume ``Task.predicted_total`` (installed through the
+``RuntimePredictor`` API, ``repro/core/predictor.py``); this sweep injects
+controlled multiplicative error with ``NoisyPredictor`` (lognormal,
+mean-unbiased, per-task deterministic) and measures each controller
+against its prediction-free baseline at identical offered load:
+
+* ``admission``   ``PredictedCostBucket`` (meters admitted *predicted
+  work*) vs a request-count ``TokenBucket`` at the same sustained budget,
+  under 2x overload.  Cost-aware admission packs more small requests into
+  the same work budget — until mispredictions let oversized work through.
+* ``autoscale``   the lookahead autoscaler (extrapolates predicted
+  arriving work ``lookahead`` seconds ahead) vs the reactive queue-depth
+  scaler on a diurnal ramp with non-zero provision latency.  Forecasts
+  average many tasks, so unbiased noise mostly washes out — the
+  interesting output is the zero-error gate: SLA >= reactive at <= its
+  device-seconds.
+* ``backfill``    the EASY ``Backfill`` policy (runs batch work that fits
+  the predicted gap before the next interactive arrival) vs conservative
+  reservation (``conservative=True``) and gap-blind HPF (``greedy``), on
+  a single device with a batch backlog pierced by strictly periodic
+  interactive arrivals.  Underestimates start batch work that overruns
+  the reservation (interactive SLA drops); overestimates hold the device
+  idle (batch throughput drops).
+
+Per error level the sweep emits one row per controller variant; the
+``predictor.break.*`` rows report the first error level at which the
+controller loses to its baseline (``knee=2.0`` = never, within the swept
+grid).  ``benchmarks/check_smoke.py`` gates the zero-error columns: exact
+predictions must beat every baseline (and the autoscaler must dominate
+reactive on *both* SLA and device-seconds).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/predictor_sweep.py            # full
+    PYTHONPATH=src python benchmarks/predictor_sweep.py --smoke    # CI
+    PYTHONPATH=src python benchmarks/predictor_sweep.py --out a.json
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.overload_sweep import HI_TENANT, mean_isolated_time, tenant_mix
+from repro.core import metrics
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.predictor import (AnalyticalRuntime, NoisyPredictor,
+                                  apply_runtime_predictor)
+from repro.core.scheduler import Backfill, make_policy
+from repro.core.task import Task, TaskState
+from repro.configs import paper_workloads as pw
+from repro.hw import PAPER_NPU
+from repro.workloads import (Diurnal, Poisson, TenantSpec, TrafficMix,
+                             generate)
+from repro.workloads.admission import PredictedCostBucket, TokenBucket
+
+ERRORS = (0.0, 0.15, 0.3, 0.6, 1.0)
+SMOKE_ERRORS = (0.0, 0.6)
+CONTROLLERS = ("admission", "autoscale", "backfill")
+BREAK_NONE = 2.0            # sentinel: no break inside the swept grid
+ADMIT_BUDGET = 0.75         # sustained admitted load, device capacities
+MAX_DEVICES = 4
+AVG_LOAD = 1.8              # mean offered load: peak 1.85x ~ fleet limit
+PROVISION_LAT = 2.0         # device provision latency, mean isolated times
+LOOKAHEAD = 3.0             # lookahead horizon, mean isolated times
+TARGET_UTIL = 1.0           # lookahead sizing: forecast work / target util
+SLA_SCALE = 1.5             # interactive SLA tightness (autoscale cell)
+
+
+def noisy(tasks: Sequence[Task], error: float, seed: int) -> List[Task]:
+    """Install the error-injected predictor (exact pass-through at 0)."""
+    rp = NoisyPredictor(AnalyticalRuntime(), error=error, seed=seed)
+    return apply_runtime_predictor(tasks, rp)
+
+
+# ---------------------------------------------------------------------------
+# admission cell: predicted-work vs request-count metering under overload
+# ---------------------------------------------------------------------------
+
+
+def run_admission(variant: str, error: float, n_runs: int,
+                  n_tasks: int) -> Dict[str, float]:
+    iso = mean_isolated_time()
+    runs = []
+    for r in range(n_runs):
+        rng = common.rng(9700 + 173 * r)
+        tr = generate(tenant_mix(Poisson(rate=2.0 / iso)), rng, n_tasks,
+                      pred=common.predictor())
+        tasks = noisy(tr.tasks(), error, seed=37 + r)
+        if variant == "predicted_cost":
+            adm = PredictedCostBucket(rate=ADMIT_BUDGET, burst=4.0 * iso)
+        else:
+            adm = TokenBucket(rate=ADMIT_BUDGET / iso, burst=4.0)
+        sim = ClusterSimulator(
+            PAPER_NPU, make_policy("prema", preemptive=True),
+            ClusterConfig(n_devices=1, mechanism="dynamic", admission=adm))
+        done = sim.run(tasks)
+        m = sim.summary()
+        hi = metrics.per_tenant_summary(done).get(HI_TENANT, {})
+        shed = sum(t.state == TaskState.DROPPED for t in done) / len(done)
+        runs.append({
+            "goodput": m["goodput"],
+            "sla_satisfaction": m["sla_satisfaction"],
+            "sla_hi": float(hi.get("sla_satisfaction", float("nan"))),
+            "shed_frac": shed,
+            "p99_ntt": m["p99_ntt"],
+        })
+    return metrics.aggregate(runs)
+
+
+# ---------------------------------------------------------------------------
+# autoscale cell: lookahead vs reactive on the diurnal ramp
+# ---------------------------------------------------------------------------
+
+
+def tight_mix(arrivals) -> TrafficMix:
+    """Three tenants with *tight* SLAs (interactive at ``SLA_SCALE`` x
+    isolated time).  The overload cell's lenient mix would make minimal
+    capacity SLA-optimal — here attainment genuinely depends on how fast
+    the fleet tracks the diurnal ramp, which is what the lookahead gate
+    measures."""
+    models = tuple(pw.WORKLOAD_NAMES)
+    s = SLA_SCALE
+    return TrafficMix(tenants=(
+        TenantSpec(name=HI_TENANT, models=models, share=0.25, priority=9,
+                   sla_scale=s),
+        TenantSpec(name="standard", models=models, share=0.375, priority=3,
+                   sla_scale=2 * s),
+        TenantSpec(name="batch", models=models, share=0.375, priority=1,
+                   sla_scale=8 * s),
+    ), arrivals=arrivals, kind="paper")
+
+
+def run_autoscale(variant: str, error: float, n_runs: int,
+                  n_tasks: int) -> Dict[str, float]:
+    iso = mean_isolated_time()
+    rate, period = AVG_LOAD / iso, 64.0 * iso
+    runs = []
+    for r in range(n_runs):
+        rng = common.rng(9800 + 193 * r)
+        tr = generate(
+            tight_mix(Diurnal(base_rate=rate, amplitude=0.85, period=period,
+                              phase=0.75)),
+            rng, n_tasks, pred=common.predictor())
+        tasks = noisy(tr.tasks(), error, seed=53 + r)
+        sim = ClusterSimulator(
+            PAPER_NPU, make_policy("prema", preemptive=True),
+            ClusterConfig(n_devices=1, mechanism="dynamic",
+                          provision_latency=PROVISION_LAT * iso))
+        cfg = dict(min_devices=1, max_devices=MAX_DEVICES,
+                   target_queue_per_device=1.0, low_watermark=0.1,
+                   window=10.0 * iso, cooldown=2.5 * iso)
+        if variant == "lookahead":
+            cfg.update(lookahead=LOOKAHEAD * iso, target_util=TARGET_UTIL)
+        scaler = Autoscaler(AutoscalerConfig(**cfg)).attach(sim, tasks=tasks)
+        done = sim.run(tasks)
+        m = sim.summary()
+        hi = metrics.per_tenant_summary(done).get(HI_TENANT, {})
+        runs.append({
+            "sla_hi": float(hi.get("sla_satisfaction", float("nan"))),
+            "sla_satisfaction": m["sla_satisfaction"],
+            "device_seconds": m["capacity_seconds"],
+            "p99_ntt": m["p99_ntt"],
+            "n_scale_ups": m["n_scale_ups"],
+            "n_scale_downs": m["n_scale_downs"],
+        })
+        scaler.detach()
+    return metrics.aggregate(runs)
+
+
+# ---------------------------------------------------------------------------
+# backfill cell: EASY vs reservation vs gap-blind, one device
+# ---------------------------------------------------------------------------
+
+N_BATCH = 24
+N_INTERACTIVE = 12
+
+
+def backfill_workload(iso: float, seed: int) -> Tuple[List[Task], float]:
+    """Batch backlog at t=0 plus strictly periodic interactive arrivals
+    (period ``G``); returns (tasks, G).  Batch sizes straddle the gap so
+    fitting is a real decision, not a foregone conclusion."""
+    rng = common.rng(seed)
+    gap = 4.0 * iso
+    tasks = []
+
+    def mk(tid, total, priority, arrival, tenant, sla_scale):
+        n = 6
+        return Task(tid=tid, model=f"m{tid % 4}", priority=priority,
+                    arrival=arrival, batch=1,
+                    node_times=np.full(n, total / n),
+                    node_out_bytes=np.full(n, 1 << 17, dtype=np.int64),
+                    predicted_total=total, tenant=tenant,
+                    sla_scale=sla_scale)
+
+    for i in range(N_BATCH):
+        total = float(rng.uniform(1.5, 6.0)) * iso
+        tasks.append(mk(i, total, 1, 0.0, "batch", 200.0))
+    for k in range(N_INTERACTIVE):
+        tasks.append(mk(N_BATCH + k, 0.5 * iso, 9, (k + 1) * gap,
+                        HI_TENANT, 3.0))
+    return tasks, gap
+
+
+def exact_gap_fn(gap: float, last_arrival: float):
+    """Time until the next scheduled interactive arrival (the reservation
+    oracle — exact by construction in this synthetic cell)."""
+
+    def fn(now: float) -> float:
+        if now >= last_arrival:
+            return math.inf
+        k = math.floor(now / gap) + 1
+        return k * gap - now
+
+    return fn
+
+
+def run_backfill(variant: str, error: float, n_runs: int,
+                 _n_tasks: int) -> Dict[str, float]:
+    iso = mean_isolated_time()
+    runs = []
+    for r in range(n_runs):
+        tasks, gap = backfill_workload(iso, seed=9900 + 149 * r)
+        tasks = noisy(tasks, error, seed=71 + r)
+        if variant == "greedy":
+            pol = make_policy("hpf", preemptive=False)
+        else:
+            pol = Backfill(preemptive=False,
+                           conservative=(variant == "reserve"))
+            pol.gap_fn = exact_gap_fn(gap, N_INTERACTIVE * gap)
+        sim = ClusterSimulator(
+            PAPER_NPU, pol, ClusterConfig(n_devices=1, mechanism="dynamic"))
+        done = sim.run(tasks)
+        m = sim.summary()
+        makespan = max(t.completion for t in done)
+        batch_work = sum(t.isolated_time for t in done if t.tenant == "batch")
+        hi = [t for t in done if t.tenant == HI_TENANT]
+        runs.append({
+            "tput_batch": batch_work / makespan,
+            "sla_hi": float(np.mean([t.sla_met() for t in hi])),
+            "makespan": makespan,
+            "p99_ntt": m["p99_ntt"],
+        })
+    return metrics.aggregate(runs)
+
+
+# ---------------------------------------------------------------------------
+# sweep driver
+# ---------------------------------------------------------------------------
+
+# per controller: (runner, error-consuming variant, baseline variants)
+CELLS = {
+    "admission": (run_admission, "predicted_cost", ("token_bucket",)),
+    "autoscale": (run_autoscale, "lookahead", ("reactive",)),
+    "backfill": (run_backfill, "backfill", ("reserve", "greedy")),
+}
+
+
+def healthy(controller: str, m: Dict[str, float],
+            base: Dict[str, Dict[str, float]]) -> bool:
+    """Does the predictive controller still beat its baseline here?"""
+    if controller == "admission":
+        return m["goodput"] >= base["token_bucket"]["goodput"]
+    if controller == "autoscale":
+        rm = base["reactive"]
+        return (m["sla_satisfaction"] >= rm["sla_satisfaction"]
+                and m["device_seconds"] <= rm["device_seconds"])
+    rm = base["reserve"]
+    return (m["tput_batch"] > rm["tput_batch"]
+            and m["sla_hi"] >= rm["sla_hi"])
+
+
+def derived_str(m: Dict[str, float]) -> str:
+    keys = ("goodput", "sla_hi", "sla_satisfaction", "shed_frac",
+            "device_seconds", "tput_batch", "p99_ntt")
+    short = {"sla_satisfaction": "sla", "device_seconds": "devsec",
+             "shed_frac": "shed", "p99_ntt": "p99_ntt"}
+    parts = [f"{short.get(k, k)}={m[k]:.4f}" for k in keys if k in m]
+    return ";".join(parts)
+
+
+def sweep(errors: Sequence[float], n_runs: int, n_tasks: int
+          ) -> Tuple[List[Tuple[str, float, str]], List[Dict]]:
+    rows: List[Tuple[str, float, str]] = []
+    points: List[Dict] = []
+    for controller in CONTROLLERS:
+        runner, pred_variant, base_variants = CELLS[controller]
+        base: Dict[str, Dict[str, float]] = {}
+        for variant in base_variants:
+            t0 = time.perf_counter()
+            m = runner(variant, 0.0, n_runs, n_tasks)
+            us = (time.perf_counter() - t0) / n_runs * 1e6
+            base[variant] = m
+            rows.append((f"predictor.{controller}.baseline.{variant}", us,
+                         derived_str(m)))
+            points.append(dict(controller=controller, variant=variant,
+                               error=0.0, **m))
+        break_error = BREAK_NONE
+        for error in errors:
+            t0 = time.perf_counter()
+            m = runner(pred_variant, error, n_runs, n_tasks)
+            us = (time.perf_counter() - t0) / n_runs * 1e6
+            tag = f"predictor.{controller}.e{error:g}.{pred_variant}"
+            rows.append((tag, us, derived_str(m)))
+            points.append(dict(controller=controller, variant=pred_variant,
+                               error=error, **m))
+            if break_error == BREAK_NONE and not healthy(controller, m, base):
+                break_error = error
+        rows.append((f"predictor.break.{controller}", 0.0,
+                     f"knee={break_error:g}"))
+        points.append(dict(controller=controller, variant="break",
+                           error=break_error, knee=break_error))
+    return rows, points
+
+
+def run(smoke: bool = False, collect: Optional[Dict] = None
+        ) -> List[Tuple[str, float, str]]:
+    """Entry point for benchmarks/run.py (full) and --smoke (CI)."""
+    if smoke:
+        rows, points = sweep(SMOKE_ERRORS, n_runs=1, n_tasks=160)
+    else:
+        rows, points = sweep(ERRORS, n_runs=3, n_tasks=256)
+    if collect is not None:
+        collect["points"] = points
+    return rows
+
+
+def showcase_cell(n_tasks: int = 160):
+    """EASY backfill threading batch work between interactive arrivals,
+    for ``--trace-out``."""
+    iso = mean_isolated_time()
+    tasks, gap = backfill_workload(iso, seed=9900)
+    pol = Backfill(preemptive=False)
+    pol.gap_fn = exact_gap_fn(gap, N_INTERACTIVE * gap)
+    sim = ClusterSimulator(PAPER_NPU, pol,
+                           ClusterConfig(n_devices=1, mechanism="dynamic"))
+    return sim, tasks
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (2 error levels, 1 run)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="re-base every benchmark RNG stream")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also write machine-readable JSON results")
+    ap.add_argument("--profile", action="store_true",
+                    help="run under cProfile; stats land next to --out")
+    common.add_obs_args(ap)
+    args = ap.parse_args()
+    common.set_seed(args.seed)
+    print("name,us_per_call,derived")
+    extra: Dict = {}
+    with common.maybe_profile(args.profile, args.out, "predictor_sweep"):
+        rows = run(smoke=args.smoke, collect=extra)
+    common.emit(rows)
+    if args.out:
+        common.write_json(args.out, "predictor_sweep", rows, extra=extra)
+    common.record_showcase(args, showcase_cell,
+                           window=8.0 * mean_isolated_time())
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,7 @@ from repro.core.predictor import Predictor
 from repro.core.scheduler import make_policy
 from repro.hw import PAPER_NPU
 from repro.models import get_model
-from repro.serving import InferenceRequest, ServingEngine
+from repro.serving import EngineConfig, InferenceRequest, ServingEngine
 
 
 def simulate_cluster():
@@ -47,8 +47,9 @@ def serve_on_two_devices():
         m = get_model(name, tiny=True)
         models[name] = (m, m.init_params(key))
 
-    engine = ServingEngine(models, policy="prema", mechanism="dynamic",
-                           n_devices=2, placement="affinity")
+    engine = ServingEngine(models, cfg=EngineConfig(
+        policy="prema", mechanism="dynamic", n_devices=2,
+        placement="affinity"))
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(8):

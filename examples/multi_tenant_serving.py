@@ -16,7 +16,7 @@ import jax
 import numpy as np
 
 from repro.models import get_model
-from repro.serving import InferenceRequest, ServingEngine
+from repro.serving import EngineConfig, InferenceRequest, ServingEngine
 
 ARCHS = ("olmo-1b", "qwen3-moe-30b-a3b", "xlstm-350m",
          "llama-3.2-vision-11b")
@@ -51,8 +51,8 @@ def make_trace(models, rng, n=16):
 
 
 def run(models, reqs, policy, preemptive, mech):
-    eng = ServingEngine(models, policy=policy, preemptive=preemptive,
-                        mechanism=mech)
+    eng = ServingEngine(models, cfg=EngineConfig(
+        policy=policy, preemptive=preemptive, mechanism=mech))
     for arch in ARCHS:
         eng.fit_length_regressor(arch, [(6, 3), (8, 4), (10, 5), (13, 6)])
     eng.run([copy.deepcopy(r) for r in reqs])

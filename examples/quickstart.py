@@ -9,7 +9,7 @@ import jax
 import numpy as np
 
 from repro.models import get_model
-from repro.serving import InferenceRequest, ServingEngine
+from repro.serving import EngineConfig, InferenceRequest, ServingEngine
 
 
 def main():
@@ -19,7 +19,8 @@ def main():
         m = get_model(name, tiny=True)
         models[name] = (m, m.init_params(key))
 
-    engine = ServingEngine(models, policy="prema", mechanism="dynamic")
+    engine = ServingEngine(models,
+                           cfg=EngineConfig(policy="prema", mechanism="dynamic"))
     # teach the decode-length LUT (the paper's Fig-9 regression) a profile
     engine.fit_length_regressor("olmo-1b", [(8, 4), (8, 6), (16, 8)])
     engine.fit_length_regressor("qwen3-8b", [(8, 5), (16, 10)])

@@ -10,9 +10,14 @@ from repro.core.cluster import (PLACEMENT_NAMES, Cluster,  # noqa: F401
 from repro.core.metrics import (antt, cluster_summary, fairness,  # noqa: F401
                                 goodput, per_device_summary,
                                 per_tenant_summary, percentile_summary,
+                                prediction_error_summary, prediction_errors,
                                 sla_satisfaction, stp, summarize)
-from repro.core.predictor import LengthRegressor, Predictor  # noqa: F401
+from repro.core.predictor import (AnalyticalRuntime,  # noqa: F401
+                                  FittedPredictor, LengthRegressor,
+                                  NoisyPredictor, Predictor,
+                                  RuntimePredictor, apply_runtime_predictor)
 from repro.core.preemption import Mechanism, select_mechanism  # noqa: F401
-from repro.core.scheduler import POLICY_NAMES, make_policy  # noqa: F401
+from repro.core.registry import Registry  # noqa: F401
+from repro.core.scheduler import POLICY_NAMES, Backfill, make_policy  # noqa: F401
 from repro.core.simulator import NPUSimulator, SimConfig  # noqa: F401
 from repro.core.task import Task, TaskState  # noqa: F401

@@ -35,6 +35,7 @@ for a fixed seed (tests/test_autoscaler.py).
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
@@ -71,6 +72,17 @@ class AutoscalerConfig:
     # only that pool, so a prefill and a decode autoscaler can run
     # side-by-side on one engine without fighting over capacity.
     pool_role: str = "any"
+    # Predictive lookahead (sim-seconds).  0 = reactive only (the
+    # historical behavior, bit-identical).  > 0 sizes the fleet from
+    # *predicted arriving work*: each submit contributes its task's
+    # predicted runtime (``attach(layer, tasks=...)`` supplies the
+    # predictions), a double-exponential smoother over the work-arrival
+    # stream extrapolates the rate ``lookahead`` seconds ahead, and the
+    # fleet is driven toward ``ceil(forecast / target_util)`` devices —
+    # provisioning ahead of a diurnal ramp instead of after the backlog
+    # builds.
+    lookahead: float = 0.0
+    target_util: float = 0.75
 
     def __post_init__(self):
         if self.min_devices < 1:
@@ -81,6 +93,10 @@ class AutoscalerConfig:
             raise ValueError("low_watermark must be in [0, 1)")
         if self.pool_role not in ("any", "prefill", "decode"):
             raise ValueError(f"unknown pool_role {self.pool_role!r}")
+        if self.lookahead < 0.0:
+            raise ValueError("lookahead must be >= 0")
+        if not 0.0 < self.target_util <= 1.0:
+            raise ValueError("target_util must be in (0, 1]")
 
 
 class Autoscaler:
@@ -109,13 +125,23 @@ class Autoscaler:
         self._last_t = 0.0
         self._last_action = None   # None until the first action
         self._in_decision = False
+        self._pred: Dict[int, float] = {}       # tid -> predicted runtime
+        self._pred_mean = 0.0
+        self._arrivals: Deque[Tuple[float, float]] = deque()
 
     # -- wiring --------------------------------------------------------
-    def attach(self, layer) -> "Autoscaler":
+    def attach(self, layer, tasks=None) -> "Autoscaler":
         """Subscribe to ``layer.events``; the layer must expose
         ``add_device``/``remove_device`` and ``cluster`` (the shared
-        ``core.cluster.Cluster`` bookkeeping)."""
+        ``core.cluster.Cluster`` bookkeeping).  ``tasks`` supplies the
+        offered task list so lookahead mode knows each submission's
+        predicted runtime (events carry only tids); unknown tids fall
+        back to the mean of the known predictions."""
         self.layer = layer
+        if tasks is not None:
+            self._pred = {t.tid: float(t.predicted_total) for t in tasks}
+        self._pred_mean = (sum(self._pred.values()) / len(self._pred)
+                           if self._pred else 0.0)
         layer.events.subscribe("*", self._on_event)
         return self
 
@@ -135,6 +161,7 @@ class Autoscaler:
         self._backlog = 0
         self._last_t = 0.0
         self._last_action = None
+        self._arrivals.clear()
 
     @property
     def n_scale_events(self) -> int:
@@ -167,6 +194,9 @@ class Autoscaler:
         if ev.kind == "submit":
             self._backlog += 1
             self._submit_t[ev.tid] = ev.t
+            if self.cfg.lookahead > 0.0:
+                self._arrivals.append(
+                    (ev.t, self._pred.get(ev.tid, self._pred_mean)))
         elif ev.kind == "dispatch":
             self._backlog -= 1
         elif ev.kind == "preempt":
@@ -198,6 +228,12 @@ class Autoscaler:
             self._area -= d0 * (self._samples[0][0] - t0)
         while self._completions and self._completions[0][0] <= horizon:
             self._completions.popleft()
+        # the forecast kernel decays exponentially with time constant
+        # ``window``: arrivals older than 4 windows contribute < 2 % and
+        # can be dropped without visibly moving the estimate
+        arr_horizon = now - 4.0 * self.cfg.window
+        while self._arrivals and self._arrivals[0][0] <= arr_horizon:
+            self._arrivals.popleft()
 
     def _avg_depth(self, now: float) -> float:
         """Time-weighted mean queue depth over the sliding window, from
@@ -225,6 +261,30 @@ class Autoscaler:
             return False
         ok = sum(1 for _, met in self._completions if met)
         return ok / len(self._completions) < self.cfg.sla_target
+
+    def _forecast_work(self, now: float) -> float:
+        """Predicted work-arrival rate (device-equivalents of predicted
+        seconds per second) ``lookahead`` seconds ahead.  Two exponential
+        kernels over the predicted-cost arrival stream — a fast one
+        (``window / 2``) and a slow one (``window``) — give smoothed rate
+        estimates at two effective ages; their difference over the age
+        gap is the trend, extrapolated ``lookahead`` seconds past the
+        fast kernel's lag.  On a diurnal ramp the fast estimate leads the
+        slow one and the forecast leads both; per-task cost variance,
+        which a boxcar split-half slope amplifies into capacity churn, is
+        damped by the exponential weighting."""
+        tau_f = self.cfg.window / 2.0
+        tau_s = self.cfg.window
+        if tau_f <= 0.0:
+            return 0.0
+        r_f = r_s = 0.0
+        for t, c in self._arrivals:
+            if t > now:
+                continue
+            r_f += (c / tau_f) * math.exp(-(now - t) / tau_f)
+            r_s += (c / tau_s) * math.exp(-(now - t) / tau_s)
+        trend = (r_f - r_s) / (tau_s - tau_f)
+        return max(0.0, r_f + trend * (self.cfg.lookahead + tau_f))
 
     # -- decisions ------------------------------------------------------
     def _pool_alive(self) -> int:
@@ -260,6 +320,9 @@ class Autoscaler:
         cfg = self.cfg
         if self._last_action is not None and now - self._last_action < cfg.cooldown:
             return
+        if cfg.lookahead > 0.0:
+            self._decide_lookahead(now)
+            return
         n_alive = self._pool_alive()
         depth = self._avg_depth(now)
         up_thr = cfg.target_queue_per_device * n_alive
@@ -273,6 +336,39 @@ class Autoscaler:
             and not self._sla_bad()
             and n_alive > cfg.min_devices
         ):
+            dev = self._drain_candidate()
+            if dev is not None:
+                self.layer.remove_device(dev)
+                self.decisions.append((now, "down", dev))
+                self._last_action = now
+
+    def _decide_lookahead(self, now: float) -> None:
+        """Forecast-driven sizing: scale toward ``ceil(forecast /
+        target_util)`` devices (with a 0.1-device deadband so a forecast
+        hovering at a capacity boundary does not thrash), keeping only an
+        emergency depth trigger — backlog past twice the up-threshold —
+        as the backstop for forecast misses.  Scale-down releases
+        capacity as soon as the forecast says it is surplus (the queue
+        must merely be under the up-threshold, not drained) —
+        anticipating the diurnal down-ramp is where the device-second
+        savings come from.  Every avoided up/down cycle also avoids
+        paying ``provision_latency`` in dead capacity-seconds, so the
+        decision rule is deliberately less trigger-happy than the
+        reactive path."""
+        cfg = self.cfg
+        n_alive = self._pool_alive()
+        depth = self._avg_depth(now)
+        up_thr = cfg.target_queue_per_device * n_alive
+        raw = self._forecast_work(now) / cfg.target_util
+        n_target = min(cfg.max_devices, max(cfg.min_devices, math.ceil(raw - 0.1)))
+        emergency = depth > 2.0 * up_thr
+        if (n_target > n_alive or emergency) and n_alive < cfg.max_devices:
+            want = max(n_target - n_alive, cfg.scale_step if emergency else 1)
+            for _ in range(min(want, cfg.max_devices - n_alive)):
+                dev = self._add_device()
+                self.decisions.append((now, "up", dev))
+            self._last_action = now
+        elif n_target < n_alive and depth <= up_thr and n_alive > cfg.min_devices:
             dev = self._drain_candidate()
             if dev is not None:
                 self.layer.remove_device(dev)

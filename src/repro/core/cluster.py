@@ -98,6 +98,7 @@ from repro.core.faults import FaultInjector
 from repro.core.predictor import relative_speed
 from repro.core.preemption import Mechanism
 from repro.core.ready_queue import make_ready
+from repro.core.registry import Registry
 from repro.core.scheduler import Policy
 from repro.core.simulator import SimConfig, tile_roundup
 from repro.core.task import Task, TaskState
@@ -276,21 +277,16 @@ def place_random(task: Task, free: List[DeviceState],
     return free[int(rng.integers(len(free)))]
 
 
-_PLACEMENTS = {
-    "least_loaded": place_least_loaded,
-    "affinity": place_affinity,
-    "speed_aware": place_speed_aware,
-    "random": place_random,
-}
+_REGISTRY = Registry("placement")
+_REGISTRY.register("least_loaded", place_least_loaded)
+_REGISTRY.register("affinity", place_affinity)
+_REGISTRY.register("speed_aware", place_speed_aware)
+_REGISTRY.register("random", place_random)
 
 
 def make_placement(name: str):
     """Look up a placement function by name (``PLACEMENT_NAMES``)."""
-    try:
-        return _PLACEMENTS[name.lower()]
-    except KeyError:
-        raise KeyError(f"unknown placement {name!r}; "
-                       f"choose from {PLACEMENT_NAMES}") from None
+    return _REGISTRY.get(name)
 
 
 class Cluster:

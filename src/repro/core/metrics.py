@@ -214,6 +214,54 @@ def summarize(tasks: Sequence[Task]) -> Dict[str, float]:
     return out
 
 
+def prediction_errors(tasks: Sequence[Task]) -> np.ndarray:
+    """Per-task signed relative runtime-prediction error over the
+    completed subset: ``(predicted_total - isolated_time) /
+    isolated_time``.  Positive = over-prediction.  Tasks with
+    non-finite predictions or non-positive actual runtimes are dropped
+    (degenerate inputs yield a shorter array, never a crash)."""
+    done = completed(tasks)
+    pred = np.asarray([t.predicted_total for t in done], dtype=float)
+    iso = np.asarray([t.isolated_time for t in done], dtype=float)
+    if not done:
+        return np.empty(0)
+    ok = np.isfinite(pred) & np.isfinite(iso) & (iso > 0.0)
+    return (pred[ok] - iso[ok]) / iso[ok]
+
+
+def _pred_stats(tasks: Sequence[Task]) -> Dict[str, float]:
+    err = prediction_errors(tasks)
+    n = err.size
+    ape = np.abs(err)
+    return {"pred_n": float(n),
+            "pred_mape": float(np.mean(ape)) if n else float("nan"),
+            "pred_bias": float(np.mean(err)) if n else float("nan"),
+            "pred_p95_ape": (float(np.percentile(ape, 95.0)) if n
+                             else float("nan"))}
+
+
+def prediction_error_summary(tasks: Sequence[Task]
+                             ) -> Dict[str, object]:
+    """Predicted-vs-actual runtime calibration over a run's task set.
+
+    Flat keys: ``pred_n`` (tasks with a usable prediction/actual pair),
+    ``pred_mape`` (mean absolute relative error), ``pred_bias`` (mean
+    signed relative error — positive means the predictor over-estimates),
+    ``pred_p95_ape`` (tail miss).  ``per_model`` nests the same stats per
+    model name — the calibration view that shows *which* network the
+    predictor misjudges.  Empty or all-degenerate inputs (no completions,
+    NaN predictions, zero actual runtimes) return NaN stats, never raise
+    — the same hardening convention as :func:`summarize`.
+    """
+    out: Dict[str, object] = dict(_pred_stats(tasks))
+    groups: Dict[str, List[Task]] = {}
+    for t in completed(tasks):
+        groups.setdefault(t.model, []).append(t)
+    out["per_model"] = {m: _pred_stats(ts)
+                        for m, ts in sorted(groups.items())}
+    return out
+
+
 def aggregate(runs: Iterable[Dict[str, float]]) -> Dict[str, float]:
     """Average metric dicts across simulation runs."""
     runs = list(runs)

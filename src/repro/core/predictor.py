@@ -235,3 +235,159 @@ class Predictor:
         times = per_node_times(ops, self.hw, self.acc)
         return Prediction(total_time=float(times.sum()), node_times=times,
                           n_static=len(net.static_ops), unroll=unroll)
+
+
+# ==========================================================================
+# Runtime predictors — the pluggable task-level prediction API
+# ==========================================================================
+# Every predictive controller (SJF/PREMA selection, predicted-cost
+# admission, lookahead autoscaling, backfill) consumes one number per
+# task: its predicted isolated runtime, carried as ``Task.predicted_total``.
+# A :class:`RuntimePredictor` produces that number; installing one is a
+# *pre-run rewrite* of ``predicted_total`` (:func:`apply_runtime_predictor`)
+# so the hot scheduling loops never change and an exact predictor is
+# bit-identical to not installing one at all.
+
+class RuntimePredictor:
+    """Protocol for task-level runtime prediction.
+
+    Implementations provide ``name`` and :meth:`predict_runtime`; they
+    never mutate the task.  Install via :func:`apply_runtime_predictor`.
+    """
+
+    name: str = "base"
+
+    def predict_runtime(self, task) -> float:
+        """Predicted isolated runtime of ``task`` in reference-hardware
+        seconds."""
+        raise NotImplementedError
+
+
+class AnalyticalRuntime(RuntimePredictor):
+    """The paper's Algorithm-1 prediction, as already baked into the
+    task at trace-generation time — the exact-prediction identity
+    predictor (applying it is a no-op by construction)."""
+
+    name = "analytical"
+
+    def predict_runtime(self, task) -> float:
+        """Return the task's existing Algorithm-1 ``predicted_total``."""
+        return float(task.predicted_total)
+
+
+class FittedPredictor(RuntimePredictor):
+    """Ridge regression over executed-trace features (deterministic fit).
+
+    Learns ``log(isolated_time)`` from the features available *before* a
+    task runs: model name and tenant (one-hot over the training vocab,
+    all-zero for unseen categories), ``log1p(batch)``, ``log1p(in_len)``,
+    and the device relative speed (an optional per-task callable; 1.0 for
+    homogeneous fleets).  The fit is closed-form normal equations
+    (``(XᵀX + λI) w = Xᵀy``) so identical training sets give bit-identical
+    weights — no iterative optimizer, no RNG.
+    """
+
+    name = "fitted"
+
+    def __init__(self, l2: float = 1e-3):
+        self.l2 = float(l2)
+        self._w: Optional[np.ndarray] = None
+        self._models: List[str] = []
+        self._tenants: List[str] = []
+
+    # -- feature layout: [1, log1p(batch), log1p(in_len), speed,
+    #                     one-hot(model), one-hot(tenant)]
+    def _features(self, task, speed: float) -> np.ndarray:
+        x = np.zeros(4 + len(self._models) + len(self._tenants))
+        x[0] = 1.0
+        x[1] = math.log1p(float(task.batch))
+        x[2] = math.log1p(float(task.in_len))
+        x[3] = float(speed)
+        if task.model in self._models:
+            x[4 + self._models.index(task.model)] = 1.0
+        tenant = task.tenant if task.tenant is not None else "-"
+        if tenant in self._tenants:
+            x[4 + len(self._models) + self._tenants.index(tenant)] = 1.0
+        return x
+
+    def fit(self, tasks: Sequence,
+            speed_of=None) -> "FittedPredictor":
+        """Fit on executed tasks (positive ``isolated_time``).
+
+        ``speed_of`` maps a task to the relative speed of the device it
+        ran on (default 1.0 — homogeneous fleet).  Tasks with
+        non-positive or non-finite runtimes are skipped; an empty
+        training set raises ``ValueError``.
+        """
+        rows = [t for t in tasks
+                if math.isfinite(t.isolated_time) and t.isolated_time > 0.0]
+        if not rows:
+            raise ValueError("FittedPredictor.fit: no executed tasks with "
+                             "positive isolated_time")
+        self._models = sorted({t.model for t in rows})
+        self._tenants = sorted({t.tenant if t.tenant is not None else "-"
+                                for t in rows})
+        sp = speed_of if speed_of is not None else (lambda t: 1.0)
+        X = np.stack([self._features(t, sp(t)) for t in rows])
+        y = np.asarray([math.log(t.isolated_time) for t in rows])
+        a = X.T @ X + self.l2 * np.eye(X.shape[1])
+        self._w = np.linalg.solve(a, X.T @ y)
+        return self
+
+    def predict_runtime(self, task, speed: float = 1.0) -> float:
+        """``exp(x · w)`` over the task's features (``fit`` first)."""
+        if self._w is None:
+            raise RuntimeError("FittedPredictor not fitted")
+        return float(math.exp(self._features(task, speed) @ self._w))
+
+
+class NoisyPredictor(RuntimePredictor):
+    """Controlled-error wrapper: multiplies an inner predictor's output
+    by a deterministic per-task lognormal factor.
+
+    ``error`` is the log-space standard deviation of the factor; the
+    ``exp(σz − σ²/2)`` form keeps the *mean* prediction unbiased.  The
+    draw is seeded by ``(seed, task.tid)`` so it does not depend on call
+    order, and ``error=0`` short-circuits to the inner prediction
+    unchanged — the bit-identical zero-noise contract the parity tests
+    pin (tests/test_fastpath_parity.py).
+    """
+
+    name = "noisy"
+
+    def __init__(self, inner: RuntimePredictor, error: float = 0.0,
+                 seed: int = 0):
+        if error < 0.0:
+            raise ValueError(f"error must be >= 0, got {error}")
+        self.inner = inner
+        self.error = float(error)
+        self.seed = int(seed)
+
+    def predict_runtime(self, task) -> float:
+        """Inner prediction, perturbed when ``error > 0``."""
+        base = self.inner.predict_runtime(task)
+        if self.error == 0.0:
+            return base
+        z = np.random.default_rng([self.seed, int(task.tid)])
+        factor = math.exp(self.error * z.standard_normal()
+                          - 0.5 * self.error * self.error)
+        return base * factor
+
+
+def apply_runtime_predictor(tasks: Sequence, rp: RuntimePredictor) -> list:
+    """Rewrite each fresh task's ``predicted_total`` with ``rp``'s view.
+
+    Call before handing the tasks to a simulator/engine run: every
+    predictive consumer (policy selection, admission, autoscaling,
+    backfill) reads ``predicted_total``/``predicted_remaining``, so one
+    rewrite retargets them all without touching the scheduling loops.
+    Tasks must not have started executing yet.  Returns ``tasks`` for
+    chaining.
+    """
+    out = list(tasks)
+    for t in out:
+        if t.executed:
+            raise ValueError(f"task {t.tid} already started; predictions "
+                             "must be installed before the run")
+        t.predicted_total = float(rp.predict_runtime(t))
+    return out

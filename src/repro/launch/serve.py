@@ -13,7 +13,7 @@ import jax
 import numpy as np
 
 from repro.models import get_model
-from repro.serving import InferenceRequest, ServingEngine
+from repro.serving import EngineConfig, InferenceRequest, ServingEngine
 
 
 def main():
@@ -35,9 +35,9 @@ def main():
     for name in args.archs:
         m = get_model(name, tiny=True)
         models[name] = (m, m.init_params(key))
-    engine = ServingEngine(models, policy=args.policy,
-                           preemptive=not args.non_preemptive,
-                           mechanism=args.mechanism)
+    engine = ServingEngine(models, cfg=EngineConfig(
+        policy=args.policy, preemptive=not args.non_preemptive,
+        mechanism=args.mechanism))
     for name in args.archs:
         engine.fit_length_regressor(name, [(6, 3), (8, 4), (12, 6), (16, 8)])
 

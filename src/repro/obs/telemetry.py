@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import metrics
@@ -62,11 +63,15 @@ _COUNT_KINDS = ("submit", "dispatch", "preempt", "complete", "drop",
 class _Window:
     __slots__ = ("counts", "kills", "queue_int", "busy_int", "delta_int",
                  "failed_int", "ntt_hist", "tat_hist", "ttft_hist",
-                 "per_tenant", "per_prio")
+                 "per_tenant", "per_prio", "pred_n", "pred_abs",
+                 "pred_signed")
 
     def __init__(self) -> None:
         self.counts = dict.fromkeys(_COUNT_KINDS, 0)
         self.kills = 0
+        self.pred_n = 0          # completions with a usable prediction
+        self.pred_abs = 0.0      # Σ |relative prediction error|
+        self.pred_signed = 0.0   # Σ signed relative prediction error
         self.queue_int = 0.0    # ∫ queue depth dt
         self.busy_int = 0.0     # ∫ running-device count dt
         self.delta_int = 0.0    # ∫ (alive fleet − baseline) dt
@@ -93,6 +98,7 @@ class Telemetry:
         #                                           first dispatch (TTFT)
         self._resident: Dict[int, int] = {}      # device -> running tid
         self._iso: Dict[int, Tuple[float, float]] = {}  # tid -> (iso, scale)
+        self._pred: Dict[int, float] = {}        # tid -> predicted runtime
         self._depth = 0
         self._busy = 0
         self._delta = 0          # alive-fleet change vs baseline
@@ -118,6 +124,9 @@ class Telemetry:
                 self._iso[t.tid] = (
                     t.isolated_time,
                     scale if scale is not None else metrics.DEFAULT_SLA_SCALE)
+                pred = getattr(t, "predicted_total", None)
+                if pred is not None:
+                    self._pred[t.tid] = float(pred)
         return self
 
     def detach(self) -> None:
@@ -240,6 +249,14 @@ class Telemetry:
             row[2] += ntt
             prow[1] += met
             prow[2] += ntt
+            pred = self._pred.get(ev.tid)
+            # degenerate pairs (NaN prediction, zero actual) are skipped,
+            # matching metrics.prediction_errors
+            if pred is not None and iso[0] > 0.0 and math.isfinite(pred):
+                err = (pred - iso[0]) / iso[0]
+                w.pred_n += 1
+                w.pred_abs += abs(err)
+                w.pred_signed += err
 
     # -- views ----------------------------------------------------------
     def _n_devices(self) -> int:
@@ -267,6 +284,9 @@ class Telemetry:
                 row[f"{name}_mean"] = h.mean()
                 for p in metrics.PERCENTILES:
                     row[f"{name}_p{p}"] = h.percentile(p)
+        if w.pred_n:
+            row["pred_mape"] = w.pred_abs / w.pred_n
+            row["pred_bias"] = w.pred_signed / w.pred_n
         def classed(rows):
             return {str(key): {
                 "n": r[0],

@@ -1,4 +1,4 @@
-from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
 from repro.serving.executor import ExecState, PreemptibleExecutor  # noqa: F401
 from repro.serving.kv_cache import KVCacheManager  # noqa: F401
 from repro.serving.request import InferenceRequest, RequestResult  # noqa: F401

@@ -37,14 +37,15 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import warnings
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core import arch_ops, metrics, preemption
 from repro.core import events as events_mod
-from repro.core.arbiter import Action, Arbiter, ArbiterConfig
-from repro.core.cluster import Cluster, role_accepts
+from repro.core.arbiter import Action, Arbiter
+from repro.core.cluster import Cluster, ClusterConfig, role_accepts
 from repro.core.predictor import (LengthRegressor, Predictor,
                                   network_time)
 from repro.core.preemption import Mechanism
@@ -55,6 +56,46 @@ from repro.models.registry import Model
 from repro.serving.executor import ExecState, PreemptibleExecutor
 from repro.serving.kv_cache import KVCacheManager
 from repro.serving.request import InferenceRequest, RequestResult
+
+
+@dataclasses.dataclass
+class EngineConfig(ClusterConfig):
+    """Everything a :class:`ServingEngine` is configured by, as one
+    config object — the top of the ``SimConfig`` → ``ClusterConfig`` →
+    ``EngineConfig`` hierarchy.
+
+    Inherits the scheduling knobs (``mechanism``, ``admission``,
+    ``kill_early_frac``/``max_kills``) and the cluster knobs
+    (``n_devices``, ``placement``, ``device_hw``, ``provision_latency``)
+    and adds the serving-only ones below.  Construct engines as
+    ``ServingEngine(models, cfg=EngineConfig(...))``; the historical
+    flat-kwarg constructor still works through a deprecation shim that
+    forwards into this config (bit-identical — pinned by
+    tests/test_engine_config.py).
+    """
+
+    hw: HardwareModel = TPU_V5E
+    policy: Union[str, Policy] = "prema"
+    # None = the policy's own flag (string policies default preemptive).
+    preemptive: Optional[bool] = None
+    kv_capacity_bytes: Optional[int] = None
+    straggler_factor: Optional[Callable[[int, int], float]] = None
+    execute: bool = True
+    batch_slots: int = 1
+    chunked_prefill: bool = True
+    device_roles: Optional[List[str]] = None
+    batch_overhead: float = 0.15
+
+
+_UNSET = object()          # marks legacy kwargs the caller actually passed
+
+# Legacy flat-kwarg constructor parameters, in their historical
+# positional order; each maps 1:1 onto an EngineConfig field.
+_LEGACY_KWARGS = (
+    "hw", "policy", "preemptive", "mechanism", "kv_capacity_bytes",
+    "straggler_factor", "execute", "n_devices", "placement", "admission",
+    "device_hw", "provision_latency", "batch_slots", "chunked_prefill",
+    "device_roles", "batch_overhead")
 
 
 @dataclasses.dataclass
@@ -101,23 +142,28 @@ class _ReadyJobs:
 class ServingEngine:
     def __init__(self,
                  models: Dict[str, Tuple[Model, dict]],
-                 hw: HardwareModel = TPU_V5E,
-                 policy: Union[str, Policy] = "prema",
-                 preemptive: Optional[bool] = None,
-                 mechanism: str = "dynamic",
-                 kv_capacity_bytes: Optional[int] = None,
-                 straggler_factor: Optional[Callable[[int, int], float]] = None,
-                 execute: bool = True,
-                 n_devices: int = 1,
-                 placement: str = "least_loaded",
-                 admission=None,
-                 device_hw: Optional[List[HardwareModel]] = None,
-                 provision_latency: float = 0.0,
-                 batch_slots: int = 1,
-                 chunked_prefill: bool = True,
-                 device_roles: Optional[List[str]] = None,
-                 batch_overhead: float = 0.15):
-        """``models``: name → (Model, params).  ``policy`` is a name or a
+                 hw=_UNSET,
+                 policy=_UNSET,
+                 preemptive=_UNSET,
+                 mechanism=_UNSET,
+                 kv_capacity_bytes=_UNSET,
+                 straggler_factor=_UNSET,
+                 execute=_UNSET,
+                 n_devices=_UNSET,
+                 placement=_UNSET,
+                 admission=_UNSET,
+                 device_hw=_UNSET,
+                 provision_latency=_UNSET,
+                 batch_slots=_UNSET,
+                 chunked_prefill=_UNSET,
+                 device_roles=_UNSET,
+                 batch_overhead=_UNSET,
+                 cfg: Optional[EngineConfig] = None):
+        """``models``: name → (Model, params).  ``cfg`` carries every
+        other knob (:class:`EngineConfig`); the flat kwargs are the
+        deprecated pre-config constructor — still honored, forwarded
+        into an ``EngineConfig`` with a ``DeprecationWarning``, and
+        mutually exclusive with ``cfg``.  ``policy`` is a name or a
         :class:`Policy` instance; ``preemptive`` overrides the policy's
         flag when given (string policies default to preemptive).
         ``execute=False`` runs the engine in pure virtual-time mode (no
@@ -149,6 +195,32 @@ class ServingEngine:
         residents costs ``(1 + batch_overhead*(B-1)) * max(step_i)``).
         The default single-slot configuration is bit-identical to the
         non-batched loop (tests/test_fastpath_parity.py)."""
+        passed = {name: value for name, value in zip(_LEGACY_KWARGS, (
+            hw, policy, preemptive, mechanism, kv_capacity_bytes,
+            straggler_factor, execute, n_devices, placement, admission,
+            device_hw, provision_latency, batch_slots, chunked_prefill,
+            device_roles, batch_overhead)) if value is not _UNSET}
+        if passed:
+            if cfg is not None:
+                raise TypeError(
+                    "pass either cfg=EngineConfig(...) or the deprecated "
+                    f"flat kwargs, not both: {sorted(passed)}")
+            warnings.warn(
+                f"ServingEngine({', '.join(sorted(passed))}) flat kwargs "
+                "are deprecated; pass cfg=EngineConfig(...) instead",
+                DeprecationWarning, stacklevel=2)
+            cfg = EngineConfig(**passed)
+        elif cfg is None:
+            cfg = EngineConfig()
+        self.cfg = cfg
+        hw, policy, preemptive = cfg.hw, cfg.policy, cfg.preemptive
+        mechanism, admission = cfg.mechanism, cfg.admission
+        kv_capacity_bytes = cfg.kv_capacity_bytes
+        straggler_factor, execute = cfg.straggler_factor, cfg.execute
+        n_devices, placement = cfg.n_devices, cfg.placement
+        device_hw, provision_latency = cfg.device_hw, cfg.provision_latency
+        batch_slots, chunked_prefill = cfg.batch_slots, cfg.chunked_prefill
+        device_roles, batch_overhead = cfg.device_roles, cfg.batch_overhead
         self.hw = hw
         if isinstance(policy, Policy):
             self.policy = policy
@@ -158,7 +230,7 @@ class ServingEngine:
             self.policy = make_policy(
                 policy, preemptive=True if preemptive is None else preemptive)
         self.mechanism = mechanism
-        self.arbiter = Arbiter(self.policy, ArbiterConfig(mechanism=mechanism))
+        self.arbiter = Arbiter(self.policy, cfg.arbiter_config())
         self.admission = admission
         self.placement = placement
         self.device_hw = list(device_hw) if device_hw else None

@@ -75,7 +75,8 @@ Determinism guarantees
 """
 from repro.workloads.admission import (ADMISSION_NAMES,  # noqa: F401
                                        AdmissionPolicy, AdmitAll,
-                                       PriorityShed, QueueShed, TokenBucket,
+                                       PredictedCostBucket, PriorityShed,
+                                       QueueShed, TokenBucket,
                                        make_admission)
 from repro.workloads.arrivals import (ARRIVAL_NAMES, ArrivalProcess,  # noqa: F401
                                       ClosedLoop, ClosedLoopDriver, Diurnal,

@@ -23,6 +23,13 @@ Policies
                    admit only priority >= ``min_priority`` (protects the
                    interactive class while the queue is congested); at
                    ``hard_depth`` shed everything.
+``predicted_cost`` token bucket denominated in *predicted seconds of
+                   work* instead of request count: each admission spends
+                   the task's ``predicted_total``, so one long batch job
+                   costs what it is predicted to cost and cheap
+                   interactive requests are not rationed like expensive
+                   ones.  This is the predictor-driven admission
+                   controller (see ``core/predictor.py``).
 
 All policies are deterministic functions of (task, now, queue_depth) and
 their own state, so admission decisions replay bit-identically with the
@@ -33,10 +40,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Tuple
 
+from repro.core.registry import Registry
 from repro.core.task import Task
 
 ADMISSION_NAMES = ("admit_all", "token_bucket", "queue_shed",
-                   "priority_shed")
+                   "priority_shed", "predicted_cost")
 
 
 class AdmissionPolicy:
@@ -143,18 +151,61 @@ class PriorityShed(AdmissionPolicy):
         return task.priority >= self.min_priority
 
 
-_POLICIES = {
-    "admit_all": AdmitAll,
-    "token_bucket": TokenBucket,
-    "queue_shed": QueueShed,
-    "priority_shed": PriorityShed,
-}
+@dataclasses.dataclass
+class PredictedCostBucket(AdmissionPolicy):
+    """Predicted-work token bucket: ``rate`` predicted-seconds of work
+    admitted per second, ``burst`` predicted-seconds of capacity.
+
+    Where :class:`TokenBucket` spends one token per request regardless of
+    size, this bucket spends the task's *predicted runtime*
+    (``Task.predicted_total``): sizing ``rate`` at the fleet's service
+    capacity admits exactly the work the devices can absorb, whatever mix
+    of long and short requests arrives.  Admission quality therefore
+    tracks predictor quality — the sensitivity
+    ``benchmarks/predictor_sweep.py`` sweeps.  Buckets start full; tasks
+    without a tenant share the ``"-"`` bucket.
+    """
+    rate: float
+    burst: float = 1.0
+    per_tenant: bool = True
+    name = "predicted_cost"
+
+    def __post_init__(self):
+        if self.rate <= 0:
+            raise ValueError("predicted_cost rate must be > 0")
+        if self.burst <= 0:
+            raise ValueError("predicted_cost burst must be > 0")
+        self._levels: Dict[str, Tuple[float, float]] = {}
+
+    def reset(self):
+        self._levels = {}
+
+    def _key(self, task: Task) -> str:
+        if not self.per_tenant:
+            return "-"
+        return task.tenant if task.tenant is not None else "-"
+
+    def admit(self, task, now, queue_depth):
+        key = self._key(task)
+        level, last = self._levels.get(key, (float(self.burst), now))
+        level = min(float(self.burst),
+                    level + self.rate * max(0.0, now - last))
+        cost = max(0.0, float(task.predicted_total))
+        ok = level >= cost
+        if ok:
+            level -= cost
+        self._levels[key] = (level, now)
+        return ok
+
+
+_REGISTRY = Registry("admission policy")
+_REGISTRY.register("admit_all", AdmitAll)
+_REGISTRY.register("token_bucket", TokenBucket)
+_REGISTRY.register("queue_shed", QueueShed)
+_REGISTRY.register("priority_shed", PriorityShed)
+_REGISTRY.register("predicted_cost", PredictedCostBucket)
 
 
 def make_admission(name: str, **kwargs) -> AdmissionPolicy:
-    try:
-        cls = _POLICIES[name.lower()]
-    except KeyError:
-        raise KeyError(f"unknown admission policy {name!r}; "
-                       f"choose from {ADMISSION_NAMES}") from None
-    return cls(**kwargs)
+    """Instantiate an admission policy by name (``ADMISSION_NAMES``)."""
+    return _REGISTRY.make(name, **kwargs)

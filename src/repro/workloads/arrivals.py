@@ -34,6 +34,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.core.registry import Registry
+
 
 class ArrivalProcess:
     """Base: ``sample`` returns one arrival time per service-time entry."""
@@ -314,21 +316,15 @@ class ClosedLoopDriver:
             bus.unsubscribe("drop", settled)
 
 
-_PROCESSES = {
-    "uniform_window": UniformWindow,
-    "poisson": Poisson,
-    "mmpp": MMPP,
-    "diurnal": Diurnal,
-    "closed_loop": ClosedLoop,
-}
+_REGISTRY = Registry("arrival process")
+_REGISTRY.register("uniform_window", UniformWindow)
+_REGISTRY.register("poisson", Poisson)
+_REGISTRY.register("mmpp", MMPP)
+_REGISTRY.register("diurnal", Diurnal)
+_REGISTRY.register("closed_loop", ClosedLoop)
 
-ARRIVAL_NAMES = tuple(_PROCESSES)
+ARRIVAL_NAMES = _REGISTRY.names
 
 
 def make_arrival(name: str, **kwargs) -> ArrivalProcess:
-    try:
-        cls = _PROCESSES[name.lower()]
-    except KeyError:
-        raise KeyError(f"unknown arrival process {name!r}; "
-                       f"choose from {ARRIVAL_NAMES}") from None
-    return cls(**kwargs)
+    return _REGISTRY.make(name, **kwargs)

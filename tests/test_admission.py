@@ -110,6 +110,7 @@ def test_make_admission_factory():
             "token_bucket": {"rate": 1.0},
             "queue_shed": {"max_depth": 4},
             "priority_shed": {"soft_depth": 4},
+            "predicted_cost": {"rate": 1.0},
         }[name]
         assert make_admission(name, **kwargs).name == name
     with pytest.raises(KeyError, match="unknown admission"):
@@ -206,14 +207,14 @@ def test_no_admission_is_a_no_op(paper_predictor):
 def test_engine_admission_accounting():
     jax = pytest.importorskip("jax")
     from repro.models import get_model
-    from repro.serving import InferenceRequest, ServingEngine
+    from repro.serving import EngineConfig, InferenceRequest, ServingEngine
 
     m = get_model("olmo-1b", tiny=True)
     eng = ServingEngine(
         {"olmo-1b": (m, m.init_params(jax.random.PRNGKey(0)))},
-        policy="fcfs",
-        execute=False,
-        admission=make_admission("queue_shed", max_depth=2),
+        cfg=EngineConfig(
+            policy="fcfs", execute=False, admission=make_admission("queue_shed", max_depth=2)
+        ),
     )
     reqs = [
         InferenceRequest(

@@ -155,14 +155,12 @@ def test_config_validation():
 def test_autoscaler_on_serving_engine():
     jax = pytest.importorskip("jax")
     from repro.models import get_model
-    from repro.serving import InferenceRequest, ServingEngine
+    from repro.serving import EngineConfig, InferenceRequest, ServingEngine
 
     m = get_model("olmo-1b", tiny=True)
     eng = ServingEngine(
         {"olmo-1b": (m, m.init_params(jax.random.PRNGKey(0)))},
-        policy="prema",
-        execute=False,
-        n_devices=1,
+        cfg=EngineConfig(policy="prema", execute=False, n_devices=1),
     )
     scaler = Autoscaler(
         AutoscalerConfig(

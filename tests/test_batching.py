@@ -213,11 +213,11 @@ def make_requests(seed, n, rate=2000.0):
 
 
 def make_engine(models, **kw):
-    from repro.serving import ServingEngine
+    from repro.serving import EngineConfig, ServingEngine
     base = dict(policy="prema", mechanism="dynamic", execute=False,
                 n_devices=2)
     base.update(kw)
-    return ServingEngine(models, **base)
+    return ServingEngine(models, cfg=EngineConfig(**base))
 
 
 def _fingerprint(results):

@@ -117,13 +117,12 @@ def test_every_lifecycle_event_present_and_ordered(trace):
 def test_engine_emits_same_event_stream_shape(trace):
     jax = pytest.importorskip("jax")
     from repro.models import get_model
-    from repro.serving import InferenceRequest, ServingEngine
+    from repro.serving import EngineConfig, InferenceRequest, ServingEngine
 
     m = get_model("olmo-1b", tiny=True)
     eng = ServingEngine(
         {"olmo-1b": (m, m.init_params(jax.random.PRNGKey(0)))},
-        policy="prema",
-        execute=False,
+        cfg=EngineConfig(policy="prema", execute=False),
     )
     reqs = [
         InferenceRequest(

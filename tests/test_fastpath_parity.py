@@ -151,6 +151,52 @@ def test_parity_with_non_firing_fault_injector(faults):
     assert_identical(results)
 
 
+def test_parity_with_exact_runtime_predictor():
+    """Installing a zero-noise RuntimePredictor rewrites every task's
+    ``predicted_total`` to the same float it already carried, so the run
+    must stay bit-identical to the frozen legacy core — the prediction
+    plumbing costs nothing when predictions are exact."""
+    from repro.core.predictor import (AnalyticalRuntime, NoisyPredictor,
+                                      apply_runtime_predictor)
+    w = random_workload(seed=67, n_tasks=30)
+    results = {}
+    for impl in ("fast", "legacy"):
+        tasks = [mk_task(i, p, a, t, e) for i, (p, a, t, e) in enumerate(w)]
+        cfg = ClusterConfig(n_devices=2, mechanism="dynamic",
+                            placement="least_loaded")
+        if impl == "fast":
+            apply_runtime_predictor(
+                tasks, NoisyPredictor(AnalyticalRuntime(), error=0.0))
+            sim = ClusterSimulator(PAPER_NPU, make_policy("prema", True), cfg)
+        else:
+            sim = LegacyClusterSimulator(PAPER_NPU, "prema", cfg,
+                                         preemptive=True)
+        done = sim.run(tasks)
+        results[impl] = (fingerprint(done), list(sim.events.log))
+    assert_identical(results)
+
+
+def test_backfill_without_gap_oracle_bit_identical_to_hpf():
+    """Backfill with no gap oracle installed degrades to exactly HPF —
+    same ordering key, no gap checks — so a full cluster run under each
+    policy must produce the same event log bit for bit."""
+    from repro.core.scheduler import Backfill
+    w = random_workload(seed=73, n_tasks=40)
+    results = {}
+    for impl in ("fast", "legacy"):
+        tasks = [mk_task(i, p, a, t, e) for i, (p, a, t, e) in enumerate(w)]
+        cfg = ClusterConfig(n_devices=2, mechanism="dynamic",
+                            placement="least_loaded")
+        if impl == "fast":
+            sim = ClusterSimulator(PAPER_NPU, Backfill(preemptive=True), cfg)
+        else:
+            sim = LegacyClusterSimulator(PAPER_NPU, "hpf", cfg,
+                                         preemptive=True)
+        done = sim.run(tasks)
+        results[impl] = (fingerprint(done), list(sim.events.log))
+    assert_identical(results)
+
+
 def test_engine_single_slot_config_bit_identical_to_default():
     """Continuous-batching parity guard: a ServingEngine constructed with
     the batching knobs at their single-slot defaults (``batch_slots=1``,
@@ -159,7 +205,7 @@ def test_engine_single_slot_config_bit_identical_to_default():
     engine that never heard of batching."""
     jax = pytest.importorskip("jax")
     from repro.models import get_model
-    from repro.serving import ServingEngine
+    from repro.serving import EngineConfig, ServingEngine
     from repro.serving.request import InferenceRequest
 
     m = get_model("olmo-1b", tiny=True)
@@ -177,8 +223,9 @@ def test_engine_single_slot_config_bit_identical_to_default():
             priority=int(rng.choice([1, 3, 9])), arrival=t))
 
     def run(**batching_kw):
-        eng = ServingEngine(models, policy="prema", mechanism="dynamic",
-                            execute=False, n_devices=2, **batching_kw)
+        eng = ServingEngine(models, cfg=EngineConfig(
+            policy="prema", mechanism="dynamic", execute=False,
+            n_devices=2, **batching_kw))
         res = eng.run(reqs)
         fp = sorted((r.rid, r.completion, r.first_token_time, r.n_tokens,
                      r.n_preemptions, r.n_kills, r.ckpt_overhead)

@@ -311,12 +311,12 @@ def test_fault_and_retry_events_spool_roundtrip(tmp_path):
 def test_engine_device_failure_and_recovery():
     jax = pytest.importorskip("jax")
     from repro.models import get_model
-    from repro.serving import InferenceRequest, ServingEngine
+    from repro.serving import EngineConfig, InferenceRequest, ServingEngine
 
     m = get_model("olmo-1b", tiny=True)
     eng = ServingEngine(
         {"olmo-1b": (m, m.init_params(jax.random.PRNGKey(0)))},
-        policy="prema", execute=False, n_devices=2)
+        cfg=EngineConfig(policy="prema", execute=False, n_devices=2))
     state = {"failed": False}
 
     def hook(ev):

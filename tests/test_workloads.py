@@ -163,7 +163,7 @@ def test_replay_identical_on_simulator_and_cluster(pred, tmp_path):
 def test_engine_accepts_and_replays_serving_trace(tmp_path):
     jax = pytest.importorskip("jax")
     from repro.models import get_model
-    from repro.serving import ServingEngine
+    from repro.serving import EngineConfig, ServingEngine
 
     m = get_model("olmo-1b", tiny=True)
     models = {"olmo-1b": (m, m.init_params(jax.random.PRNGKey(0)))}
@@ -178,8 +178,8 @@ def test_engine_accepts_and_replays_serving_trace(tmp_path):
     replay = Trace.load(str(path))
 
     def run(t):
-        eng = ServingEngine(models, policy="prema", mechanism="dynamic",
-                            execute=False)
+        eng = ServingEngine(models, cfg=EngineConfig(
+            policy="prema", mechanism="dynamic", execute=False))
         res = eng.run(t)
         return sorted((r.rid, r.completion, r.ttft, r.tenant) for r in res)
 
